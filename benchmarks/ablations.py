@@ -1,0 +1,32 @@
+"""SSV implementation-impact ablations: sequence encoding (bit packing) and the
+map-side combiner, measured on SUFFIX-sigma's exact byte/record counters."""
+from __future__ import annotations
+
+import time
+
+from repro.core import NGramConfig, run_job
+from repro.data import corpus as corpus_mod
+
+
+def run(n_tokens: int = 40_000):
+    toks = corpus_mod.zipf_corpus(n_tokens, corpus_mod.NYT, seed=3,
+                                  duplicate_frac=0.02)
+    rows = []
+    for pack in (True, False):
+        for combine in (True, False):
+            cfg = NGramConfig(sigma=5, tau=8, vocab_size=corpus_mod.NYT.vocab_size,
+                              pack=pack, combine=combine)
+            run_job(toks, cfg)                     # warm
+            t0 = time.perf_counter()
+            st = run_job(toks, cfg)
+            rows.append({
+                "pack": pack, "combine": combine,
+                "wall_s": time.perf_counter() - t0,
+                "records": int(st.counters["shuffle_records"]),
+                "bytes": int(st.counters["shuffle_bytes"]),
+                "ngrams": len(st),
+            })
+    base = next(r for r in rows if r["pack"] and r["combine"])
+    for r in rows:
+        r["bytes_x"] = round(r["bytes"] / base["bytes"], 2)
+    return rows

@@ -1,0 +1,88 @@
+"""Render the dry-run JSON results into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir dryrun_results]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from collections import defaultdict
+
+
+def load(directory: str):
+    recs = [json.load(open(f)) for f in sorted(glob.glob(f"{directory}/*.json"))]
+    return [r for r in recs]
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(recs, mesh: str) -> str:
+    rows = ["| arch | shape | kind | compute | memory | collective | bottleneck | "
+            "useful (6ND/HLO) | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"SKIPPED | — | — |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('kind','')} "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | **{rl['bottleneck']}** "
+            f"| {rl['useful_fraction']:.2f} | {rl['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def memory_table(recs, mesh: str) -> str:
+    rows = ["| arch | shape | args | temps | compile |", "|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        m = r["memory"]
+        rows.append(f"| {r['arch']} | {r['shape']} "
+                    f"| {m['argument_bytes']/2**30:.2f} GB "
+                    f"| {m['temp_bytes']/2**30:.2f} GB | {r['compile_s']}s |")
+    return "\n".join(rows)
+
+
+def summarize(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    by_bneck = defaultdict(list)
+    for r in ok:
+        if r["mesh"] == "16x16":
+            by_bneck[r["roofline"]["bottleneck"]].append(
+                (r["arch"], r["shape"], r["roofline"]["roofline_fraction"]))
+    return by_bneck
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun_results")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(table(recs, "16x16"))
+    print("\n## Multi-pod (2x16x16 = 512 chips) — compile proof + terms\n")
+    print(table(recs, "2x16x16"))
+    print("\n## Per-device memory (single-pod)\n")
+    print(memory_table(recs, "16x16"))
+    by = summarize(recs)
+    print("\n## Bottleneck census (single-pod)\n")
+    for k, v in sorted(by.items()):
+        worst = sorted(v, key=lambda t: t[2])[:3]
+        print(f"- **{k}**: {len(v)} cells; worst fractions: "
+              + ", ".join(f"{a}/{s} ({f:.3f})" for a, s, f in worst))
+
+
+if __name__ == "__main__":
+    main()

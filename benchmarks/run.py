@@ -1,0 +1,101 @@
+"""Benchmark harness: one entry per paper table/figure + kernel microbenches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's headline
+quantity) followed by the paper-claim validation block.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_kernels() -> None:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    terms = jnp.asarray(np.sort(rng.integers(0, 50, (20_000, 5)), axis=0))
+    toks = jnp.asarray(rng.integers(0, 300, 100_000).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, 2 ** 31, 100_000).astype(np.uint32))
+    valid = jnp.asarray(np.ones(100_000, bool))
+
+    for name, fn in (
+        ("kernel_lcp_boundary", lambda: ops.lcp_boundary(terms)),
+        ("kernel_suffix_pack", lambda: ops.suffix_pack(toks, sigma=5,
+                                                       vocab_size=300)),
+        ("kernel_hash_partition", lambda: ops.hash_partition(keys, valid,
+                                                             n_parts=64)),
+    ):
+        fn()  # compile (interpret mode on CPU)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = fn()
+        [x.block_until_ready() for x in (r if isinstance(r, tuple) else (r,))]
+        _csv(name, (time.perf_counter() - t0) / 3 * 1e6, "interpret-mode")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    n = 20_000 if args.quick else 60_000
+
+    from benchmarks import paper_figures as pf
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+
+    rows3 = pf.fig3_usecases(n)
+    for r in rows3:
+        if not np.isfinite(r.get("wall_s", float("nan"))):
+            _csv(f"fig3_{r['corpus']}_{r['case']}_{r['method']}", -1,
+                 r.get("note", "dnf"))
+        else:
+            _csv(f"fig3_{r['corpus']}_{r['case']}_{r['method']}",
+                 r["wall_s"] * 1e6, f"records={r['records']};bytes={r['bytes']}")
+
+    rows4 = pf.fig4_tau(n)
+    for r in rows4:
+        _csv(f"fig4_{r['corpus']}_tau{r['tau']}_{r['method']}", r["wall_s"] * 1e6,
+             f"records={r['records']};bytes={r['bytes']}")
+
+    rows5 = pf.fig5_sigma(max(n * 2 // 3, 10_000))
+    for r in rows5:
+        _csv(f"fig5_{r['corpus']}_sigma{r['sigma']}_{r['method']}",
+             r["wall_s"] * 1e6, f"records={r['records']};jobs={r['jobs']}")
+
+    rows6 = pf.fig6_scale(n)
+    for r in rows6:
+        _csv(f"fig6_frac{int(r['frac']*100)}_{r['method']}", r["wall_s"] * 1e6,
+             f"tokens={r['tokens']};records={r['records']}")
+
+    rows7 = pf.fig7_resources(n // 2)
+    for r in rows7:
+        _csv(f"fig7_R{r['R']}_{r['method']}", r["wall_s"] * 1e6,
+             f"ngrams={r['ngrams']}")
+
+    bench_kernels()
+
+    from benchmarks import ablations
+    for r in ablations.run(max(n // 2, 10_000)):
+        _csv(f"ablation_pack{int(r['pack'])}_combine{int(r['combine'])}",
+             r["wall_s"] * 1e6,
+             f"bytes={r['bytes']};bytes_x={r['bytes_x']};records={r['records']}")
+
+    print("\n# paper-claim validation")
+    for c in pf.validate_claims(rows4, rows5):
+        print("#", c)
+    print(f"# total bench time {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,383 @@
+"""Arch registry + cell builder: every (architecture x input-shape) pair becomes a
+``Cell`` that the dry-run lowers and compiles on the production mesh.
+
+Sharding policy (single place, applied per arch):
+  * LM params: FSDP over `data` (d_model dim), TP over `model` (head / ff / vocab
+    dims) -- Megatron + ZeRO-3 hybrid.  KV projections are replicated over `model`
+    when n_kv doesn't divide the axis (standard GQA-TP fallback).
+  * MoE experts: expert dim over `model` (EP).
+  * Batch: over ('pod', 'data') -- pod-level DP rides DCN.
+  * GNN: nodes + edges over `data`; model replicated (it is tiny).
+  * RecSys: embedding tables row-sharded over `model`; batch over ('pod', 'data').
+
+Non-divisible dims fall back to replication (``shard_if``) so every cell lowers on
+both the 16x16 and 2x16x16 meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------- registry
+_REGISTRY: dict[str, "ArchDef"] = {}
+
+
+@dataclass
+class ShapeDef:
+    name: str
+    kind: str                      # train | prefill | decode | forward | serve
+    dims: dict[str, int]
+    skip_reason: str | None = None
+
+
+@dataclass
+class ArchDef:
+    name: str
+    family: str                    # lm | gnn | recsys | ngram
+    make: Callable[[], Any]                    # full config object
+    make_reduced: Callable[[], Any]            # CPU-smoke config object
+    shapes: dict[str, ShapeDef]
+    build_cell: Callable[..., "Cell"]          # (arch_cfg, shape, mesh) -> Cell
+    notes: str = ""
+
+
+@dataclass
+class Cell:
+    """Everything the dry-run needs for one (arch x shape x mesh)."""
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: tuple                                # ShapeDtypeStructs / abstract pytrees
+    in_shardings: Any
+    out_shardings: Any = None                  # set to alias donated buffers
+    donate_argnums: tuple = ()
+    # scan-body probe for the cost_analysis trip-count correction (DESIGN.md SS5):
+    scan_probe: tuple | None = None            # (fn, args, in_shardings, extra_trips)
+    model_flops: float = 0.0
+    notes: str = ""
+
+
+def register(arch: ArchDef):
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get(name: str) -> ArchDef:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in all_archs() for s in _REGISTRY[a].shapes]
+
+
+# ------------------------------------------------------------------ shard helpers
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_if(mesh, dim_size: int, axis) -> str | tuple | None:
+    """Return the axis spec if dim_size is divisible by the axis extent, else None
+    (replicate)."""
+    names = axis if isinstance(axis, tuple) else (axis,)
+    extent = 1
+    for n in names:
+        if n not in mesh.axis_names:
+            return None
+        extent *= mesh.shape[n]
+    if dim_size % extent != 0:
+        return None
+    return axis
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------- LM sharding + specs
+def lm_param_pspecs(cfg, mesh):
+    """PartitionSpec pytree matching transformer.init_params structure."""
+    a = cfg.attn
+    dshard = shard_if(mesh, cfg.d_model, "data")
+    tp_q = shard_if(mesh, a.h_eff * a.d_head, "model")
+    tp_kv = shard_if(mesh, a.kv_eff, "model") and "model"  # replicate if kv % tp
+
+    if a.kind == "gqa":
+        attn = {
+            "wq": P(None, dshard, tp_q),
+            "wk": P(None, dshard, "model" if tp_kv else None),
+            "wv": P(None, dshard, "model" if tp_kv else None),
+            "wo": P(None, tp_q, dshard),
+        }
+    else:
+        qd = a.h_eff * (a.d_nope + a.d_rope)
+        od = a.h_eff * a.d_v
+        attn = {
+            "wdq": P(None, dshard, None),
+            "wuq": P(None, None, shard_if(mesh, qd, "model")),
+            "wdkv": P(None, dshard, None),
+            "wukv": P(None, None, shard_if(mesh, a.h_eff * (a.d_nope + a.d_v),
+                                           "model")),
+            "wkr": P(None, dshard, None),
+            "wo": P(None, shard_if(mesh, od, "model"), dshard),
+        }
+    if cfg.moe is not None:
+        # layouts match moe_ffn_sharded's shard_map in_specs exactly (no layer-
+        # entry resharding): EP when E divides tp, else per-expert ff TP
+        # (mixtral E=8 on tp=16 -- replicating experts would replicate the FLOPs
+        # 16x, measured in SSPerf H1).
+        m = cfg.moe
+        ep = shard_if(mesh, m.n_experts, "model")
+        # d_model dim additionally FSDP-sharded over `data` (ZeRO-3): the
+        # shard_map entry all-gathers it per layer, trading ~200 MB/layer of
+        # ICI for the 8 GB/device fp32 grad+moment blowup of resident expert
+        # weights (SSPerf H1 iter 3 -- measured).
+        if ep:
+            ffn = {"router": P(None, None, None),
+                   "wg": P(None, ep, dshard, None),
+                   "wu": P(None, ep, dshard, None),
+                   "wo": P(None, ep, None, dshard)}
+        else:
+            ff_ax = shard_if(mesh, m.d_ff_expert, "model")
+            ffn = {"router": P(None, None, None),
+                   "wg": P(None, None, dshard, ff_ax),
+                   "wu": P(None, None, dshard, ff_ax),
+                   "wo": P(None, None, ff_ax, dshard)}
+        if m.n_shared:
+            ffs = m.d_ff_shared or m.d_ff_expert * m.n_shared
+            ffn.update({"sg": P(None, None, shard_if(mesh, ffs, "model")),
+                        "su": P(None, None, shard_if(mesh, ffs, "model")),
+                        "so": P(None, shard_if(mesh, ffs, "model"), None)})
+    else:
+        ffn = {"wg": P(None, dshard, shard_if(mesh, cfg.d_ff, "model")),
+               "wu": P(None, dshard, shard_if(mesh, cfg.d_ff, "model")),
+               "wo": P(None, shard_if(mesh, cfg.d_ff, "model"), dshard)}
+    layers = {"ln1": P(None, None), "ln2": P(None, None), "ffn": ffn}
+    layers.update(attn)
+    return {
+        "embed": P(shard_if(mesh, cfg.vocab_size, "model"), dshard),
+        "layers": layers,
+        "final_norm": P(None),
+        "lm_head": P(dshard, shard_if(mesh, cfg.vocab_size, "model")),
+    }
+
+
+def layer_pspecs(full_pspecs):
+    """Drop the leading L axis of the stacked layer specs (for the body probe)."""
+    return jax.tree.map(lambda s: P(*s[1:]), full_pspecs["layers"],
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_pspecs(param_pspecs):
+    return {"m": param_pspecs, "v": param_pspecs, "step": P()}
+
+
+def lm_batch_pspec(mesh, batch: int):
+    dp = dp_axes(mesh)
+    b = shard_if(mesh, batch, dp if len(dp) > 1 else dp[0])
+    return P(b, None)
+
+
+def cache_pspecs(cfg, mesh, batch: int, t: int):
+    """Decode-cache sharding: batch over DP if divisible, else cache length over
+    `data` (context-parallel decode), else replicate."""
+    a = cfg.attn
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b_ax = shard_if(mesh, batch, dp)
+    t_ax = None if b_ax else shard_if(mesh, t, "data")
+    if a.kind == "mla":
+        return {"ckv": P(None, b_ax, t_ax, None), "kr": P(None, b_ax, t_ax, None)}
+    kv_ax = shard_if(mesh, a.kv_eff, "model") and "model"
+    return {"k": P(None, b_ax, t_ax, kv_ax, None),
+            "v": P(None, b_ax, t_ax, kv_ax, None)}
+
+
+def lm_model_flops(cfg, kind: str, batch: int, seq: int, cache: int = 0) -> float:
+    """Analytic MODEL_FLOPS: 6ND train / 2ND serve (+ attention terms)."""
+    a = cfg.attn
+    if a.kind == "gqa":
+        attn_p = cfg.d_model * (a.n_heads + 2 * a.n_kv) * a.d_head \
+                 + a.n_heads * a.d_head * cfg.d_model
+    else:
+        attn_p = (cfg.d_model * a.q_lora + a.q_lora * a.n_heads * (a.d_nope + a.d_rope)
+                  + cfg.d_model * a.kv_lora
+                  + a.kv_lora * a.n_heads * (a.d_nope + a.d_v)
+                  + cfg.d_model * a.d_rope + a.n_heads * a.d_v * cfg.d_model)
+    if cfg.moe is not None:
+        m = cfg.moe
+        ffn_p = m.top_k * 3 * cfg.d_model * m.d_ff_expert
+        if m.n_shared:
+            ffn_p += 3 * cfg.d_model * (m.d_ff_shared or m.d_ff_expert * m.n_shared)
+        ffn_p += cfg.d_model * m.n_experts
+    else:
+        ffn_p = 3 * cfg.d_model * cfg.d_ff
+    n_active = cfg.n_layers * (attn_p + ffn_p) + 2 * cfg.vocab_size * cfg.d_model
+    tokens = batch * seq
+    if kind == "train":
+        dense = 6 * n_active * tokens
+        # causal attention: fwd 4*H*dh*S^2/2 per layer per sequence; x3 for bwd
+        win = min(seq, a.window) if a.window else seq
+        attn = 12 * cfg.n_layers * a.n_heads * a.d_head * batch * seq * win / 2
+        return dense + attn
+    if kind == "prefill":
+        win = min(seq, a.window) if a.window else seq
+        return (2 * n_active * tokens
+                + 4 * cfg.n_layers * a.n_heads * a.d_head * batch * seq * win / 2)
+    if kind == "decode":
+        return (2 * n_active * batch
+                + 4 * cfg.n_layers * a.n_heads * a.d_head * batch * cache)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- LM cells
+def build_lm_cell(cfg, shape: ShapeDef, mesh) -> Cell:
+    from repro.models import transformer as tf
+    from repro.training.optimizer import OptimizerConfig, init_state
+    from repro.training.train_loop import make_train_step
+
+    b = shape.dims["global_batch"]
+    s = shape.dims["seq_len"]
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    act_axes = shard_if(mesh, b, dp)     # None when batch can't shard (e.g. B=1)
+    cfg = dataclasses.replace(cfg, shard_activations=act_axes)
+    if cfg.moe is not None:              # distributed MoE (shard_map sort dispatch)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, mesh=mesh, dp_axes=act_axes))
+    # transparent head padding when n_heads doesn't divide the tensor axis
+    # (phi3 / minicpm3: 40 heads on tp=16 -> 48, masked pads; SSPerf notes)
+    tp_size = mesh.shape.get("model", 1)
+    a = cfg.attn
+    if a.n_heads % tp_size:
+        g = a.n_heads // a.n_kv
+        import math
+        step_h = math.lcm(tp_size, g)
+        h_pad = -(-a.n_heads // step_h) * step_h
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(a, pad_heads_to=h_pad))
+    pspecs = lm_param_pspecs(cfg, mesh)
+    params_sh = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+    if shape.kind == "train":
+        from repro.training.train_loop import make_train_step_accum
+        opt_sh = jax.eval_shape(init_state, params_sh)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        # microbatch (lax.scan accumulation) so the remat carries
+        # ((b/dp) * s * d * 2B * L) fit HBM -- scan forces sequential buffer reuse
+        # where the unrolled variant measured NO reuse on XLA:CPU (SSPerf H1 it.3)
+        dp_size = 1
+        for a in dp_axes(mesh):
+            dp_size *= mesh.shape[a]
+        carry_bytes = (b // max(dp_size, 1)) * s * cfg.d_model * 2 * cfg.n_layers
+        n_micro = 1
+        while (carry_bytes / n_micro > 2 * 2 ** 30 and n_micro < 8
+               and (b // (n_micro * 2)) % dp_size == 0):
+            n_micro *= 2
+        if n_micro > 1:
+            step = make_train_step_accum(
+                lambda p, bt: tf.loss_fn(p, bt, cfg), OptimizerConfig(), n_micro)
+        else:
+            step = make_train_step(lambda p, bt: tf.loss_fn(p, bt, cfg),
+                                   OptimizerConfig())
+        bspec = {"tokens": lm_batch_pspec(mesh, b), "labels": lm_batch_pspec(mesh, b)}
+        in_sh = (named(mesh, pspecs), named(mesh, opt_pspecs(pspecs)),
+                 named(mesh, bspec))
+        probe = _lm_layer_probe(cfg, mesh, pspecs, b // n_micro, s, train=True)
+        # nested scans each counted once by cost_analysis: the full program holds
+        # one microbatch-scan whose body holds one layer-scan body -> add
+        # (n_micro * L - 1) layer-body costs
+        probe = probe[:3] + (n_micro * cfg.n_layers - 1,)
+        metric_sh = {k: NamedSharding(mesh, P()) for k in
+                     ("loss", "lr", "grad_norm")}
+        if n_micro == 1:
+            metric_sh.update(ce=NamedSharding(mesh, P()),
+                             aux=NamedSharding(mesh, P()))
+        out_sh = (in_sh[0], in_sh[1], metric_sh)   # alias donated params/opt
+        return Cell(cfg.name, shape.name, "train", step,
+                    (params_sh, opt_sh, batch_sds), in_sh, out_shardings=out_sh,
+                    donate_argnums=(0, 1), scan_probe=probe,
+                    model_flops=lm_model_flops(cfg, "train", b, s),
+                    notes=f"n_micro={n_micro}")
+
+    if shape.kind == "prefill":
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        fn = lambda p, t: tf.prefill(p, t, cfg, max_seq=s)
+        in_sh = (named(mesh, pspecs), named(mesh, lm_batch_pspec(mesh, b)))
+        probe = _lm_layer_probe(cfg, mesh, pspecs, b, s, train=False)
+        return Cell(cfg.name, shape.name, "prefill", fn, (params_sh, toks), in_sh,
+                    scan_probe=probe,
+                    model_flops=lm_model_flops(cfg, "prefill", b, s))
+
+    # decode: one new token against a cache of seq_len
+    t = tf.cache_len(cfg, s)
+    cache_sh = jax.eval_shape(lambda: tf.init_cache(cfg, b, s))
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    fn = lambda p, c, tk: tf.decode_step(p, c, tk, jnp.int32(s - 1), cfg)
+    cspec = cache_pspecs(cfg, mesh, b, t)
+    in_sh = (named(mesh, pspecs), named(mesh, cspec),
+             named(mesh, P(shard_if(mesh, b, dp_axes(mesh)
+                                    if len(dp_axes(mesh)) > 1 else "data"))))
+    # NOTE: forcing out_shardings here to alias the donated cache was measured to
+    # BACKFIRE (phi3 decode temp 31.6 -> 120 GB: GSPMD inserted full reshards of
+    # the updated cache to satisfy the pinned output layout) -- left unset, XLA
+    # picks the update-in-place layout.  SSPerf refuted-hypothesis log.
+    return Cell(cfg.name, shape.name, "decode", fn, (params_sh, cache_sh, tok),
+                in_sh, donate_argnums=(1,),
+                model_flops=lm_model_flops(cfg, "decode", b, s, cache=t))
+
+
+def _lm_layer_probe(cfg, mesh, pspecs, b, s, train: bool):
+    """Single-layer (scan body) cost probe: compiled separately, added (L-1)x."""
+    from repro.models import transformer as tf
+
+    one = dataclasses.replace(cfg, n_layers=1)
+    params_sh = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), one))
+    one_pspecs = lm_param_pspecs(one, mesh)
+    x = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                             cfg.dtype if hasattr(cfg, "dtype") else jnp.bfloat16)
+    xspec = P(lm_batch_pspec(mesh, b)[0], None, None)
+
+    if train:
+        def body_loss(layer_params, xin):
+            def f(lp, xi):
+                h, aux, _ = _apply_single_layer(lp, xi, one)
+                return jnp.sum(h.astype(jnp.float32)) + aux
+            if cfg.remat:  # match the rematerialized scan body's bwd recompute
+                f = jax.checkpoint(f)
+            return jax.grad(f)(layer_params, xin)
+        fn = body_loss
+    else:
+        def fwd(layer_params, xin):
+            h, aux, _ = _apply_single_layer(layer_params, xin, one)
+            return h
+        fn = fwd
+    in_sh = (named(mesh, one_pspecs["layers"]), NamedSharding(mesh, xspec))
+    layer_sh = params_sh["layers"]
+    return (fn, (layer_sh, x), in_sh, cfg.n_layers - 1)
+
+
+def _apply_single_layer(stacked_layer_params, x, cfg1):
+    from repro.models import transformer as tf
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    pl = jax.tree.map(lambda v: v[0], stacked_layer_params)
+    h, cache = tf._attn_block(pl, tf.rms_norm(x, pl["ln1"], cfg1.norm_eps),
+                              positions, cfg1, False)
+    x = x + h
+    h, aux = tf._ffn_block(pl, tf.rms_norm(x, pl["ln2"], cfg1.norm_eps), cfg1)
+    return x + h, aux, cache

@@ -1,0 +1,118 @@
+"""gin-tu [arXiv:1810.00826]: 5-layer GIN, d_hidden 64, sum aggregator,
+learnable eps.  Four graph regimes; message passing = segment_sum over the edge
+index (JAX sparse is BCOO-only -- the scatter IS the implementation).
+
+Sharding: edges over `data` (padded to mesh-divisible counts), node states
+replicated for the small graphs and psum-combined partial scatters for the large
+ones (GSPMD inserts the all-reduce)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.gnn import GINConfig, init_params, loss_fn
+from .base import ArchDef, Cell, ShapeDef, dp_axes, named, register, shard_if
+
+SHAPES = {
+    # Cora: full-batch node classification
+    "full_graph_sm": ShapeDef("full_graph_sm", "train",
+                              {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433,
+                               "n_classes": 7}),
+    # Reddit with layer sampling, fanout 15-10 from 1024 seeds
+    "minibatch_lg": ShapeDef("minibatch_lg", "train",
+                             {"n_nodes": 232_965, "n_edges": 114_615_892,
+                              "batch_nodes": 1024, "fanout": (15, 10),
+                              "d_feat": 602, "n_classes": 41}),
+    # ogbn-products full batch
+    "ogb_products": ShapeDef("ogb_products", "train",
+                             {"n_nodes": 2_449_029, "n_edges": 61_859_140,
+                              "d_feat": 100, "n_classes": 47}),
+    # batched small molecules
+    "molecule": ShapeDef("molecule", "train",
+                         {"n_nodes": 30, "n_edges": 64, "batch": 128,
+                          "d_feat": 16, "n_classes": 2}),
+}
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def sampled_sizes(dims) -> tuple[int, int]:
+    """(n_sub_nodes, n_sub_edges) of the layer-sampled subgraph."""
+    n = dims["batch_nodes"]
+    nodes, edges = n, 0
+    frontier = n
+    for fo in dims["fanout"]:
+        edges += frontier * fo
+        frontier *= fo
+        nodes += frontier
+    return nodes, edges
+
+
+def build_cell(cfg_factory, shape: ShapeDef, mesh) -> Cell:
+    from repro.training.optimizer import OptimizerConfig, init_state
+    from repro.training.train_loop import make_train_step
+
+    d = shape.dims
+    mult = 1
+    for a in dp_axes(mesh):
+        mult *= mesh.shape[a]
+    mult = max(mult, 16) * 16  # divisible on both meshes
+
+    if shape.name == "minibatch_lg":
+        n_nodes, n_edges = sampled_sizes(d)
+    elif shape.name == "molecule":
+        n_nodes, n_edges = d["n_nodes"] * d["batch"], d["n_edges"] * d["batch"]
+    else:
+        n_nodes, n_edges = d["n_nodes"], d["n_edges"]
+    n_nodes_p, n_edges_p = _pad_to(n_nodes, mult), _pad_to(n_edges, mult)
+
+    cfg = GINConfig("gin-tu", n_layers=5, d_hidden=64, d_feat=d["d_feat"],
+                    n_classes=d["n_classes"], comm_dtype=jnp.bfloat16)
+    params_sh = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_sh = jax.eval_shape(init_state, params_sh)
+    batch_sds = {
+        "features": jax.ShapeDtypeStruct((n_nodes_p, d["d_feat"]), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((n_edges_p,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((n_edges_p,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((n_edges_p,), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((n_nodes_p,), jnp.int32),
+        "label_mask": jax.ShapeDtypeStruct((n_nodes_p,), jnp.bool_),
+    }
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    bspec = {
+        "features": P(dp, None), "edge_src": P(dp), "edge_dst": P(dp),
+        "edge_mask": P(dp), "labels": P(dp), "label_mask": P(dp),
+    }
+    pspec = jax.tree.map(lambda _: P(), params_sh)  # tiny model: replicated
+    from repro.models.gnn import loss_fn_dst_partitioned
+    step = make_train_step(
+        lambda p, b: loss_fn_dst_partitioned(p, b, cfg, mesh, dp),
+        OptimizerConfig())
+    in_sh = (named(mesh, pspec), named(mesh, {"m": pspec, "v": pspec, "step": P()}),
+             named(mesh, bspec))
+    # MODEL_FLOPS: per layer 2*E*F gather-sum + 2*N*(F*H + H*H) MLPs; x3 train
+    f, h = d["d_feat"], cfg.d_hidden
+    fl = 0
+    fin = f
+    for _ in range(cfg.n_layers):
+        fl += 2 * n_edges * fin + 2 * n_nodes * (fin * h + h * h)
+        fin = h
+    fl = 3 * (fl + 2 * n_nodes * h * d["n_classes"])
+    return Cell("gin-tu", shape.name, "train", step,
+                (params_sh, opt_sh, batch_sds), in_sh, donate_argnums=(0, 1),
+                model_flops=float(fl),
+                notes=f"padded nodes {n_nodes}->{n_nodes_p} edges {n_edges}->{n_edges_p}")
+
+
+register(ArchDef(
+    name="gin-tu", family="gnn",
+    make=lambda: GINConfig("gin-tu", 5, 64, 1433, 7),
+    make_reduced=lambda: GINConfig("gin-tu-smoke", 2, 8, 8, 3),
+    shapes=SHAPES, build_cell=build_cell,
+    notes="paper technique inapplicable to the model itself; shares the "
+          "segment-reduce substrate (DESIGN.md SSArch-applicability)",
+))

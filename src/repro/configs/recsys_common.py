@@ -1,0 +1,46 @@
+"""Shared shapes + cell builder scaffolding for the four recsys architectures.
+
+Embedding tables are row-sharded over `model` (the vocab dimension); batches shard
+over ('pod', 'data').  serve_* shapes lower a pure forward (no optimizer state);
+retrieval_cand scores one query against 1M candidates (batched dot / full item-tower
+sweep -- never a loop)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .base import Cell, ShapeDef, dp_axes, named, shard_if
+
+SHAPES = {
+    "train_batch": ShapeDef("train_batch", "train", {"batch": 65_536}),
+    "serve_p99": ShapeDef("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeDef("serve_bulk", "serve", {"batch": 262_144}),
+    "retrieval_cand": ShapeDef("retrieval_cand", "serve",
+                               {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+
+def dp_spec(mesh):
+    dp = dp_axes(mesh)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def make_recsys_cell(*, name: str, shape: ShapeDef, mesh, params_sh, pspec,
+                     loss, forward, batch_sds, batch_spec,
+                     model_flops: float, notes: str = "") -> Cell:
+    from repro.training.optimizer import OptimizerConfig, init_state
+    from repro.training.train_loop import make_train_step
+
+    if shape.kind == "train":
+        opt_sh = jax.eval_shape(init_state, params_sh)
+        step = make_train_step(loss, OptimizerConfig())
+        in_sh = (named(mesh, pspec),
+                 named(mesh, {"m": pspec, "v": pspec, "step": P()}),
+                 named(mesh, batch_spec))
+        return Cell(name, shape.name, "train", step, (params_sh, opt_sh, batch_sds),
+                    in_sh, donate_argnums=(0, 1), model_flops=3 * model_flops,
+                    notes=notes)
+    in_sh = (named(mesh, pspec), named(mesh, batch_spec))
+    return Cell(name, shape.name, "serve", forward, (params_sh, batch_sds), in_sh,
+                model_flops=model_flops, notes=notes)

@@ -1,0 +1,67 @@
+"""two-tower-retrieval [YouTube, RecSys'19]: embed 256, towers 1024-512-256,
+dot-product scoring, in-batch sampled softmax; retrieval_cand is the real serving
+shape (1 query x 1M candidates, batched dot)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import recsys as R
+from .base import ArchDef, ShapeDef, register, shard_if
+from .recsys_common import SHAPES, dp_spec, make_recsys_cell
+
+FULL = R.TwoTowerConfig(item_vocab=10_000_000, embed_dim=256, user_feat=256,
+                        tower_dims=(1024, 512, 256))
+REDUCED = R.TwoTowerConfig(item_vocab=500, embed_dim=16, user_feat=16,
+                           tower_dims=(32, 16))
+
+
+def _tower_flops(cfg, n, d_in):
+    dims = (d_in,) + cfg.tower_dims
+    return n * sum(2 * a * b for a, b in zip(dims, dims[1:]))
+
+
+def build_cell(cfg_factory, shape: ShapeDef, mesh):
+    cfg = FULL
+    params_sh = jax.eval_shape(lambda: R.twotower_init(jax.random.PRNGKey(0), cfg))
+    pspec = jax.tree.map(lambda _: P(), params_sh)
+    pspec["item_embed"] = P(shard_if(mesh, cfg.item_vocab, "model"), None)
+    dp = dp_spec(mesh)
+    if shape.name == "retrieval_cand":
+        n = shape.dims["n_candidates"]
+        batch_sds = {"user": jax.ShapeDtypeStruct((1, cfg.user_feat), jnp.float32),
+                     "candidates": jax.ShapeDtypeStruct((n,), jnp.int32)}
+        bspec = {"user": P(None, None), "candidates": P(dp)}
+        fl = _tower_flops(cfg, n, cfg.embed_dim) + 2 * n * cfg.tower_dims[-1]
+        return make_recsys_cell(
+            name="two-tower-retrieval", shape=shape, mesh=mesh, params_sh=params_sh,
+            pspec=pspec, loss=None,
+            forward=lambda p, bt: R.twotower_score_candidates(p, bt, cfg),
+            batch_sds=batch_sds, batch_spec=bspec, model_flops=float(fl))
+    b = shape.dims["batch"]
+    batch_sds = {"user": jax.ShapeDtypeStruct((b, cfg.user_feat), jnp.float32),
+                 "pos_item": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    bspec = {"user": P(dp, None), "pos_item": P(dp)}
+    fl = (_tower_flops(cfg, b, cfg.user_feat) + _tower_flops(cfg, b, cfg.embed_dim)
+          + 2 * b * b * cfg.tower_dims[-1])
+    if shape.kind == "train":
+        return make_recsys_cell(
+            name="two-tower-retrieval", shape=shape, mesh=mesh, params_sh=params_sh,
+            pspec=pspec, loss=lambda p, bt: R.twotower_loss(p, bt, cfg),
+            forward=None, batch_sds=batch_sds, batch_spec=bspec,
+            model_flops=float(fl))
+    return make_recsys_cell(
+        name="two-tower-retrieval", shape=shape, mesh=mesh, params_sh=params_sh,
+        pspec=pspec, loss=None,
+        forward=lambda p, bt: R.twotower_embed(p, bt, cfg),
+        batch_sds=batch_sds, batch_spec=bspec, model_flops=float(fl))
+
+
+register(ArchDef(
+    name="two-tower-retrieval", family="recsys",
+    make=lambda: FULL, make_reduced=lambda: REDUCED,
+    shapes=SHAPES, build_cell=build_cell,
+    notes="negative-sampling frequencies come from the degenerate sigma=1 "
+          "SUFFIX-sigma job (distributed item counting)",
+))

@@ -1,0 +1,29 @@
+"""The paper's contribution: n-gram statistics methods on the MapReduce-on-JAX
+substrate.  ``run_job`` dispatches on ``NGramConfig.method``."""
+from __future__ import annotations
+
+from . import (aggregations, apriori_index, apriori_scan, extensions, naive,
+               oracle, suffix_sigma)
+from .extensions import filter_stats as extensions_filter
+from .stats import NGramConfig, NGramStats
+
+METHODS = {
+    "suffix_sigma": suffix_sigma.run,
+    "naive": naive.run,
+    "apriori_scan": apriori_scan.run,
+    "apriori_index": apriori_index.run,
+}
+
+
+def run_job(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
+            **kw) -> NGramStats:
+    try:
+        fn = METHODS[cfg.method]
+    except KeyError:
+        raise ValueError(f"unknown method {cfg.method!r}; options: {sorted(METHODS)}")
+    return fn(tokens, cfg, mesh=mesh, axis_name=axis_name, **kw)
+
+
+__all__ = ["NGramConfig", "NGramStats", "run_job", "METHODS", "oracle",
+           "suffix_sigma", "naive", "apriori_scan", "apriori_index",
+           "extensions", "extensions_filter"]

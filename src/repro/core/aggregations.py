@@ -1,0 +1,115 @@
+"""Aggregations beyond occurrence counting (SSII / SSVI-B).
+
+Document frequency (df): the frequent-sequence-mining notion of support.  The
+paper notes every method "can easily be modified" to produce df; concretely that
+is a per-(gram, document) dedup before counting -- for the whole-gram methods
+(NAIVE-style) a map-side dedup does it in one job, implemented here.  For
+SUFFIX-sigma the prefix-level distinct-doc count is NOT derivable from one
+lexicographic pass (distinct (prefix, doc) pairs are non-contiguous below the
+full sort key) -- see extensions.py for the documented gap; ``df_suffix_lengths``
+provides the per-length multi-pass variant (sigma passes, each exact).
+
+Inverted index: SUFFIX-sigma's sorted runs *are* posting lists -- each frequent
+gram's run holds exactly the (doc, multiplicity) evidence; ``postings`` extracts
+them (host side) from a doc-id-tagged job.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce import sort
+from .common import count_exact_grams
+from .stats import NGramConfig, NGramStats
+from .suffix_sigma import suffix_windows
+
+
+def doc_ids_from_stream(tokens) -> np.ndarray:
+    """Dense document id per token position (empty documents -- consecutive
+    separators -- don't consume ids, matching the oracle's doc enumeration)."""
+    toks = np.asarray(tokens)
+    raw = np.concatenate([[0], np.cumsum(toks == 0)[:-1]])
+    live = np.unique(raw[toks != 0]) if (toks != 0).any() else np.asarray([0])
+    return np.searchsorted(live, raw).astype(np.int32)
+
+
+def document_frequencies(tokens, cfg: NGramConfig) -> NGramStats:
+    """df for all n-grams <= sigma: one job, map-side (gram, doc) dedup.
+
+    Map emits every (gram, doc) pair once (dedup via sort on [lanes | doc]);
+    reduce counts distinct docs per gram -- weight 1 per surviving pair."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    dids = jnp.asarray(doc_ids_from_stream(tokens), jnp.uint32)
+    windows, _ = suffix_windows(tokens, cfg.sigma)
+    n, sigma = windows.shape
+    lmask = jnp.tril(jnp.ones((sigma, sigma), jnp.int32))
+    grams = (windows[:, None, :] * lmask[None]).reshape(n * sigma, sigma)
+    valid = (windows != 0).reshape(-1)
+    grams = grams * valid[:, None]
+    lanes = packing.pack_terms(grams, vocab_size=cfg.vocab_size)
+    doc = jnp.repeat(dids, sigma)
+    rec = jnp.concatenate([lanes, doc[:, None],
+                           valid.astype(jnp.uint32)[:, None]], axis=1)
+    n_l = lanes.shape[1]
+    rec = sort.sort_records(rec, n_keys=n_l + 1)          # sort by (gram, doc)
+    keys = rec[:, : n_l + 1]
+    first = jnp.any(keys != jnp.roll(keys, 1, axis=0), axis=1).at[0].set(True)
+    w = jnp.where(first & (rec[:, -1] > 0), jnp.uint32(1), jnp.uint32(0))
+    rec = rec.at[:, -1].set(w)                             # dedup: one per (g, d)
+    dedup = jnp.concatenate([rec[:, :n_l], rec[:, -1:]], axis=1)
+    terms, flags, counts = count_exact_grams(dedup, sigma=cfg.sigma,
+                                             vocab_size=cfg.vocab_size)
+    return NGramStats.from_dense(np.asarray(terms), np.asarray(flags),
+                                 np.asarray(counts), cfg.tau,
+                                 {"map_records": int(valid.sum()), "jobs": 1})
+
+
+def df_suffix_lengths(tokens, cfg: NGramConfig) -> NGramStats:
+    """SUFFIX-sigma-flavoured df: one narrow pass per length (sigma jobs), each
+    an exact distinct-doc count for that length -- the honest multi-pass cost of
+    df under suffix partitioning (extensions.py explains why one pass can't)."""
+    out: NGramStats | None = None
+    import dataclasses
+    for l in range(1, cfg.sigma + 1):
+        c = dataclasses.replace(cfg, sigma=l)
+        st = document_frequencies(tokens, c)
+        keep = st.lengths == l
+        part = NGramStats(
+            np.pad(st.grams[keep], ((0, 0), (0, cfg.sigma - l))),
+            st.lengths[keep], st.counts[keep],
+            {"jobs": 1} if out is None else {})
+        out = part if out is None else out.merged_with(part)
+    out.counters["jobs"] = cfg.sigma
+    return out
+
+
+def postings(tokens, cfg: NGramConfig) -> dict[tuple[int, ...], dict[int, int]]:
+    """Inverted index from SUFFIX-sigma's sorted runs: doc->count per frequent
+    gram.  Host-side extraction over the (suffix, doc) sorted block."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    dids = jnp.asarray(doc_ids_from_stream(tokens), jnp.uint32)
+    windows, valid = suffix_windows(tokens, cfg.sigma)
+    lanes = packing.pack_terms(windows, vocab_size=cfg.vocab_size)
+    rec = jnp.concatenate([lanes, dids[:, None],
+                           valid.astype(jnp.uint32)[:, None]], axis=1)
+    n_l = lanes.shape[1]
+    rec = sort.sort_records(rec, n_keys=n_l + 1)
+    terms = np.asarray(packing.unpack_terms(rec[:, :n_l],
+                                            vocab_size=cfg.vocab_size,
+                                            sigma=cfg.sigma))
+    docs = np.asarray(rec[:, n_l])
+    w = np.asarray(rec[:, n_l + 1])
+    # host scan: runs of each prefix are contiguous; accumulate doc multisets
+    from collections import Counter, defaultdict
+    acc: dict[tuple[int, ...], Counter] = defaultdict(Counter)
+    for row, doc, weight in zip(terms, docs, w):
+        if weight == 0:
+            continue
+        for l in range(1, cfg.sigma + 1):
+            if row[l - 1] == 0:
+                break
+            acc[tuple(int(t) for t in row[:l])][int(doc)] += 1
+    return {g: dict(c) for g, c in acc.items()
+            if sum(c.values()) >= cfg.tau}

@@ -1,0 +1,103 @@
+"""Shared machinery for the baseline methods (NAIVE, APRIORI-SCAN, APRIORI-INDEX).
+
+All three count *whole grams* (full-row equality runs after the sort), unlike
+SUFFIX-sigma which counts every prefix of every suffix.  The helpers here provide
+exact whole-gram counting with optional position payloads (APRIORI-INDEX joins on
+positions), plus the record hashing used to partition grams across reducers.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce import shuffle, sort
+
+
+def gram_hash(lanes: jax.Array) -> jax.Array:
+    """Order-sensitive fold hash of the packed lanes -> uint32 partition key."""
+    h = jnp.zeros(lanes.shape[:-1], jnp.uint32)
+    for i in range(lanes.shape[-1]):
+        h = shuffle.hash_u32(h ^ lanes[..., i] + jnp.uint32(0x9E3779B9))
+    return h
+
+
+@partial(jax.jit, static_argnames=("sigma", "vocab_size", "with_positions"))
+def count_exact_grams(records: jax.Array, *, sigma: int, vocab_size: int,
+                      with_positions: bool = False):
+    """Count identical grams in ``records`` = [N, n_lanes | weight | (pos)].
+
+    Returns (terms [N, sigma], flags [N, sigma], counts [N, sigma]) shaped like the
+    SUFFIX-sigma reducer output so ``NGramStats.from_dense`` applies; flags mark the
+    first row of each run at the row's own gram length.  If ``with_positions``, also
+    returns per-original-position run totals [N] (scattered back through the sort
+    permutation) for the APRIORI-INDEX posting-list join.
+    """
+    n, _ = records.shape
+    n_l = packing.n_lanes(sigma, vocab_size)
+    rec = sort.sort_records(records, n_keys=n_l)
+    lanes = rec[:, :n_l]
+    weight = rec[:, n_l].astype(jnp.int32)
+    terms = packing.unpack_terms(lanes, vocab_size=vocab_size, sigma=sigma)
+
+    first = jnp.any(lanes != jnp.roll(lanes, 1, axis=0), axis=1).at[0].set(True)
+    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
+    totals = jax.ops.segment_sum(weight, seg, num_segments=n)[seg]
+
+    length = jnp.sum(terms != 0, axis=1)                       # gram length per row
+    valid_row = (length > 0) & (weight >= 0)
+    pos_in_row = jnp.maximum(length - 1, 0)
+    row_flags = first & valid_row & (totals > 0)
+    flags = (jax.nn.one_hot(pos_in_row, sigma, dtype=jnp.int32)
+             * row_flags[:, None].astype(jnp.int32)).astype(bool)
+    counts = flags * totals[:, None]
+
+    if not with_positions:
+        return terms, flags, counts
+    orig_pos = rec[:, n_l + 1].astype(jnp.int32)
+    totals_at_pos = jnp.zeros((n,), jnp.int32).at[orig_pos].set(totals, mode="drop")
+    return terms, flags, counts, totals_at_pos
+
+
+def kgram_records(tokens: jax.Array, k: int, sigma: int, vocab_size: int,
+                  weight_mask: jax.Array | None = None,
+                  with_positions: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Records for the k-grams starting at every position (padded to sigma lanes).
+
+    weight_mask: optional bool [N] further restricting which positions emit.
+    Returns (records, valid).
+    """
+    from .suffix_sigma import suffix_windows
+    windows, _ = suffix_windows(tokens, sigma)
+    kmask = jnp.arange(sigma) < k
+    kgram = windows * kmask[None, :].astype(windows.dtype)
+    valid = windows[:, k - 1] != 0                  # full k tokens present
+    if weight_mask is not None:
+        valid = valid & weight_mask
+    kgram = kgram * valid[:, None].astype(kgram.dtype)
+    lanes = packing.pack_terms(kgram, vocab_size=vocab_size)
+    cols = [lanes, valid.astype(jnp.uint32)[:, None]]
+    if with_positions:
+        cols.append(jnp.arange(tokens.shape[0], dtype=jnp.uint32)[:, None])
+    return jnp.concatenate(cols, axis=1), valid
+
+
+def membership_hashes(lanes: jax.Array, valid: jax.Array) -> jax.Array:
+    """Sorted uint32 hash set of the valid grams -- the APRIORI 'dictionary'.
+
+    Hash collisions only ever *weaken pruning* (extra candidates), never drop a
+    frequent gram: the final tau filter recounts exactly (see apriori_scan.py).
+    This replaces the paper's BerkeleyDB / distributed-cache dictionary with a
+    TPU-friendly sorted array + binary search.
+    """
+    h = gram_hash(lanes)
+    h = jnp.where(valid, h, jnp.uint32(0xFFFFFFFF))
+    return jnp.sort(h)
+
+
+def member(sorted_hashes: jax.Array, queries: jax.Array) -> jax.Array:
+    idx = jnp.searchsorted(sorted_hashes, queries)
+    idx = jnp.minimum(idx, sorted_hashes.shape[0] - 1)
+    return sorted_hashes[idx] == queries

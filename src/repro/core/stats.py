@@ -1,0 +1,109 @@
+"""Containers for n-gram statistics jobs and their outputs.
+
+``NGramStats`` mirrors what a Hadoop job leaves in HDFS (the (n-gram, cf) pairs) plus
+the counters the paper reports for every experiment: MAP_OUTPUT_RECORDS and
+MAP_OUTPUT_BYTES analogues, measured *exactly* by the pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NGramConfig:
+    """Problem statement of the paper (SSIII): report every n-gram s with
+    cf(s) >= tau and |s| <= sigma."""
+
+    sigma: int
+    tau: int
+    vocab_size: int
+    method: str = "suffix_sigma"
+    # --- implementation knobs -------------------------------------------------
+    capacity_factor: float = 1.25   # shuffle buffer head-room per (src, dst) pair
+    combine: bool = True            # map-side pre-aggregation (Hadoop combiner)
+    pack: bool = True               # bit-pack term lanes (SSV sequence encoding)
+    split_docs: bool = True         # split documents at infrequent terms (SSV)
+    apriori_index_k: int = 4        # K of APRIORI-INDEX (paper's calibrated value)
+    n_buckets: int = 0              # >0: aggregate per-bucket time series (SSVI-B)
+    use_kernels: bool = False       # route reducer through Pallas kernels (interpret on CPU)
+
+    def __post_init__(self):
+        if self.sigma < 1:
+            raise ValueError("sigma must be >= 1")
+        if self.tau < 1:
+            raise ValueError("tau must be >= 1")
+
+
+@dataclass
+class NGramStats:
+    """Dense job output.
+
+    grams   : [R, sigma] int32, right-padded with PAD(0)
+    lengths : [R] int32
+    counts  : [R] int64 collection frequencies (or [R, B] bucketed series)
+    counters: exact shuffle/record accounting per phase
+    """
+
+    grams: np.ndarray
+    lengths: np.ndarray
+    counts: np.ndarray
+    counters: dict[str, float] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return int(self.grams.shape[0])
+
+    def to_dict(self) -> dict[tuple[int, ...], int]:
+        out: dict[tuple[int, ...], int] = {}
+        for g, l, c in zip(self.grams, self.lengths, self.counts):
+            key = tuple(int(x) for x in g[: int(l)])
+            val = int(c.sum()) if np.ndim(c) else int(c)
+            prev = out.get(key)
+            out[key] = val if prev is None else prev + val
+        return out
+
+    def to_series_dict(self) -> dict[tuple[int, ...], np.ndarray]:
+        assert self.counts.ndim == 2, "job was not run with n_buckets > 0"
+        return {
+            tuple(int(x) for x in g[: int(l)]): c.copy()
+            for g, l, c in zip(self.grams, self.lengths, self.counts)
+        }
+
+    @staticmethod
+    def from_dense(sorted_terms: np.ndarray, flags: np.ndarray, counts: np.ndarray,
+                   tau: int, counters: dict[str, float] | None = None) -> "NGramStats":
+        """Extract (gram, count) rows from the dense reducer output.
+
+        sorted_terms: [N, sigma]; flags: [N, sigma] boundary flags; counts: [N, sigma]
+        (or [N, sigma, B]) run totals at boundary positions.
+        """
+        total = counts.sum(axis=-1) if counts.ndim == 3 else counts
+        keep = flags & (total >= tau)
+        rows, lens0 = np.nonzero(keep)
+        sigma = sorted_terms.shape[1]
+        grams = np.zeros((rows.size, sigma), dtype=np.int32)
+        lengths = (lens0 + 1).astype(np.int32)
+        for out_i, (r, l) in enumerate(zip(rows, lens0 + 1)):
+            grams[out_i, :l] = sorted_terms[r, :l]
+        cvals = counts[rows, lens0].astype(np.int64)
+        return NGramStats(grams, lengths, cvals, dict(counters or {}))
+
+    def merged_with(self, other: "NGramStats") -> "NGramStats":
+        counters = dict(self.counters)
+        for k, v in other.counters.items():
+            counters[k] = counters.get(k, 0) + v
+        return NGramStats(
+            np.concatenate([self.grams, other.grams], axis=0),
+            np.concatenate([self.lengths, other.lengths], axis=0),
+            np.concatenate([self.counts, other.counts], axis=0),
+            counters,
+        )
+
+
+def add_counters(dst: dict[str, float], **kv: float) -> dict[str, float]:
+    for k, v in kv.items():
+        dst[k] = dst.get(k, 0) + float(v)
+    return dst

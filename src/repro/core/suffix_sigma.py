@@ -1,0 +1,347 @@
+"""SUFFIX-sigma (Algorithm 4 of the paper) as a single distributed JAX job.
+
+Phases (one MapReduce job, like the paper):
+
+  map      -- per token position emit the sigma-truncated suffix (bit-packed lanes)
+              with weight 1; optional map-side combine merges equal suffixes.
+  shuffle  -- partition by hash(first term) -> all_to_all (repro.mapreduce.shuffle).
+  sort     -- lexicographic multi-key sort of the packed lanes.
+  reduce   -- the paper's two-stack streaming aggregation, re-expressed data-parallel:
+              LCP boundaries between adjacent sorted suffixes delimit the runs of every
+              distinct prefix; run totals are segmented sums of the weights.  This is
+              exact: the stack state at row i in Algorithm 4 is precisely the common
+              prefix of rows i-1 and i, and a "pop + emit" happens exactly at an LCP
+              drop -- i.e. at a run boundary.
+
+The reducer never needs the reverse-lexicographic trick: that ordering exists so a
+*streaming* reducer can emit early with O(sigma) state; the data-parallel reducer
+instead processes a whole sorted block at once with O(block * sigma) VMEM state and
+emits everything at the end of the block, which is the natural TPU formulation
+(DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce import segment, shuffle, sort
+from .stats import NGramConfig, NGramStats, add_counters
+
+
+
+def _vocab(cfg: NGramConfig) -> int:
+    """Effective vocab for lane packing: cfg.pack=False forces one term per lane
+    (the SSV sequence-encoding ablation -- more sort passes, more bytes)."""
+    return cfg.vocab_size if cfg.pack else max(cfg.vocab_size, 1 << 30)
+
+# --------------------------------------------------------------------------- map
+@partial(jax.jit, static_argnames=("sigma",))
+def suffix_windows(tokens: jax.Array, sigma: int) -> tuple[jax.Array, jax.Array]:
+    """All sigma-truncated suffixes of a PAD-separated token stream.
+
+    Returns (windows [N, sigma] int32 masked after the first PAD, valid [N] bool).
+    """
+    n = tokens.shape[0]
+    padded = jnp.concatenate([tokens, jnp.zeros((sigma,), tokens.dtype)])
+    idx = jnp.arange(n)[:, None] + jnp.arange(sigma)[None, :]
+    w = padded[idx]
+    keep = jnp.cumprod((w != 0).astype(jnp.int32), axis=1)
+    return (w * keep).astype(jnp.int32), tokens != 0
+
+
+def make_records(tokens: jax.Array, *, sigma: int, vocab_size: int,
+                 bucket_ids: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Map emit: [N, W] uint32 records = packed lanes | weight | (bucket)."""
+    windows, valid = suffix_windows(tokens, sigma)
+    lanes = packing.pack_terms(windows, vocab_size=vocab_size)
+    weight = valid.astype(jnp.uint32)
+    cols = [lanes, weight[:, None]]
+    if bucket_ids is not None:
+        cols.append(bucket_ids.astype(jnp.uint32)[:, None])
+    return jnp.concatenate(cols, axis=1), valid
+
+
+def combine_records(records: jax.Array, n_lanes: int, has_bucket: bool) -> jax.Array:
+    """Map-side combiner: merge records with identical keys, summing weights.
+
+    Keys = packed lanes (+ bucket lane if present, so series buckets stay separate).
+    Non-first rows of each run get weight 0 (they are dropped by the shuffle's
+    validity mask); shapes stay static.
+    """
+    w_col = n_lanes
+    n_keys = n_lanes + (1 if has_bucket else 0)
+    if has_bucket:  # move bucket next to lanes for sorting, weight last
+        rec = jnp.concatenate(
+            [records[:, :n_lanes], records[:, n_lanes + 1:], records[:, n_lanes:n_lanes + 1]],
+            axis=1)
+    else:
+        rec = records
+    rec = sort.sort_records(rec, n_keys=n_keys)
+    keys = rec[:, :n_keys]
+    first = jnp.any(keys != jnp.roll(keys, 1, axis=0), axis=1).at[0].set(True)
+    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
+    wsum = jax.ops.segment_sum(rec[:, -1], seg, num_segments=rec.shape[0])
+    new_w = jnp.where(first, wsum[seg], 0)
+    rec = rec.at[:, -1].set(new_w)
+    if has_bucket:  # restore layout lanes | weight | bucket
+        rec = jnp.concatenate(
+            [rec[:, :n_lanes], rec[:, -1:], rec[:, n_lanes:-1]], axis=1)
+    return rec
+
+
+# ------------------------------------------------------------------------ reduce
+@partial(jax.jit, static_argnames=("sigma", "vocab_size", "n_buckets", "use_kernels"))
+def reduce_block(records: jax.Array, *, sigma: int, vocab_size: int,
+                 n_buckets: int = 0, use_kernels: bool = False):
+    """Sort + count one reducer block.
+
+    records: [N, W] = lanes | weight | (bucket).  Returns
+    (terms [N, sigma], flags [N, sigma], counts [N, sigma] or [N, sigma, B]).
+    """
+    n_l = packing.n_lanes(sigma, vocab_size)
+    rec = sort.sort_records(records, n_keys=n_l)
+    terms = packing.unpack_terms(rec[:, :n_l], vocab_size=vocab_size, sigma=sigma)
+    weight = rec[:, n_l].astype(jnp.int32)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        lcp, flags = kops.lcp_boundary(terms)
+    else:
+        lcp = segment.lcp_lengths(terms)
+        flags = segment.boundary_flags(terms, lcp)
+    valid = terms != 0
+    if n_buckets:
+        bucket = rec[:, n_l + 1].astype(jnp.int32)
+        wmat = jax.nn.one_hot(bucket, n_buckets, dtype=jnp.int32) * weight[:, None]
+        counts = segment.run_counts_matrix(flags, valid, wmat, max_segments=rec.shape[0])
+    else:
+        counts = segment.run_counts(flags, valid, weight, max_segments=rec.shape[0])
+    return terms, flags, counts
+
+
+# ----------------------------------------------------------------- single device
+def _single_device(tokens: jax.Array, cfg: NGramConfig, bucket_ids):
+    records, valid = make_records(tokens, sigma=cfg.sigma, vocab_size=_vocab(cfg),
+                                  bucket_ids=bucket_ids)
+    n_l = packing.n_lanes(cfg.sigma, _vocab(cfg))
+    map_records = int(jnp.sum(valid))
+    if cfg.combine:
+        records = combine_records(records, n_l, has_bucket=bucket_ids is not None)
+    shuffled_records = int(jnp.sum(records[:, n_l] > 0))
+    terms, flags, counts = reduce_block(
+        records, sigma=cfg.sigma, vocab_size=_vocab(cfg),
+        n_buckets=cfg.n_buckets, use_kernels=cfg.use_kernels)
+    rec_bytes = packing.record_bytes(cfg.sigma, _vocab(cfg),
+                                     n_meta=1 if bucket_ids is not None else 0)
+    counters = {
+        "map_records": map_records,
+        "shuffle_records": shuffled_records,
+        "shuffle_bytes": shuffled_records * rec_bytes,
+        "jobs": 1,
+        "overflow": 0,
+    }
+    return (np.asarray(terms), np.asarray(flags), np.asarray(counts)), counters
+
+
+# ------------------------------------------------------------------- distributed
+def build_distributed_job(cfg: NGramConfig, mesh, axis_name: str, capacity: int,
+                          has_bucket: bool = False):
+    """Construct the (un-jitted) shard_map SUFFIX-sigma job for a mesh axis.
+
+    Returned fn: (tokens [P, n_local], buckets [P, n_local] or dummy) ->
+    (terms, flags, counts, stats) -- all sharded [P, ...].  Exposed separately so
+    the dry-run can lower/compile the job on the production mesh (configs/paper.py).
+    """
+    n_parts = mesh.shape[axis_name]
+    n_l = packing.n_lanes(cfg.sigma, _vocab(cfg))
+
+    def job(tok, bkt):
+        tok = tok[0]  # [n_local]
+        # --- halo: suffixes near the shard end need the right neighbor's tokens.
+        halo_src = tok[: cfg.sigma - 1] if cfg.sigma > 1 else tok[:0]
+        if cfg.sigma > 1:
+            perm = [(i, (i - 1) % n_parts) for i in range(n_parts)]
+            halo = jax.lax.ppermute(halo_src, axis_name, perm)
+            is_last = jax.lax.axis_index(axis_name) == n_parts - 1
+            halo = jnp.where(is_last, jnp.zeros_like(halo), halo)
+            tok_ext = jnp.concatenate([tok, halo])
+        else:
+            tok_ext = tok
+        bucket = bkt[0] if has_bucket else None
+        if bucket is not None and cfg.sigma > 1:
+            bucket = jnp.concatenate([bucket, jnp.zeros((cfg.sigma - 1,), bucket.dtype)])
+        records, valid = make_records(tok_ext, sigma=cfg.sigma,
+                                      vocab_size=_vocab(cfg), bucket_ids=bucket)
+        # halo positions belong to the neighbor: mask them out
+        pos_ok = jnp.arange(records.shape[0]) < tok.shape[0]
+        records = records * pos_ok[:, None].astype(records.dtype)
+        valid = valid & pos_ok
+        map_rec = jnp.sum(valid)
+        if cfg.combine:
+            records = combine_records(records, n_l, has_bucket=has_bucket)
+        w = records[:, n_l]
+        lead = records[:, 0] >> jnp.uint32(
+            (packing.terms_per_lane(_vocab(cfg)) - 1)
+            * packing.bits_for_vocab(_vocab(cfg)))
+        local_rec, overflow = shuffle.shuffle(
+            records, lead, w > 0, axis_name=axis_name, n_parts=n_parts,
+            capacity=capacity)
+        shuf_rec = jax.lax.psum(jnp.sum(local_rec[:, n_l] > 0), axis_name)
+        terms, flags, counts = reduce_block(
+            local_rec, sigma=cfg.sigma, vocab_size=_vocab(cfg),
+            n_buckets=cfg.n_buckets, use_kernels=cfg.use_kernels)
+        stats = jnp.stack([jax.lax.psum(map_rec, axis_name), shuf_rec, overflow])
+        return terms[None], flags[None], counts[None], stats[None]
+
+    from jax.sharding import PartitionSpec as P
+    in_specs = (P(axis_name, None), P(axis_name, None) if has_bucket else P())
+    out_specs = (P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    return jax.shard_map(job, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
+def _distributed(tokens_sharded: jax.Array, cfg: NGramConfig, mesh, axis_name: str,
+                 bucket_sharded, capacity: int):
+    """Run one distributed SUFFIX-sigma job (tokens_sharded: [P, n_local])."""
+    has_bucket = bucket_sharded is not None
+    fn = jax.jit(build_distributed_job(cfg, mesh, axis_name, capacity, has_bucket))
+    bkt_arg = bucket_sharded if has_bucket else jnp.zeros((1, 1), jnp.uint32)
+    return fn(tokens_sharded, bkt_arg)
+
+
+# --------------------------------------------------------- two-phase sigma split
+def sigma_split(tokens, cfg: NGramConfig, sigma_head: int = 16,
+                survivor_frac: float = 1 / 64) -> "NGramStats":
+    """Beyond-paper optimization (EXPERIMENTS.md SSPerf H3): split a large-sigma
+    job into
+
+      phase A: plain SUFFIX-sigma at sigma_head -- handles every gram of length
+               <= sigma_head with (sigma_head+1)-lane records instead of
+               (sigma+1)-lane ones (the sort bytes scale with the lane count);
+      phase B: only positions whose length-sigma_head head gram is frequent
+               (APRIORI: any frequent longer gram's occurrences all pass this
+               filter) emit full sigma-truncated suffixes; their count is tiny at
+               analytics-scale tau (the paper's Fig. 2 tail), so the wide-record
+               sort shrinks by ~1/survivor rate.
+
+    Exact: phase A counts lengths <= sigma_head; phase B counts lengths in
+    (sigma_head, sigma] -- every occurrence of a frequent long gram survives the
+    head filter, and partition-by-first-term still routes all evidence of a gram
+    to one reducer.  survivor_frac only sizes buffers (validated by an overflow
+    counter upstream).
+    """
+    import numpy as np
+    from .stats import NGramStats
+
+    tokens = jnp.asarray(tokens, jnp.int32)
+    if sigma_head >= cfg.sigma:
+        return run(tokens, cfg)
+    import dataclasses
+    cfg_a = dataclasses.replace(cfg, sigma=sigma_head)
+    stats_a = run(tokens, cfg_a)
+
+    # frequent head set (the APRIORI dictionary, as in apriori_scan)
+    from .common import gram_hash, member, membership_hashes
+    full_len = stats_a.lengths == sigma_head
+    heads = jnp.asarray(stats_a.grams[full_len])
+    if heads.shape[0] == 0:
+        return stats_a
+    head_pad = jnp.zeros((heads.shape[0], cfg.sigma), jnp.int32
+                         ).at[:, :sigma_head].set(heads[:, :sigma_head])
+    dict_hashes = membership_hashes(
+        packing.pack_terms(head_pad, vocab_size=cfg.vocab_size),
+        jnp.ones((heads.shape[0],), bool))
+
+    # phase B: mask positions by head membership, count lengths > sigma_head
+    windows, valid = suffix_windows(tokens, cfg.sigma)
+    head_mask = jnp.arange(cfg.sigma) < sigma_head
+    head_grams = windows * head_mask[None, :].astype(windows.dtype)
+    has_full_head = windows[:, sigma_head - 1] != 0 if sigma_head > 1 \
+        else windows[:, 0] != 0
+    h = gram_hash(packing.pack_terms(head_grams, vocab_size=cfg.vocab_size))
+    eligible = valid & has_full_head & member(dict_hashes, h)
+
+    # compact survivor POSITIONS first (single-lane sort), then build the wide
+    # records only for them -- the wide-record sort shrinks by 1/survivor_frac,
+    # which is the whole point (EXPERIMENTS.md SSPerf H3 napkin math).
+    n_b = max(64, int(tokens.shape[0] * survivor_frac))
+    pos = jnp.argsort(~eligible, stable=True)[:n_b]
+    ok = eligible[pos]
+    padded = jnp.concatenate([tokens, jnp.zeros((cfg.sigma,), tokens.dtype)])
+    win_b = padded[pos[:, None] + jnp.arange(cfg.sigma)[None, :]]
+    keep = jnp.cumprod((win_b != 0).astype(jnp.int32), axis=1)
+    win_b = (win_b * keep) * ok[:, None].astype(win_b.dtype)
+    lanes_b = packing.pack_terms(win_b.astype(jnp.int32), vocab_size=cfg.vocab_size)
+    records = jnp.concatenate([lanes_b, ok.astype(jnp.uint32)[:, None]], axis=1)
+    terms, flags, counts = reduce_block(
+        records, sigma=cfg.sigma, vocab_size=cfg.vocab_size,
+        use_kernels=cfg.use_kernels)
+    # keep only lengths > sigma_head (phase A owns the rest)
+    flags = np.array(flags)
+    flags[:, :sigma_head] = False
+    stats_b = NGramStats.from_dense(np.asarray(terms), flags, np.asarray(counts),
+                                    cfg.tau)
+    dropped = int(jnp.sum(eligible)) - n_b
+    stats_a = NGramStats(
+        np.pad(stats_a.grams, ((0, 0), (0, cfg.sigma - sigma_head))),
+        stats_a.lengths, stats_a.counts, stats_a.counters)
+    out = stats_a.merged_with(stats_b)
+    add_counters(out.counters, phase_b_records=int(jnp.sum(eligible)),
+                 phase_b_overflow=max(0, dropped))
+    if dropped > 0:
+        # survivor buffer too small -- rerun exact (counters expose the retry)
+        return sigma_split(tokens, cfg, sigma_head,
+                           survivor_frac=min(1.0, survivor_frac * 4))
+    return out
+
+
+def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
+        bucket_ids=None) -> NGramStats:
+    """Run a SUFFIX-sigma job.  ``tokens``: 1-D int32, PAD(0)-separated documents."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    bkt = None if bucket_ids is None else jnp.asarray(bucket_ids, jnp.uint32)
+    if mesh is None or mesh.size == 1:
+        (terms, flags, counts), counters = _single_device(tokens, cfg, bkt)
+        return NGramStats.from_dense(terms, flags, counts, cfg.tau, counters)
+
+    n_parts = mesh.shape[axis_name]
+    n = tokens.shape[0]
+    n_local = -(-n // n_parts)
+    pad = n_local * n_parts - n
+    tokens_p = jnp.pad(tokens, (0, pad)).reshape(n_parts, n_local)
+    bkt_p = (jnp.pad(bkt, (0, pad)).reshape(n_parts, n_local)
+             if bkt is not None else None)
+
+    capacity = max(8, int(cfg.capacity_factor * n_local / n_parts) + 1)
+    for attempt in range(6):  # overflow -> double capacity and re-run (see shuffle.py)
+        terms, flags, counts, stats = _distributed(
+            tokens_p, cfg, mesh, axis_name, bkt_p, capacity)
+        stats_np = np.asarray(stats)
+        overflow = int(stats_np[:, 2].max())
+        if overflow == 0:
+            break
+        capacity *= 2
+    else:
+        raise RuntimeError(f"shuffle overflow persisted at capacity {capacity}")
+
+    rec_bytes = packing.record_bytes(cfg.sigma, _vocab(cfg),
+                                     n_meta=1 if bkt is not None else 0)
+    counters = {
+        "map_records": int(stats_np[0, 0]),
+        "shuffle_records": int(stats_np[0, 1]),
+        "shuffle_bytes": int(stats_np[0, 1]) * rec_bytes,
+        "jobs": 1,
+        "overflow": overflow,
+        "capacity": capacity,
+        "retries": attempt,
+    }
+    out = None
+    terms, flags, counts = np.asarray(terms), np.asarray(flags), np.asarray(counts)
+    for p in range(n_parts):
+        part = NGramStats.from_dense(terms[p], flags[p], counts[p], cfg.tau,
+                                     counters if p == 0 else {})
+        out = part if out is None else out.merged_with(part)
+    return out

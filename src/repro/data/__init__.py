@@ -1,0 +1,3 @@
+from . import corpus, graph, loader, recsys, tokenizer
+
+__all__ = ["corpus", "graph", "loader", "recsys", "tokenizer"]

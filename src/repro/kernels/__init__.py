@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the SUFFIX-sigma hot spots (validated in interpret mode
+on CPU; see each module's docstring for the VMEM tiling rationale):
+
+  lcp_boundary   -- reducer inner loop (LCP + per-length boundary flags)
+  suffix_pack    -- map emit (windowed gather + bit pack, fused)
+  hash_partition -- shuffle partitioner (hash + histogram, fused)
+"""
+from . import ops, ref
+from .hash_partition import hash_partition
+from .lcp_boundary import lcp_boundary
+from .suffix_pack import suffix_pack
+
+__all__ = ["ops", "ref", "lcp_boundary", "suffix_pack", "hash_partition"]

@@ -1,0 +1,28 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU they compile to
+Mosaic.  ``INTERPRET`` flips automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from .hash_partition import hash_partition as _hash_partition
+from .lcp_boundary import lcp_boundary as _lcp_boundary
+from .suffix_pack import suffix_pack as _suffix_pack
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def lcp_boundary(sorted_terms, *, block_rows: int = 512):
+    return _lcp_boundary(sorted_terms, block_rows=block_rows, interpret=INTERPRET)
+
+
+def suffix_pack(tokens, *, sigma: int, vocab_size: int, block: int = 1024):
+    return _suffix_pack(tokens, sigma=sigma, vocab_size=vocab_size, block=block,
+                        interpret=INTERPRET)
+
+
+def hash_partition(keys, valid, *, n_parts: int, block: int = 4096):
+    return _hash_partition(keys, valid, n_parts=n_parts, block=block,
+                           interpret=INTERPRET)

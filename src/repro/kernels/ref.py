@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce.shuffle import hash_u32
+
+
+def lcp_boundary_ref(sorted_terms: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(lcp [N], flags [N, L]) of a lexicographically sorted int32 matrix."""
+    prev = jnp.roll(sorted_terms, 1, axis=0)
+    eq = (sorted_terms == prev).astype(jnp.int32)
+    lcp = jnp.sum(jnp.cumprod(eq, axis=1), axis=1).at[0].set(0)
+    n, length = sorted_terms.shape
+    lengths = jnp.arange(1, length + 1, dtype=jnp.int32)
+    flags = (lcp[:, None] < lengths[None, :]) & (sorted_terms != 0)
+    return lcp.astype(jnp.int32), flags
+
+
+def suffix_pack_ref(tokens: jax.Array, *, sigma: int, vocab_size: int) -> jax.Array:
+    """Packed sigma-truncated suffix lanes [N, n_lanes] of a PAD-separated stream."""
+    n = tokens.shape[0]
+    padded = jnp.concatenate([tokens, jnp.zeros((sigma,), tokens.dtype)])
+    idx = jnp.arange(n)[:, None] + jnp.arange(sigma)[None, :]
+    w = padded[idx]
+    keep = jnp.cumprod((w != 0).astype(jnp.int32), axis=1)
+    return packing.pack_terms((w * keep).astype(jnp.int32), vocab_size=vocab_size)
+
+
+def hash_partition_ref(keys: jax.Array, valid: jax.Array,
+                       n_parts: int) -> tuple[jax.Array, jax.Array]:
+    """(partition ids [N] with n_parts for invalid, histogram [n_parts])."""
+    p = (hash_u32(keys) % jnp.uint32(n_parts)).astype(jnp.int32)
+    p = jnp.where(valid, p, n_parts)
+    hist = jnp.sum(jax.nn.one_hot(p, n_parts + 1, dtype=jnp.int32), axis=0)[:n_parts]
+    return p, hist

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes and record memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun_results
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the device
+count at first init); nothing else in the repo sets it globally.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402  (registers all archs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True) -> dict:
+    ad = configs.get(arch)
+    sd = ad.shapes[shape]
+    rec: dict = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if multi_pod else "16x16"}
+    if sd.skip_reason:
+        rec["status"] = "skipped"
+        rec["reason"] = sd.skip_reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = ad.build_cell(ad.make(), sd, mesh)
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        correction = None
+        if cell.scan_probe is not None:
+            fn, args, in_sh, trips = cell.scan_probe
+            body_c = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+            correction = (body_c, trips)
+        rl = roofline.analyze(compiled, chips=mesh.size,
+                              model_flops=cell.model_flops, correction=correction)
+        rec["roofline"] = rl.to_dict()
+        rec["status"] = "ok"
+        rec["kind"] = cell.kind
+        rec["notes"] = cell.notes
+    if verbose:
+        r = rec["roofline"]
+        print(f"  [{rec['mesh']}] {arch}/{shape}: compile {rec['compile_s']}s  "
+              f"bottleneck={r['bottleneck']}  "
+              f"t={r['step_time_s']*1e3:.2f}ms  "
+              f"roofline_frac={r['roofline_fraction']:.3f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--include-ngram", action="store_true",
+                    help="also dry-run the paper's own n-gram pipeline cells")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(exist_ok=True)
+    if args.all:
+        cells = [(a, s) for a in configs.ASSIGNED for s in configs.get(a).shapes]
+        if args.include_ngram:
+            cells += [("ngram-suffix-sigma", s)
+                      for s in configs.get("ngram-suffix-sigma").shapes]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}".replace(
+                "/", "_").replace(".", "_")
+            fpath = outdir / f"{tag}.json"
+            if fpath.exists():
+                rec = json.loads(fpath.read_text())
+                print(f"  [cached] {arch}/{shape} "
+                      f"{'2x16x16' if multi else '16x16'}: {rec['status']}")
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_fail += rec["status"] == "failed"
+                continue
+            try:
+                rec = run_cell(arch, shape, multi)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi else "16x16",
+                       "status": "failed", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"  FAILED {arch}/{shape}: {e}")
+            fpath.write_text(json.dumps(rec, indent=1))
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_fail += rec["status"] == "failed"
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

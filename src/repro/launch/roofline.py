@@ -1,0 +1,154 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute_s    = HLO_FLOPs / (chips * 197 TF/s)
+  memory_s     = HLO_bytes / (chips * 819 GB/s)
+  collective_s = collective operand bytes / (chips * 50 GB/s)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device numbers on the
+SPMD-partitioned module).  Collective bytes are NOT in cost_analysis: we parse the
+compiled HLO text and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+
+Scan correction (verified empirically, DESIGN.md SS5): XLA counts a while/scan body
+ONCE; scanned-layer models therefore add (L-1) x the separately-compiled body cost.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  %x = bf16[16,128,1024]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?:[a-z0-9_]+)\[[^\]]*\][^\s]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(pred|[subf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of result-shape bytes per collective kind (result size == data moved per
+    device for gather/all-to-all; for reduce ops it equals operand size)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = None
+        for kind in _COLLECTIVES:
+            # match op name at the assignment: "... = TYPE[SHAPE] kind("
+            if f" {kind}(" in stripped or f"{kind}-start(" in stripped:
+                m = kind
+                break
+        if m is None:
+            continue
+        lhs = stripped.split("=")[0:1]
+        # parse the first shape on the line (the result shape)
+        sm = _SHAPE_RE.search(stripped)
+        if not sm:
+            continue
+        out[m] += _shape_bytes(sm.group(1), sm.group(2))
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    chips: int
+    model_flops: float = 0.0
+    collective_detail: dict = field(default_factory=dict)
+
+    # NOTE: cost_analysis numbers are PER-DEVICE on the SPMD-partitioned module
+    # (verified: per-chip flops x chips ~ 6ND for dense LMs).  The spec's
+    # "HLO_FLOPs / (chips * peak)" with global HLO_FLOPs is identical to
+    # per-chip / peak, which is what we compute.
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.bytes_collective / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound is the sum; perfectly-overlapped lower bound is
+        the max.  We report the max (roofline convention)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs: catches remat / redundancy waste."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-achievable fraction of peak at the modeled step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops, "bytes_per_chip": self.bytes_hbm,
+            "collective_bytes_per_chip": self.bytes_collective,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0,
+            correction: tuple | None = None) -> Roofline:
+    """correction: (body_compiled, extra_trips) -- adds extra_trips x the scan-body
+    cost (cost_analysis counts loop bodies once)."""
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+    if correction is not None:
+        body, trips = correction
+        bcost = body.cost_analysis()
+        flops += trips * float(bcost.get("flops", 0.0))
+        bts += trips * float(bcost.get("bytes accessed", 0.0))
+        bcoll = collective_bytes(body.as_text())
+        cbytes += trips * float(sum(v for k, v in bcoll.items() if k != "count"))
+        coll = {k: coll.get(k, 0) + trips * bcoll.get(k, 0) for k in coll}
+    return Roofline(flops=flops, bytes_hbm=bts, bytes_collective=cbytes,
+                    chips=chips, model_flops=model_flops, collective_detail=coll)

@@ -1,0 +1,3 @@
+from . import pack, segment, shuffle, sort
+
+__all__ = ["pack", "segment", "shuffle", "sort"]

@@ -1,0 +1,87 @@
+"""Segmented reductions and run-length utilities.
+
+These are the data-parallel equivalent of the paper's streaming two-stack reducer:
+on a lexicographically sorted block of suffixes, every distinct prefix occupies a
+contiguous run, so "pop the stack and emit a count" becomes "detect run boundary and
+segment-sum the weights".  The same primitive backs the GNN message-passing scatter
+and the recsys EmbeddingBag (see DESIGN.md SS4).
+
+Correctness note: at prefix length l, a row whose suffix is shorter than l (PAD at
+position l-1) must not contribute to any length-l run, even though the cumulative
+boundary count would assign it a segment id -- hence the explicit ``valid`` mask.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+@jax.jit
+def lcp_lengths(sorted_terms: jax.Array) -> jax.Array:
+    """Longest-common-prefix length of each row with the previous row.
+
+    sorted_terms: [N, L] int32 (rows lexicographically sorted).  Returns [N] int32,
+    row 0 gets lcp 0.  Pure-jnp reference; the fused VPU version lives in
+    ``repro.kernels.lcp_boundary``.
+    """
+    prev = jnp.roll(sorted_terms, 1, axis=0)
+    eq = (sorted_terms == prev).astype(jnp.int32)
+    lcp = jnp.sum(jnp.cumprod(eq, axis=1), axis=1)
+    return lcp.at[0].set(0)
+
+
+@jax.jit
+def boundary_flags(sorted_terms: jax.Array, lcp: jax.Array) -> jax.Array:
+    """new_prefix flags [N, L]: flags[i, l-1] == True iff the length-l prefix of row i
+    starts a new run (and the row actually has length >= l, i.e. no PAD at l-1)."""
+    n, length = sorted_terms.shape
+    lengths = jnp.arange(1, length + 1, dtype=jnp.int32)
+    valid = sorted_terms != 0  # PAD-aware: suffix shorter than l contributes nothing
+    return (lcp[:, None] < lengths[None, :]) & valid
+
+
+@partial(jax.jit, static_argnames=("max_segments",))
+def run_counts(flags: jax.Array, valid: jax.Array, weights: jax.Array,
+               max_segments: int) -> jax.Array:
+    """Per-(row, length) run totals.
+
+    flags : [N, L] boundary flags (from :func:`boundary_flags`)
+    valid : [N, L] row has length >= l (``sorted_terms != 0``)
+    weights: [N] per-row multiplicities (0 for padding rows)
+
+    Returns counts [N, L]: at boundary positions, the total weight of the run (the
+    collection frequency of that prefix); 0 elsewhere.
+    """
+
+    def per_length(fl, va):
+        seg = jnp.maximum(jnp.cumsum(fl.astype(jnp.int32)) - 1, 0)  # [N] run ids
+        contrib = jnp.where(va, weights, 0)
+        totals = jax.ops.segment_sum(contrib, seg, num_segments=max_segments)
+        return jnp.where(fl, totals[seg], 0)
+
+    return jax.vmap(per_length, in_axes=(1, 1), out_axes=1)(flags, valid)
+
+
+@partial(jax.jit, static_argnames=("max_segments",))
+def run_counts_matrix(flags: jax.Array, valid: jax.Array, weights: jax.Array,
+                      max_segments: int) -> jax.Array:
+    """Like :func:`run_counts` but with bucketed weights [N, B] (e.g. per-year counts
+    for the time-series extension).  Returns [N, L, B]."""
+
+    def per_length(fl, va):
+        seg = jnp.maximum(jnp.cumsum(fl.astype(jnp.int32)) - 1, 0)
+        contrib = jnp.where(va[:, None], weights, 0)
+        totals = jax.ops.segment_sum(contrib, seg, num_segments=max_segments)
+        return jnp.where(fl[:, None], totals[seg], 0)
+
+    return jax.vmap(per_length, in_axes=(1, 1), out_axes=1)(flags, valid)

@@ -1,0 +1,34 @@
+"""Packed multi-key lexicographic sort -- the MapReduce "sort by key" phase.
+
+Hadoop sorts map outputs with a user comparator (the paper supplies a
+reverse-lexicographic one so the streaming reducer can emit early).  The parallel
+reducer (``repro.mapreduce.segment``) only needs *contiguity* of equal prefixes, which
+any lexicographic order gives, so we use plain ascending order on the packed lanes:
+``jax.lax.sort`` with ``num_keys = n_lanes`` performs a lexicographic sort in
+``n_lanes`` passes -- bit packing (``repro.mapreduce.pack``) is what keeps that pass
+count low (the beyond-paper optimization logged in EXPERIMENTS.md SSPerf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_records(records: jax.Array, n_keys: int) -> jax.Array:
+    """Sort record rows [N, W] lexicographically by their first ``n_keys`` lanes.
+
+    The remaining lanes (weight / meta) ride along.  Stable order among equal keys is
+    irrelevant for counting.
+    """
+    n, w = records.shape
+    cols = [records[:, i] for i in range(w)]
+    out = jax.lax.sort(cols, num_keys=n_keys, is_stable=False)
+    return jnp.stack(out, axis=1)
+
+
+def sort_with_payload(keys: jax.Array, payloads: list[jax.Array]) -> tuple[jax.Array, list[jax.Array]]:
+    """Sort [N, K] key matrix lexicographically, carrying payload arrays [N, ...]."""
+    n, k = keys.shape
+    cols = [keys[:, i] for i in range(k)]
+    out = jax.lax.sort(cols + list(payloads), num_keys=k, is_stable=False)
+    return jnp.stack(out[:k], axis=1), list(out[k:])

@@ -1,0 +1,129 @@
+"""Shared neural layers: norms, RoPE, attention variants (GQA / SWA / MLA),
+SwiGLU.  Everything is a pure function over explicit parameter pytrees; sharding is
+applied from outside via pjit in_shardings (GSPMD propagates through these ops).
+
+Attention memory note: prefill at 32k would materialize [B, H, S, S] scores; the
+``q_chunk`` knob splits queries into a statically unrolled python loop (NOT lax.scan,
+so XLA cost_analysis still counts every chunk -- see DESIGN.md SS5) with exact
+softmax per chunk, bounding the live score block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, d]; positions: [..., S] int32.
+
+    The angle table is computed in f32 but cast to x.dtype BEFORE the rotation:
+    otherwise the whole rotated tensor exists in f32 and XLA hoists that copy into
+    the scan's saved stacks (the f32 KV-cache blowup diagnosed in EXPERIMENTS.md
+    SSPerf H1 it-3 / dry-run notes)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs         # [..., S, d/2]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _mask(q_pos, k_pos, window):
+    m = k_pos[None, :] <= q_pos[:, None]                 # causal
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window    # sliding window
+    return m
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  q_positions: jax.Array, k_positions: jax.Array,
+                  window: int | None = None, q_chunk: int = 0) -> jax.Array:
+    """Grouped-query attention.  q: [B, S, H, d]; k,v: [B, T, KV, d]; H % KV == 0.
+    Returns [B, S, H, dv].  q_chunk > 0 processes queries in unrolled chunks.
+
+    KV heads are repeated up to H (broadcast view) rather than reshaping q into a
+    (KV, G) split: the single H dim stays shardable under tensor parallelism (a
+    (KV, G) factorization of e.g. H=32 cannot be 16-way sharded and forces GSPMD to
+    all-gather the activations -- measured as a 100+ GB/device temp blowup in the
+    dry-run before this fix; see EXPERIMENTS.md SSPerf)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                       # MLA: value dim may differ from key dim
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)       # [B, T, H, d]
+        v = jnp.repeat(v, g, axis=2)
+    scale = d ** -0.5
+
+    def block(qc, qpos_c):
+        scores = jnp.einsum("bshd,bthd->bhst", qc, k).astype(jnp.float32) * scale
+        m = _mask(qpos_c, k_positions, window)
+        scores = jnp.where(m[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", p, v)
+
+    if q_chunk and s > q_chunk:
+        assert s % q_chunk == 0
+        outs = [block(q[:, i:i + q_chunk], q_positions[i:i + q_chunk])
+                for i in range(0, s, q_chunk)]
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = block(q, q_positions)
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     valid: jax.Array) -> jax.Array:
+    """One-token decode vs a cache.  q: [B, H, d]; caches: [B, T, KV, d];
+    valid: [T] or [B, T] bool marking live cache slots.  Returns [B, H, d]."""
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    if g > 1:
+        k_cache = jnp.repeat(k_cache, g, axis=2)
+        v_cache = jnp.repeat(v_cache, g, axis=2)
+    scores = jnp.einsum("bhd,bthd->bht", q, k_cache).astype(jnp.float32)
+    scores *= d ** -0.5
+    v_mask = valid if valid.ndim == 2 else valid[None]
+    scores = jnp.where(v_mask[:, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bht,bthd->bhd", p, v_cache)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    return jnp.einsum("...f,fd->...d", gate * jnp.einsum("...d,df->...f", x, w_up),
+                      w_down)
+
+
+def cross_entropy_loss(x_final: jax.Array, lm_head: jax.Array,
+                       labels: jax.Array, n_chunks: int = 4) -> jax.Array:
+    """Chunked softmax cross entropy: never materializes [B, S, V] in one piece.
+    x_final: [B, S, d]; lm_head: [d, V]; labels: [B, S] int32."""
+    b, s, d = x_final.shape
+    n_chunks = max(1, min(n_chunks, s))
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    total = 0.0
+    for i in range(n_chunks):
+        xc = x_final[:, i * cs:(i + 1) * cs]
+        lc = labels[:, i * cs:(i + 1) * cs]
+        logits = jnp.einsum("bsd,dv->bsv", xc, lm_head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(logz - gold)
+    return total / (b * s)

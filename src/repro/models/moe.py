@@ -1,0 +1,228 @@
+"""Mixture-of-Experts FFN (token-choice top-k) with expert parallelism.
+
+Baseline dispatch is GShard-style dense one-hot einsum (t5x lineage): robust under
+grad + scan + GSPMD, experts sharded over the `model` axis, capacity-factor bounded.
+The combine/dispatch tensors are the FLOPs/memory overhead this formulation pays;
+the sort-based dispatch (our n-gram shuffle's ``bucketize`` -- the paper's
+partitioner!) is the beyond-paper optimization evaluated in EXPERIMENTS.md SSPerf.
+
+Covers both assigned MoE archs:
+  mixtral-8x7b      : 8 experts, top-2, no shared experts
+  deepseek-moe-16b  : 64 fine-grained routed experts, top-6, +2 shared experts
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    dispatch: str = "einsum"      # einsum (GShard) | sort (bucketized, SSPerf)
+    # distributed execution (set by the cell builder; None = single-device path):
+    mesh: Any = None
+    dp_axes: Any = None           # batch axes ('pod','data') / 'data' / None
+    tp_axis: str = "model"
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(self.capacity_factor * tokens_per_group * self.top_k / self.n_experts)
+        return max(4, -(-c // 4) * 4)
+
+
+def router_topk(x, w_router, cfg: MoEConfig):
+    """Returns (expert ids [T, k], gates [T, k], logits [T, E]) for tokens [T, d]."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(gates_all, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return ids, gates.astype(x.dtype), logits
+
+
+def load_balance_loss(logits: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * <fraction routed> . <mean router prob>."""
+    probs = jax.nn.softmax(logits, axis=-1).mean(0)
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    return n_experts * jnp.sum(frac * probs)
+
+
+def _dispatch_einsum(x, ids, gates, cfg: MoEConfig, capacity):
+    """GShard dense dispatch: one-hot [T, E, C] combine/dispatch tensors."""
+    t = x.shape[0]
+    e = cfg.n_experts
+    # position of each (token, k) claim within its expert's capacity
+    claims = jax.nn.one_hot(ids, e, dtype=jnp.int32)           # [T, k, E]
+    pos = jnp.cumsum(claims.reshape(t * cfg.top_k, e), axis=0).reshape(
+        t, cfg.top_k, e) - 1
+    pos = jnp.sum(pos * claims, axis=-1)                       # [T, k]
+    keep = pos < capacity
+    disp = (jax.nn.one_hot(ids, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                             dtype=x.dtype)[..., None, :])     # [T, k, E, C+1]
+    disp = disp[..., :capacity]
+    combine = jnp.einsum("tkec,tk->tec", disp, gates)          # [T, E, C]
+    dispatch = jnp.sum(disp, axis=1)                           # [T, E, C]
+    return dispatch, combine
+
+
+def _dispatch_indices(t: int, ids, gates, cfg: MoEConfig, capacity):
+    """Bucketized dispatch indices (the n-gram shuffle partitioner reused as MoE
+    dispatch): token index + gate per [E, C] slot; no [T, E, C] tensors.
+    slot_token == t marks an empty slot."""
+    e = cfg.n_experts
+    flat_ids = ids.reshape(-1)                                   # [T*k]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(sorted_ids, length=e)
+    offs = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    within = jnp.arange(t * cfg.top_k) - offs[sorted_ids]
+    ok = within < capacity
+    slot = jnp.where(ok, sorted_ids * capacity + within, e * capacity)
+    tok_of_claim = order // cfg.top_k
+    slot_token = jnp.full((e * capacity + 1,), t, jnp.int32).at[slot].set(
+        tok_of_claim.astype(jnp.int32), mode="drop")[:-1]        # [E*C] -> token id
+    slot_gate = jnp.zeros((e * capacity + 1,), gates.dtype).at[slot].set(
+        gates.reshape(-1)[order], mode="drop")[:-1]
+    return slot_token, slot_gate
+
+
+def _dispatch_sort(x, ids, gates, cfg: MoEConfig, capacity):
+    slot_token, slot_gate = _dispatch_indices(x.shape[0], ids, gates, cfg, capacity)
+    x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)])
+    expert_in = x_pad[slot_token].reshape(cfg.n_experts, capacity, x.shape[-1])
+    return expert_in, slot_token, slot_gate
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    params: router [d, E]; wg/wu [E, d, ff_e]; wo [E, ff_e, d];
+            (shared) sg/su [d, ff_s]; so [ff_s, d].
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    capacity = cfg.capacity(t)
+    ids, gates, logits = router_topk(xt, params["router"], cfg)
+    aux = load_balance_loss(logits, ids, cfg.n_experts)
+
+    if cfg.dispatch == "einsum":
+        dispatch, combine = _dispatch_einsum(xt, ids, gates, cfg, capacity)
+        ein = jnp.einsum("tec,td->ecd", dispatch, xt)            # [E, C, d]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, params["wg"]))
+        h = h * jnp.einsum("ecd,edf->ecf", ein, params["wu"])
+        eo = jnp.einsum("ecf,efd->ecd", h, params["wo"])         # [E, C, d]
+        y = jnp.einsum("tec,ecd->td", combine, eo)
+    else:
+        expert_in, slot_token, slot_gate = _dispatch_sort(xt, ids, gates, cfg, capacity)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["wg"]))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["wu"])
+        eo = jnp.einsum("ecf,efd->ecd", h, params["wo"]).reshape(-1, d)
+        eo = eo * slot_gate[:, None]
+        y = jnp.zeros((t + 1, d), x.dtype).at[slot_token].add(eo)[:t]
+
+    if cfg.n_shared:
+        y = y + swiglu(xt, params["sg"], params["su"], params["so"])
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_sharded(x: jax.Array, params: dict, cfg: MoEConfig
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Distributed MoE via shard_map: per-device sort-based dispatch (the n-gram
+    shuffle's ``bucketize`` reused as expert dispatch) + expert/ff-sharded FFN +
+    one psum over the tensor axis.
+
+    Two expert layouts, chosen by divisibility (configs/base.py sets pspecs to
+    match):
+      * EP  (E %% tp == 0): each tp-rank owns E/tp experts, gathers only the
+        tokens routed to them (capacity-bounded), computes, scatter-adds its
+        partial [T_local, d], psum over tp.
+      * ffTP (E < tp, e.g. mixtral 8 experts on tp=16): every rank holds all
+        experts but only d_ff/tp of each; partial outputs psum over tp.
+
+    vs the GShard einsum dispatch this removes the O(T*E*C*d) one-hot einsums
+    entirely -- dispatch becomes O(T*k) integer work + O(E_local*C*d) gathers
+    (EXPERIMENTS.md SSPerf H1).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = cfg.mesh
+    tp = cfg.tp_axis
+    tp_size = mesh.shape[tp]
+    ep = cfg.n_experts % tp_size == 0
+    e_local = cfg.n_experts // tp_size if ep else cfg.n_experts
+    dp = cfg.dp_axes
+    x_spec = P(dp, None, None)
+    has_shared = cfg.n_shared > 0
+
+    def local(xl, router, wg, wu, wo, sg, su, so):
+        b_l, s, d = xl.shape
+        xt = xl.reshape(b_l * s, d)
+        t_l = xt.shape[0]
+        capacity = cfg.capacity(t_l)
+        ids, gates, logits = router_topk(xt, router, cfg)
+        aux = load_balance_loss(logits, ids, cfg.n_experts)
+        slot_token, slot_gate = _dispatch_indices(t_l, ids, gates, cfg, capacity)
+        if ep:  # this rank gathers only its own experts' tokens
+            rank = jax.lax.axis_index(tp)
+            slot_token = jax.lax.dynamic_slice_in_dim(
+                slot_token, rank * e_local * capacity, e_local * capacity, axis=0)
+            slot_gate = jax.lax.dynamic_slice_in_dim(
+                slot_gate, rank * e_local * capacity, e_local * capacity, axis=0)
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+        expert_in = x_pad[slot_token].reshape(e_local, capacity, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, wg))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, wu)
+        eo = jnp.einsum("ecf,efd->ecd", h, wo).reshape(-1, d)
+        eo = eo * slot_gate[:, None]
+        y = jnp.zeros((t_l + 1, d), xl.dtype).at[slot_token].add(eo)[:t_l]
+        if has_shared:
+            y = y + swiglu(xt, sg, su, so)          # ff_s sharded over tp
+        y = jax.lax.psum(y, tp)
+        axes = (tp,) + ((dp,) if isinstance(dp, str) else tuple(dp or ()))
+        aux = jax.lax.pmean(aux, axes)
+        return y.reshape(b_l, s, d), aux
+
+    if ep:
+        w_specs = (P(tp, None, None), P(tp, None, None), P(tp, None, None))
+    else:
+        w_specs = (P(None, None, tp), P(None, None, tp), P(None, tp, None))
+    s_specs = ((P(None, tp), P(None, tp), P(tp, None)) if has_shared
+               else (P(), P(), P()))
+    dummy = jnp.zeros((), x.dtype)
+    args = (x, params["router"], params["wg"], params["wu"], params["wo"],
+            params.get("sg", dummy), params.get("su", dummy),
+            params.get("so", dummy))
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, P()) + w_specs + s_specs,
+        out_specs=(x_spec, P()), check_vma=False)
+    return fn(*args)
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    k = jax.random.split(key, 7)
+    scale = d_model ** -0.5
+    p = {
+        "router": jax.random.normal(k[0], (d_model, cfg.n_experts), jnp.float32) * scale,
+        "wg": jax.random.normal(k[1], (cfg.n_experts, d_model, cfg.d_ff_expert), dtype) * scale,
+        "wu": jax.random.normal(k[2], (cfg.n_experts, d_model, cfg.d_ff_expert), dtype) * scale,
+        "wo": jax.random.normal(k[3], (cfg.n_experts, cfg.d_ff_expert, d_model), dtype)
+              * cfg.d_ff_expert ** -0.5,
+    }
+    if cfg.n_shared:
+        ffs = cfg.d_ff_shared or cfg.d_ff_expert * cfg.n_shared
+        p["sg"] = jax.random.normal(k[4], (d_model, ffs), dtype) * scale
+        p["su"] = jax.random.normal(k[5], (d_model, ffs), dtype) * scale
+        p["so"] = jax.random.normal(k[6], (ffs, d_model), dtype) * ffs ** -0.5
+    return p

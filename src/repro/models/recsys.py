@@ -1,0 +1,305 @@
+"""The four assigned recsys architectures on a shared embedding substrate.
+
+EmbeddingBag is built from ``jnp.take`` + ``segment_sum`` (JAX has no native one) --
+the same gather + segment-reduce primitive as the n-gram reducer.  Tables are
+row-sharded over the `model` mesh axis (vocab sharding); GSPMD turns the gather into
+a collective lookup.
+
+  bst        : Behavior Sequence Transformer (arXiv:1905.06874)
+  autoint    : self-attention feature interaction (arXiv:1810.11921)
+  two-tower  : sampled-softmax retrieval (YouTube, RecSys'19)
+  xdeepfm    : Compressed Interaction Network + DNN (arXiv:1803.05170)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+# ----------------------------------------------------------------- substrate
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """[V, D] table, integer ids [...]; out [..., D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
+                  num_segments: int, mode: str = "sum") -> jax.Array:
+    """Multi-hot bag reduce: gather rows then segment-reduce (no nn.EmbeddingBag in
+    JAX -- this IS the implementation)."""
+    rows = jnp.take(table, ids, axis=0)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+        c = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), segment_ids,
+                                num_segments=num_segments)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+    raise ValueError(mode)
+
+
+def mlp(x, layers, act=jax.nn.relu, final_act=False):
+    for i, (w, b) in enumerate(layers):
+        x = jnp.einsum("...d,dh->...h", x, w) + b
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_mlp(key, dims, dtype):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [(jax.random.normal(k, (dims[i], dims[i + 1]), dtype) * dims[i] ** -0.5,
+             jnp.zeros((dims[i + 1],), dtype))
+            for i, k in enumerate(keys)]
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ------------------------------------------------------------------------ BST
+@dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    item_vocab: int = 4_000_000
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple = (1024, 512, 256)
+    dtype: object = jnp.float32
+
+
+def bst_init(key, cfg: BSTConfig):
+    keys = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = jax.random.split(keys[2 + i], 6)
+        blocks.append({
+            "wq": jax.random.normal(k[0], (d, d), cfg.dtype) * d ** -0.5,
+            "wk": jax.random.normal(k[1], (d, d), cfg.dtype) * d ** -0.5,
+            "wv": jax.random.normal(k[2], (d, d), cfg.dtype) * d ** -0.5,
+            "wo": jax.random.normal(k[3], (d, d), cfg.dtype) * d ** -0.5,
+            "ff1": jax.random.normal(k[4], (d, 4 * d), cfg.dtype) * d ** -0.5,
+            "ff2": jax.random.normal(k[5], (4 * d, d), cfg.dtype) * (4 * d) ** -0.5,
+            "ln1": jnp.ones((d,), cfg.dtype), "ln2": jnp.ones((d,), cfg.dtype),
+        })
+    flat_in = (cfg.seq_len + 1) * d
+    return {
+        "item_embed": jax.random.normal(keys[0], (cfg.item_vocab, d), cfg.dtype) * 0.01,
+        "pos_embed": jax.random.normal(keys[1], (cfg.seq_len + 1, d), cfg.dtype) * 0.01,
+        "blocks": blocks,
+        "mlp": init_mlp(keys[-1], (flat_in,) + cfg.mlp_dims + (1,), cfg.dtype),
+    }
+
+
+def bst_forward(params, batch, cfg: BSTConfig):
+    hist = embedding_lookup(params["item_embed"], batch["history"])   # [B, S, d]
+    tgt = embedding_lookup(params["item_embed"], batch["target"])     # [B, d]
+    x = jnp.concatenate([hist, tgt[:, None]], axis=1) + params["pos_embed"][None]
+    b, s, d = x.shape
+    h_heads, dh = cfg.n_heads, d // cfg.n_heads
+    for blk in params["blocks"]:
+        hx = rms_norm(x, blk["ln1"])
+        q = jnp.einsum("bsd,de->bse", hx, blk["wq"]).reshape(b, s, h_heads, dh)
+        k = jnp.einsum("bsd,de->bse", hx, blk["wk"]).reshape(b, s, h_heads, dh)
+        v = jnp.einsum("bsd,de->bse", hx, blk["wv"]).reshape(b, s, h_heads, dh)
+        sc = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * dh ** -0.5
+        p = jax.nn.softmax(sc, -1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", p, v).reshape(b, s, d)
+        x = x + jnp.einsum("bsd,de->bse", o, blk["wo"])
+        hx = rms_norm(x, blk["ln2"])
+        x = x + jnp.einsum("bsf,fd->bsd", jax.nn.relu(
+            jnp.einsum("bsd,df->bsf", hx, blk["ff1"])), blk["ff2"])
+    return mlp(x.reshape(b, s * d), params["mlp"])[:, 0]
+
+
+def bst_loss(params, batch, cfg: BSTConfig):
+    logits = bst_forward(params, batch, cfg)
+    loss = bce_loss(logits, batch["labels"])
+    return loss, {"bce": loss}
+
+
+# -------------------------------------------------------------------- AutoInt
+@dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    field_vocab: int = 1_000_000       # per-field vocab (Criteo-scale rows total)
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    n_dense: int = 13
+    dtype: object = jnp.float32
+
+
+def autoint_init(key, cfg: AutoIntConfig):
+    keys = jax.random.split(key, cfg.n_attn_layers + 3)
+    layers = []
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        k = jax.random.split(keys[i], 4)
+        layers.append({
+            "wq": jax.random.normal(k[0], (d_in, cfg.d_attn), cfg.dtype) * d_in ** -0.5,
+            "wk": jax.random.normal(k[1], (d_in, cfg.d_attn), cfg.dtype) * d_in ** -0.5,
+            "wv": jax.random.normal(k[2], (d_in, cfg.d_attn), cfg.dtype) * d_in ** -0.5,
+            "wres": jax.random.normal(k[3], (d_in, cfg.d_attn), cfg.dtype) * d_in ** -0.5,
+        })
+        d_in = cfg.d_attn
+    n_fields = cfg.n_sparse + 1                       # +1 dense-projection field
+    return {
+        "tables": jax.random.normal(keys[-3], (cfg.n_sparse, cfg.field_vocab,
+                                               cfg.embed_dim), cfg.dtype) * 0.01,
+        "dense_proj": jax.random.normal(keys[-2], (cfg.n_dense, cfg.embed_dim),
+                                        cfg.dtype) * cfg.n_dense ** -0.5,
+        "layers": layers,
+        "head": jax.random.normal(keys[-1], (n_fields * d_in, 1), cfg.dtype)
+                * (n_fields * d_in) ** -0.5,
+    }
+
+
+def autoint_forward(params, batch, cfg: AutoIntConfig):
+    ids = batch["sparse_ids"]                              # [B, F]
+    b = ids.shape[0]
+    emb = jax.vmap(lambda t, i: jnp.take(t, i, axis=0),    # per-field table gather
+                   in_axes=(0, 1), out_axes=1)(params["tables"], ids)
+    dense_f = jnp.einsum("bk,kd->bd", batch["dense"], params["dense_proj"])
+    x = jnp.concatenate([emb, dense_f[:, None]], axis=1)   # [B, F+1, d]
+    for pl in params["layers"]:
+        q = jnp.einsum("bfd,de->bfe", x, pl["wq"])
+        k = jnp.einsum("bfd,de->bfe", x, pl["wk"])
+        v = jnp.einsum("bfd,de->bfe", x, pl["wv"])
+        sc = jnp.einsum("bfe,bge->bfg", q, k).astype(jnp.float32)
+        sc *= (x.shape[-1]) ** -0.5
+        p = jax.nn.softmax(sc, -1).astype(x.dtype)
+        x = jax.nn.relu(jnp.einsum("bfg,bge->bfe", p, v)
+                        + jnp.einsum("bfd,de->bfe", x, pl["wres"]))
+    return jnp.einsum("bf,fo->bo", x.reshape(b, -1), params["head"])[:, 0]
+
+
+def autoint_loss(params, batch, cfg: AutoIntConfig):
+    loss = bce_loss(autoint_forward(params, batch, cfg), batch["labels"])
+    return loss, {"bce": loss}
+
+
+# ------------------------------------------------------------------ two-tower
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    item_vocab: int = 10_000_000
+    embed_dim: int = 256
+    user_feat: int = 256
+    tower_dims: tuple = (1024, 512, 256)
+    dtype: object = jnp.float32
+
+
+def twotower_init(key, cfg: TwoTowerConfig):
+    k = jax.random.split(key, 4)
+    return {
+        "item_embed": jax.random.normal(k[0], (cfg.item_vocab, cfg.embed_dim),
+                                        cfg.dtype) * 0.01,
+        "user_mlp": init_mlp(k[1], (cfg.user_feat,) + cfg.tower_dims, cfg.dtype),
+        "item_mlp": init_mlp(k[2], (cfg.embed_dim,) + cfg.tower_dims, cfg.dtype),
+    }
+
+
+def twotower_embed(params, batch, cfg: TwoTowerConfig):
+    u = mlp(batch["user"].astype(cfg.dtype), params["user_mlp"])
+    i = mlp(embedding_lookup(params["item_embed"], batch["pos_item"]),
+            params["item_mlp"])
+    u = u / jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-6)
+    i = i / jnp.linalg.norm(i, axis=-1, keepdims=True).clip(1e-6)
+    return u, i
+
+
+def twotower_loss(params, batch, cfg: TwoTowerConfig, temp: float = 0.05):
+    """In-batch sampled softmax (each row's positive vs other rows' items)."""
+    u, i = twotower_embed(params, batch, cfg)
+    logits = (u @ i.T).astype(jnp.float32) / temp
+    labels = jnp.arange(u.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"softmax": loss}
+
+
+def twotower_score_candidates(params, batch, cfg: TwoTowerConfig):
+    """retrieval_cand shape: one query [1, F] against candidate ids [N]."""
+    u = mlp(batch["user"].astype(cfg.dtype), params["user_mlp"])
+    c = mlp(embedding_lookup(params["item_embed"], batch["candidates"]),
+            params["item_mlp"])
+    u = u / jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-6)
+    c = c / jnp.linalg.norm(c, axis=-1, keepdims=True).clip(1e-6)
+    return jnp.einsum("qd,nd->qn", u, c)
+
+
+# -------------------------------------------------------------------- xDeepFM
+@dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    field_vocab: int = 1_000_000
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_dims: tuple = (400, 400)
+    n_dense: int = 13
+    dtype: object = jnp.float32
+
+
+def xdeepfm_init(key, cfg: XDeepFMConfig):
+    keys = jax.random.split(key, len(cfg.cin_layers) + 5)
+    f0 = cfg.n_sparse
+    cin = []
+    h_prev = f0
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(jax.random.normal(keys[i], (h, h_prev * f0), cfg.dtype)
+                   * (h_prev * f0) ** -0.5)
+        h_prev = h
+    flat = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "tables": jax.random.normal(keys[-5], (cfg.n_sparse, cfg.field_vocab,
+                                               cfg.embed_dim), cfg.dtype) * 0.01,
+        "linear": jax.random.normal(keys[-4], (cfg.n_sparse, cfg.field_vocab),
+                                    cfg.dtype) * 0.01,
+        "cin": cin,
+        "cin_head": jax.random.normal(keys[-3], (sum(cfg.cin_layers), 1),
+                                      cfg.dtype) * 0.05,
+        "mlp": init_mlp(keys[-2], (flat,) + cfg.mlp_dims + (1,), cfg.dtype),
+    }
+
+
+def xdeepfm_forward(params, batch, cfg: XDeepFMConfig):
+    ids = batch["sparse_ids"]                                   # [B, F]
+    b = ids.shape[0]
+    x0 = jax.vmap(lambda t, i: jnp.take(t, i, axis=0),
+                  in_axes=(0, 1), out_axes=1)(params["tables"], ids)  # [B, F, D]
+    # CIN: x^{k}_h = W^k_h . vec(x^{k-1} (outer) x^0) per embedding dim
+    xs = []
+    xk = x0
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bfd->bhfd", xk, x0)                 # [B, Hk-1, F, D]
+        z = z.reshape(b, -1, cfg.embed_dim)                     # [B, Hk-1*F, D]
+        xk = jnp.einsum("hm,bmd->bhd", w, z)                    # [B, Hk, D]
+        xs.append(jnp.sum(xk, axis=-1))                         # sum-pool over D
+    cin_logit = jnp.einsum("bh,ho->bo", jnp.concatenate(xs, -1),
+                           params["cin_head"])[:, 0]
+    lin = jax.vmap(lambda t, i: jnp.take(t, i, axis=0),
+                   in_axes=(0, 1), out_axes=1)(params["linear"], ids)
+    lin_logit = jnp.sum(lin, axis=1)
+    deep_in = jnp.concatenate([x0.reshape(b, -1), batch["dense"].astype(cfg.dtype)], -1)
+    deep_logit = mlp(deep_in, params["mlp"])[:, 0]
+    return cin_logit + lin_logit + deep_logit
+
+
+def xdeepfm_loss(params, batch, cfg: XDeepFMConfig):
+    loss = bce_loss(xdeepfm_forward(params, batch, cfg), batch["labels"])
+    return loss, {"bce": loss}

@@ -1,0 +1,363 @@
+"""Causal-LM transformer covering the five assigned LM architectures.
+
+One config, four structural switches:
+  attention kind : gqa (llama3 / phi3 / deepseek / mixtral) | mla (minicpm3)
+  window         : sliding-window attention (mixtral) -> bounded decode cache
+  moe            : None (dense) | MoEConfig (mixtral, deepseek-moe)
+  scan_layers    : lax.scan over stacked layer params (fast 512-way compiles; the
+                   roofline pass compiles the body separately for the trip-count
+                   correction, DESIGN.md SS5)
+
+Decode uses per-arch KV caches: GQA ring/linear cache, SWA ring buffer bounded by the
+window, MLA *absorbed* latent cache (rank-r ckv + shared rope key -- the actual
+memory story of MLA).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, cross_entropy_loss, decode_attention,
+                     gqa_attention, rms_norm, NEG_INF)
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    kind: str                    # "gqa" | "mla"
+    n_heads: int
+    n_kv: int
+    d_head: int
+    window: int | None = None
+    rope_theta: float = 10_000.0
+    # MLA dims (DeepSeek-V2 style):
+    q_lora: int = 0
+    kv_lora: int = 0
+    d_nope: int = 0
+    d_rope: int = 0
+    d_v: int = 0
+    # transparent head padding for TP (e.g. phi3's 40 heads on a 16-way axis pad
+    # to 48): padded heads are *masked to zero* before the output projection, so
+    # the function computed is exactly the n_heads-head model and padded params
+    # receive zero gradient.  Set by the cell builder; 0 = no padding.
+    pad_heads_to: int = 0
+
+    @property
+    def h_eff(self) -> int:
+        return max(self.n_heads, self.pad_heads_to)
+
+    @property
+    def kv_eff(self) -> int:
+        return self.h_eff // (self.n_heads // self.n_kv)
+
+    @property
+    def head_mask_needed(self) -> bool:
+        return self.h_eff != self.n_heads
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    d_ff: int
+    attn: AttentionConfig
+    moe: MoEConfig | None = None
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    q_chunk: int = 0             # unrolled query chunking for long prefill
+    loss_chunks: int = 8
+    remat: bool = True
+    scan_layers: bool = True
+    aux_loss_weight: float = 0.01
+    # batch-dim axis names for activation sharding constraints (set by the cell
+    # builder when lowering on a mesh; None on single-host runs).  Without the
+    # explicit constraint GSPMD follows the FSDP weight sharding and REPLICATES the
+    # batch -- a measured 100+GB/device temp blowup (EXPERIMENTS.md SSPerf).
+    shard_activations: Any = None
+
+
+def _constrain(x, cfg, spec_tail=(None, None)):
+    if cfg.shard_activations is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(cfg.shard_activations, *spec_tail))
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.attn.window is not None
+
+
+# ----------------------------------------------------------------------- params
+def _init_attn(key, cfg: LMConfig):
+    a, d = cfg.attn, cfg.d_model
+    k = jax.random.split(key, 8)
+    s = d ** -0.5
+    if a.kind == "gqa":
+        return {
+            "wq": jax.random.normal(k[0], (d, a.h_eff * a.d_head), cfg.dtype) * s,
+            "wk": jax.random.normal(k[1], (d, a.kv_eff * a.d_head), cfg.dtype) * s,
+            "wv": jax.random.normal(k[2], (d, a.kv_eff * a.d_head), cfg.dtype) * s,
+            "wo": jax.random.normal(k[3], (a.h_eff * a.d_head, d), cfg.dtype)
+                  * (a.n_heads * a.d_head) ** -0.5,
+        }
+    qd, rr = a.d_nope + a.d_rope, a.kv_lora
+    return {
+        "wdq": jax.random.normal(k[0], (d, a.q_lora), cfg.dtype) * s,
+        "wuq": jax.random.normal(k[1], (a.q_lora, a.h_eff * qd), cfg.dtype)
+               * a.q_lora ** -0.5,
+        "wdkv": jax.random.normal(k[2], (d, rr), cfg.dtype) * s,
+        "wukv": jax.random.normal(k[3], (rr, a.h_eff * (a.d_nope + a.d_v)),
+                                  cfg.dtype) * rr ** -0.5,
+        "wkr": jax.random.normal(k[4], (d, a.d_rope), cfg.dtype) * s,
+        "wo": jax.random.normal(k[5], (a.h_eff * a.d_v, d), cfg.dtype)
+              * (a.n_heads * a.d_v) ** -0.5,
+    }
+
+
+def _head_mask(a: AttentionConfig, out: jax.Array) -> jax.Array:
+    """Zero the padded heads' outputs: the computed function stays the exact
+    n_heads model and padded parameters get zero gradient."""
+    if not a.head_mask_needed:
+        return out
+    mask = (jnp.arange(a.h_eff) < a.n_heads).astype(out.dtype)
+    return out * mask[..., :, None]
+
+
+def _init_ffn(key, cfg: LMConfig):
+    if cfg.moe is not None:
+        return init_moe_params(key, cfg.d_model, cfg.moe, cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    k = jax.random.split(key, 3)
+    return {"wg": jax.random.normal(k[0], (d, f), cfg.dtype) * d ** -0.5,
+            "wu": jax.random.normal(k[1], (d, f), cfg.dtype) * d ** -0.5,
+            "wo": jax.random.normal(k[2], (f, d), cfg.dtype) * f ** -0.5}
+
+
+def init_params(key, cfg: LMConfig):
+    keys = jax.random.split(key, 4)
+
+    def one_layer(k):
+        ka, kf = jax.random.split(k)
+        p = {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+             "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+             "ffn": _init_ffn(kf, cfg)}
+        p.update(_init_attn(ka, cfg))
+        return p
+
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    layers = jax.vmap(one_layer)(layer_keys)        # stacked [L, ...]
+    return {
+        "embed": jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model),
+                                   cfg.dtype) * cfg.d_model ** -0.5,
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lm_head": jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size),
+                                     cfg.dtype) * cfg.d_model ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------- forward
+def _attn_block(pl, x, positions, cfg: LMConfig, collect_cache: bool):
+    a = cfg.attn
+    b, s, d = x.shape
+    if a.kind == "gqa":
+        q = jnp.einsum("bsd,dh->bsh", x, pl["wq"]).reshape(b, s, a.h_eff, a.d_head)
+        k = jnp.einsum("bsd,dh->bsh", x, pl["wk"]).reshape(b, s, a.kv_eff, a.d_head)
+        v = jnp.einsum("bsd,dh->bsh", x, pl["wv"]).reshape(b, s, a.kv_eff, a.d_head)
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+        out = gqa_attention(q, k, v, q_positions=positions, k_positions=positions,
+                            window=a.window, q_chunk=cfg.q_chunk)
+        out = _head_mask(a, out)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), pl["wo"])
+        cache = {"k": k, "v": v} if collect_cache else None
+        return out, cache
+    # --- MLA (non-absorbed form for train/prefill) ---
+    cq = jnp.einsum("bsd,dr->bsr", x, pl["wdq"])
+    q = jnp.einsum("bsr,rh->bsh", cq, pl["wuq"]).reshape(
+        b, s, a.h_eff, a.d_nope + a.d_rope)
+    qn, qr = q[..., : a.d_nope], q[..., a.d_nope:]
+    qr = apply_rope(qr, positions, a.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, pl["wdkv"])                     # latent cache
+    kv = jnp.einsum("bsr,rh->bsh", ckv, pl["wukv"]).reshape(
+        b, s, a.h_eff, a.d_nope + a.d_v)
+    kn, v = kv[..., : a.d_nope], kv[..., a.d_nope:]
+    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, pl["wkr"])[:, :, None, :],
+                    positions, a.rope_theta)                            # shared head
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, qn.shape[:3] + (a.d_rope,))], -1)
+    q_full = jnp.concatenate([qn, qr], -1)
+    out = gqa_attention(q_full, k, v, q_positions=positions, k_positions=positions,
+                        window=a.window, q_chunk=cfg.q_chunk)
+    out = _head_mask(a, out)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), pl["wo"])
+    cache = {"ckv": ckv, "kr": kr[:, :, 0, :]} if collect_cache else None
+    return out, cache
+
+
+def _ffn_block(pl, x, cfg: LMConfig):
+    fp = pl["ffn"]
+    if cfg.moe is not None:
+        if cfg.moe.mesh is not None:
+            from .moe import moe_ffn_sharded
+            return moe_ffn_sharded(x, fp, cfg.moe)
+        return moe_ffn(x, fp, cfg.moe)
+    from .layers import swiglu
+    return swiglu(x, fp["wg"], fp["wu"], fp["wo"]), jnp.float32(0)
+
+
+def forward(params, tokens, cfg: LMConfig, collect_cache: bool = False):
+    """tokens [B, S] -> (x_final [B, S, d], aux_loss, cache or None)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = _constrain(jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype), cfg)
+
+    def body(carry, pl):
+        x = _constrain(carry, cfg)
+        h, cache = _attn_block(pl, rms_norm(x, pl["ln1"], cfg.norm_eps), positions,
+                               cfg, collect_cache)
+        x = _constrain(x + h, cfg)
+        h, aux = _ffn_block(pl, rms_norm(x, pl["ln2"], cfg.norm_eps), cfg)
+        x = x + h
+        return x, (aux, cache) if collect_cache else aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body_fn, x, params["layers"])
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            pl = jax.tree.map(lambda a: a[i], params["layers"])
+            x, y = body_fn(x, pl)
+            ys.append(y)
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    if collect_cache:
+        aux, cache = ys
+    else:
+        aux, cache = ys, None
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(aux), cache
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    x, aux, _ = forward(params, batch["tokens"], cfg)
+    x = _constrain(x, cfg)
+    ce = cross_entropy_loss(x, params["lm_head"], batch["labels"], cfg.loss_chunks)
+    return ce + cfg.aux_loss_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------- serving
+def cache_len(cfg: LMConfig, max_seq: int) -> int:
+    w = cfg.attn.window
+    return min(max_seq, w) if w else max_seq
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    a = cfg.attn
+    t = cache_len(cfg, max_seq)
+    if a.kind == "mla":
+        return {"ckv": jnp.zeros((cfg.n_layers, batch, t, a.kv_lora), cfg.dtype),
+                "kr": jnp.zeros((cfg.n_layers, batch, t, a.d_rope), cfg.dtype)}
+    return {"k": jnp.zeros((cfg.n_layers, batch, t, a.kv_eff, a.d_head), cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, t, a.kv_eff, a.d_head), cfg.dtype)}
+
+
+def prefill(params, tokens, cfg: LMConfig, max_seq: int):
+    """tokens [B, S] -> (cache filled for S positions, last-token logits)."""
+    x, _, cache = forward(params, tokens, cfg, collect_cache=True)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"]).astype(jnp.float32)
+    t = cache_len(cfg, max_seq)
+    s = tokens.shape[1]
+
+    def place(c):  # [L, B, S, ...] -> [L, B, T, ...] at ring slots (slot = pos % T)
+        if s >= t:
+            return jnp.roll(c[:, :, s - t:], shift=s % t, axis=2)
+        pad = [(0, 0)] * c.ndim
+        pad[2] = (0, t - s)
+        return jnp.pad(c, pad)
+
+    return jax.tree.map(place, cache), logits
+
+
+def decode_step(params, cache, token, pos, cfg: LMConfig):
+    """One decode step.  token [B], pos scalar int32 (next position index).
+    Returns (logits [B, V], updated cache)."""
+    a = cfg.attn
+    b = token.shape[0]
+    t = cache["k"].shape[2] if a.kind == "gqa" else cache["ckv"].shape[2]
+    slot = pos % t if a.window else jnp.minimum(pos, t - 1)
+    idx = jnp.arange(t)
+    valid = _ring_valid(t, slot, pos) if a.window else idx < pos
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
+    if b > 1:
+        x = _constrain(x, cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, inp):
+        pl, cl = inp
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        if a.kind == "gqa":
+            q = jnp.einsum("bsd,dh->bsh", h, pl["wq"]).reshape(b, a.h_eff, a.d_head)
+            k = jnp.einsum("bsd,dh->bsh", h, pl["wk"]).reshape(b, a.kv_eff, a.d_head)
+            v = jnp.einsum("bsd,dh->bsh", h, pl["wv"]).reshape(b, a.kv_eff, a.d_head)
+            q = apply_rope(q[:, None], positions, a.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], positions, a.rope_theta)[:, 0]
+            kc = jax.lax.dynamic_update_index_in_dim(cl["k"], k, slot, 1)
+            vc = jax.lax.dynamic_update_index_in_dim(cl["v"], v, slot, 1)
+            attn = decode_attention(q, kc, vc, valid=valid | (idx == slot))
+            attn = _head_mask(a, attn)
+            out = jnp.einsum("bh,hd->bd", attn.reshape(b, -1), pl["wo"])
+            new_cl = {"k": kc, "v": vc}
+        else:  # absorbed MLA decode: attention entirely in latent space
+            cq = jnp.einsum("bsd,dr->bsr", h, pl["wdq"])
+            q = jnp.einsum("bsr,rh->bsh", cq, pl["wuq"]).reshape(
+                b, 1, a.h_eff, a.d_nope + a.d_rope)
+            qn, qr = q[..., : a.d_nope], apply_rope(q[..., a.d_nope:], positions,
+                                                    a.rope_theta)
+            ckv_new = jnp.einsum("bsd,dr->bsr", h, pl["wdkv"])[:, 0]
+            kr_new = apply_rope(jnp.einsum("bsd,dr->bsr", h, pl["wkr"]),
+                                positions, a.rope_theta)[:, 0]
+            ckv = jax.lax.dynamic_update_index_in_dim(cl["ckv"], ckv_new, slot, 1)
+            kr = jax.lax.dynamic_update_index_in_dim(cl["kr"], kr_new, slot, 1)
+            wuk = pl["wukv"].reshape(a.kv_lora, a.h_eff, a.d_nope + a.d_v)
+            q_lat = jnp.einsum("bhn,rhn->bhr", qn[:, 0], wuk[..., : a.d_nope])
+            scores = (jnp.einsum("bhr,btr->bht", q_lat, ckv)
+                      + jnp.einsum("bhp,btp->bht", qr[:, 0], kr)).astype(jnp.float32)
+            scores *= (a.d_nope + a.d_rope) ** -0.5
+            scores = jnp.where((valid | (idx == slot))[None, None], scores, NEG_INF)
+            p = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+            o_lat = jnp.einsum("bht,btr->bhr", p, ckv)
+            o = jnp.einsum("bhr,rhv->bhv", o_lat, wuk[..., a.d_nope:])
+            o = _head_mask(a, o)
+            out = jnp.einsum("bh,hd->bd", o.reshape(b, -1), pl["wo"])
+            new_cl = {"ckv": ckv, "kr": kr}
+        x = x + out[:, None]
+        hf, _ = _ffn_block(pl, rms_norm(x, pl["ln2"], cfg.norm_eps), cfg)
+        return x + hf, new_cl
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        new_layers = []
+        for i in range(cfg.n_layers):
+            pl = jax.tree.map(lambda v: v[i], params["layers"])
+            cl = jax.tree.map(lambda v: v[i], cache)
+            x, ncl = body(x, (pl, cl))
+            new_layers.append(ncl)
+        new_cache = jax.tree.map(lambda *vs: jnp.stack(vs), *new_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _ring_valid(t, slot, pos):
+    """Ring-buffer validity: slots written in the last min(pos, t) steps."""
+    idx = jnp.arange(t)
+    filled = jnp.minimum(pos, t)
+    age = (slot - idx) % t          # 0 = current write slot, 1 = previous, ...
+    return (age > 0) & (age <= filled)

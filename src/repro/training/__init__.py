@@ -1,0 +1,3 @@
+from . import checkpoint, compression, fault_tolerance, optimizer, train_loop
+
+__all__ = ["checkpoint", "compression", "fault_tolerance", "optimizer", "train_loop"]

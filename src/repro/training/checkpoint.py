@@ -1,0 +1,119 @@
+"""Sharded, atomic, resharding-capable checkpoints (orbax-lite, built here).
+
+Layout:  <dir>/step_00000042/
+            manifest.json          tree structure, per-leaf dtype/shape/shard files
+            <leaf-path>.s<k>.npy   one file per addressable shard (parallel IO at
+                                   fleet scale; on this single host k covers all)
+         <dir>/LATEST              committed step pointer (atomic rename commit)
+
+Restore reassembles leaves on host and ``device_put``s with the *target* sharding,
+so a checkpoint written on one mesh restores onto any other (elastic scaling /
+failover to a different slice topology).  Writes go to a temp dir first and are
+renamed into place -- a crashed save can never corrupt the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name.replace("'", ""), leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, extras: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extras or {}))
+            self._thread.start()
+        else:
+            self._write(step, host_tree, extras or {})
+
+    def _write(self, step: int, host_tree, extras: dict):
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "extras": extras, "leaves": {}}
+        for name, leaf in _leaf_paths(host_tree):
+            fname = name.replace("/", "__") + ".s0.npy"
+            np.save(tmp / fname, leaf)
+            manifest["leaves"][name] = {
+                "files": [fname], "dtype": str(leaf.dtype), "shape": list(leaf.shape)}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic commit
+        with open(self.dir / ".LATEST_tmp", "w") as f:
+            f.write(str(step))
+        os.rename(self.dir / ".LATEST_tmp", self.dir / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")]
+
+    def latest_step(self) -> int | None:
+        f = self.dir / "LATEST"
+        if not f.exists():
+            return None
+        return int(f.read_text())
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """target_tree: pytree of arrays or ShapeDtypeStructs defining structure.
+        shardings: matching pytree of NamedSharding (or None -> default device)."""
+        self.wait()
+        d = self.dir / f"step_{step:08d}"
+        with open(d / "manifest.json") as f:
+            manifest = json.load(f)
+        names = dict(_leaf_paths(target_tree))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        leaves = []
+        for (path, leaf), sh in zip(flat, shard_flat):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path).replace("'", "")
+            info = manifest["leaves"][name]
+            arr = np.load(d / info["files"][0], mmap_mode="r")
+            arr = np.asarray(arr)
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.device_put(arr.astype(info["dtype"])))
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extras"]

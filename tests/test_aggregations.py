@@ -1,0 +1,64 @@
+"""Aggregations beyond counting (SSII df, SSVI-B inverted index) + pack ablation."""
+import numpy as np
+import pytest
+
+from repro.core import NGramConfig, aggregations, oracle, run_job
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_document_frequencies_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 25, int(rng.integers(40, 250)))
+    sigma, tau = int(rng.integers(1, 5)), int(rng.integers(1, 3))
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=24)
+    exp = oracle.ngram_document_frequencies(toks, sigma, tau)
+    assert aggregations.document_frequencies(toks, cfg).to_dict() == exp
+    assert aggregations.df_suffix_lengths(toks, cfg).to_dict() == exp
+
+
+def test_df_bounded_by_cf():
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 12, 400)
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=11)
+    cf = run_job(toks, cfg).to_dict()
+    df = aggregations.document_frequencies(toks, cfg).to_dict()
+    for g, d in df.items():
+        assert d <= cf[g]            # df(s) <= cf(s), SSII
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_postings_match_oracle(seed):
+    rng = np.random.default_rng(seed + 10)
+    toks = rng.integers(0, 20, int(rng.integers(40, 200)))
+    sigma, tau = int(rng.integers(1, 4)), int(rng.integers(1, 3))
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=19)
+    assert aggregations.postings(toks, cfg) == oracle.ngram_postings(toks, sigma,
+                                                                     tau)
+
+
+def test_postings_marginalize_to_cf():
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 15, 300)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=14)
+    cf = run_job(toks, cfg).to_dict()
+    post = aggregations.postings(toks, cfg)
+    assert {g: sum(p.values()) for g, p in post.items()} == cf
+
+
+def test_pack_ablation_exactness_and_bytes():
+    """SSV sequence encoding: packing changes bytes, never the output."""
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 60, 700)
+    on = run_job(toks, NGramConfig(sigma=4, tau=2, vocab_size=59, pack=True))
+    off = run_job(toks, NGramConfig(sigma=4, tau=2, vocab_size=59, pack=False))
+    assert on.to_dict() == off.to_dict()
+    assert off.counters["shuffle_bytes"] > on.counters["shuffle_bytes"]
+
+
+def test_combiner_reduces_shuffle_volume():
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, 5, 2000)   # tiny vocab: heavy suffix duplication
+    on = run_job(toks, NGramConfig(sigma=3, tau=1, vocab_size=4, combine=True))
+    off = run_job(toks, NGramConfig(sigma=3, tau=1, vocab_size=4, combine=False))
+    assert on.to_dict() == off.to_dict()
+    assert on.counters["shuffle_records"] < off.counters["shuffle_records"] / 10

@@ -1,0 +1,92 @@
+"""All four n-gram methods vs the pure-Python oracle, incl. the paper's running
+example (SSIII) and its per-method record-count analyses."""
+import numpy as np
+import pytest
+
+from repro.core import METHODS, NGramConfig, oracle, run_job
+
+# paper running example, a=1 b=2 x=3
+D1, D2, D3 = [1, 3, 2, 3, 3], [2, 1, 3, 2, 3], [3, 2, 1, 3, 2]
+PAPER = np.asarray(D1 + [0] + D2 + [0] + D3, np.int32)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_paper_running_example(method):
+    cfg = NGramConfig(sigma=3, tau=3, vocab_size=3, method=method)
+    got = run_job(PAPER, cfg).to_dict()
+    assert got == {(1,): 3, (2,): 5, (3,): 7, (1, 3): 3, (3, 2): 4, (1, 3, 2): 3}
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+@pytest.mark.parametrize("seed", range(4))
+def test_random_corpora_match_oracle(method, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 400))
+    v = int(rng.integers(2, 50))
+    toks = rng.integers(0, v + 1, n)
+    sigma = int(rng.integers(1, 7))
+    tau = int(rng.integers(1, 4))
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=v, method=method,
+                      combine=bool(seed % 2), apriori_index_k=1 + seed % 4)
+    assert run_job(toks, cfg).to_dict() == oracle.ngram_counts(toks, sigma, tau)
+
+
+def test_suffix_sigma_record_count_invariant():
+    """SSIV: SUFFIX-sigma emits exactly one record per token occurrence,
+    independent of sigma and tau."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 30, 1000)
+    n_tokens = int((toks != 0).sum())
+    for sigma in (1, 3, 9):
+        for tau in (1, 5):
+            st = run_job(toks, NGramConfig(sigma=sigma, tau=tau, vocab_size=29,
+                                           combine=False))
+            assert st.counters["map_records"] == n_tokens
+    assert oracle.expected_map_records(toks, 5, "suffix_sigma") == n_tokens
+
+
+def test_naive_record_count_matches_analysis():
+    """NAIVE emits sum_{s: |s|<=sigma} cf(s) records (SSIII-A)."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 20, 500)
+    sigma = 4
+    st = run_job(toks, NGramConfig(sigma=sigma, tau=1, vocab_size=19,
+                                   method="naive"))
+    expected = oracle.expected_map_records(toks, sigma, "naive")
+    assert st.counters["map_records"] == expected
+    # which equals the total collection frequency of all <=sigma-grams
+    all_counts = oracle.ngram_counts(toks, sigma, 1)
+    assert expected == sum(all_counts.values())
+
+
+def test_apriori_scan_prunes_vs_naive():
+    """Candidate records of APRIORI-SCAN never exceed NAIVE's emissions and the
+    number of jobs is bounded by sigma (SSIII-B)."""
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 50, 800)
+    sigma, tau = 5, 4
+    scan = run_job(toks, NGramConfig(sigma=sigma, tau=tau, vocab_size=49,
+                                     method="apriori_scan"))
+    naive = run_job(toks, NGramConfig(sigma=sigma, tau=tau, vocab_size=49,
+                                      method="naive"))
+    assert scan.counters["map_records"] <= naive.counters["map_records"]
+    assert scan.counters["jobs"] <= sigma
+
+
+def test_methods_agree_pairwise():
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 15, 600)
+    cfgs = {m: NGramConfig(sigma=5, tau=3, vocab_size=14, method=m) for m in METHODS}
+    results = {m: run_job(toks, c).to_dict() for m, c in cfgs.items()}
+    base = results.pop("suffix_sigma")
+    for m, r in results.items():
+        assert r == base, f"{m} disagrees with suffix_sigma"
+
+
+def test_empty_and_degenerate_inputs():
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=5)
+    assert run_job(np.zeros(10, np.int32), cfg).to_dict() == {}
+    assert run_job(np.asarray([2], np.int32), cfg).to_dict() == {(2,): 1}
+    one = run_job(np.asarray([2, 2, 2], np.int32),
+                  NGramConfig(sigma=2, tau=2, vocab_size=5))
+    assert one.to_dict() == {(2,): 3, (2, 2): 2}

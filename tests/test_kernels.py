@@ -1,0 +1,67 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def lex_sorted(rng, n, l, vmax=6):
+    t = rng.integers(0, vmax, (n, l)).astype(np.int32)
+    return t[np.lexsort(t.T[::-1])]
+
+
+@pytest.mark.parametrize("n,l", [(1, 1), (7, 3), (100, 5), (513, 8), (2048, 2),
+                                 (33, 100), (512, 1)])
+def test_lcp_boundary_shapes(n, l):
+    rng = np.random.default_rng(n * 131 + l)
+    terms = jnp.asarray(lex_sorted(rng, n, l))
+    for block in (64, 512):
+        lcp_k, fl_k = ops.lcp_boundary(terms, block_rows=block)
+        lcp_r, fl_r = ref.lcp_boundary_ref(terms)
+        np.testing.assert_array_equal(np.asarray(lcp_k), np.asarray(lcp_r))
+        np.testing.assert_array_equal(np.asarray(fl_k), np.asarray(fl_r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 4), min_size=4, max_size=4),
+                min_size=1, max_size=120))
+def test_lcp_boundary_property(rows):
+    t = np.asarray(sorted(map(tuple, rows)), np.int32).reshape(len(rows), 4)
+    lcp_k, fl_k = ops.lcp_boundary(jnp.asarray(t), block_rows=32)
+    lcp_r, fl_r = ref.lcp_boundary_ref(jnp.asarray(t))
+    assert np.array_equal(np.asarray(lcp_k), np.asarray(lcp_r))
+    assert np.array_equal(np.asarray(fl_k), np.asarray(fl_r))
+
+
+@pytest.mark.parametrize("n,sigma,vocab,block", [
+    (10, 3, 5, 256), (100, 5, 300, 64), (1025, 7, 70_000, 256),
+    (5000, 2, 3, 1024), (64, 64, 100, 128), (1, 1, 1, 32)])
+def test_suffix_pack_shapes(n, sigma, vocab, block):
+    rng = np.random.default_rng(n + sigma)
+    toks = jnp.asarray(rng.integers(0, vocab + 1, n).astype(np.int32))
+    got = ops.suffix_pack(toks, sigma=sigma, vocab_size=vocab, block=block)
+    want = ref.suffix_pack_ref(toks, sigma=sigma, vocab_size=vocab)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,parts,block", [(10, 2, 512), (1000, 8, 128),
+                                           (4097, 16, 512), (5, 512, 64)])
+def test_hash_partition_shapes(n, parts, block):
+    rng = np.random.default_rng(n)
+    keys = jnp.asarray(rng.integers(0, 2 ** 31, n).astype(np.uint32))
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    p_k, h_k = ops.hash_partition(keys, valid, n_parts=parts, block=block)
+    p_r, h_r = ref.hash_partition_ref(keys, valid, parts)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+    assert int(h_k.sum()) == int(valid.sum())
+
+
+def test_kernel_backed_reducer_end_to_end():
+    from repro.core import NGramConfig, oracle, run_job
+    rng = np.random.default_rng(9)
+    toks = rng.integers(0, 40, 700)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=39, use_kernels=True)
+    assert run_job(toks, cfg).to_dict() == oracle.ngram_counts(toks, 4, 2)

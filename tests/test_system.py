@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def test_end_to_end_ngram_to_lm_pipeline():
+    """The paper's use case (a) compressed: SUFFIX-sigma statistics -> frequency
+    vocabulary -> short LM training run that reduces loss."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import NGramConfig, run_job
+    from repro.data import corpus as corpus_mod
+    from repro.data.loader import LMBatchLoader
+    from repro.models.transformer import (AttentionConfig, LMConfig, init_params,
+                                          loss_fn)
+    from repro.training.optimizer import OptimizerConfig, init_state
+    from repro.training.train_loop import make_train_step
+
+    prof = corpus_mod.CorpusProfile("e2e", 2000, 1.2, 20, 8)
+    stream = corpus_mod.zipf_corpus(30_000, prof, seed=0)
+    stats = run_job(stream, NGramConfig(sigma=3, tau=5, vocab_size=prof.vocab_size))
+    assert len(stats) > 50
+    uni = sorted(((g[0], c) for g, c in stats.to_dict().items() if len(g) == 1),
+                 key=lambda kv: -kv[1])
+    remap = np.zeros(prof.vocab_size + 1, np.int32)
+    for new_id, (old, _) in enumerate(uni, start=2):
+        remap[old] = new_id
+    encoded = np.where(remap[stream] == 0, 1, remap[stream])
+    cfg = LMConfig("e2e", 2, 64, len(uni) + 2, 128,
+                   AttentionConfig("gqa", 4, 2, 16), dtype=jnp.float32,
+                   remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_state(params)
+    step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b, cfg),
+                                   OptimizerConfig(peak_lr=1e-3, warmup_steps=2,
+                                                   decay_steps=40)))
+    loader = LMBatchLoader(encoded, 32, 4, seed=0)
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in loader.batch_at(i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def _run_cli(args):
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return subprocess.run([sys.executable, "-m", "repro.launch.ngram"] + args,
+                          capture_output=True, text=True, timeout=560, env=env,
+                          cwd="/root/repo")
+
+
+def test_ngram_cli_runs():
+    r = _run_cli(["--method", "suffix_sigma", "--sigma", "4", "--tau", "5",
+                  "--tokens", "20000", "--split-docs"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "n-grams in" in r.stdout and "counters" in r.stdout
+
+
+def test_methods_cli_agree():
+    """All four methods via the CLI produce the same number of frequent n-grams."""
+    counts = {}
+    for m in ("suffix_sigma", "naive", "apriori_scan", "apriori_index"):
+        r = _run_cli(["--method", m, "--sigma", "3", "--tau", "8",
+                      "--tokens", "8000"])
+        assert r.returncode == 0, (m, r.stderr[-1500:])
+        line = [l for l in r.stdout.splitlines() if "n-grams in" in l][0]
+        counts[m] = int(line.split("n-grams in")[0].split(":")[-1].strip())
+    assert len(set(counts.values())) == 1, counts

@@ -1,0 +1,136 @@
+"""Training runtime: optimizer behaviour, checkpoint atomicity + determinism,
+failure recovery, straggler detection."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import AttentionConfig, LMConfig, init_params, loss_fn
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault_tolerance import (FailureInjector, StragglerDetector,
+                                            run_with_recovery)
+from repro.training.optimizer import (OptimizerConfig, apply_updates, global_norm,
+                                      init_state, schedule)
+from repro.training.train_loop import make_train_step, make_train_step_accum
+from repro.data.loader import SyntheticLMLoader
+
+CFG = LMConfig("tiny", 2, 32, 97, 64, AttentionConfig("gqa", 4, 2, 8),
+               dtype=jnp.float32, remat=False)
+OPT = OptimizerConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=50)
+
+
+def _fresh():
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    return p, init_state(p)
+
+
+def _batch(step=0):
+    loader = SyntheticLMLoader(vocab_size=97, seq_len=16, global_batch=4)
+    return {k: jnp.asarray(v) for k, v in loader.batch_at(step).items()}
+
+
+def test_schedule_warmup_and_decay():
+    assert float(schedule(jnp.int32(0), OPT)) == 0.0
+    assert float(schedule(jnp.int32(2), OPT)) == pytest.approx(OPT.peak_lr)
+    assert float(schedule(jnp.int32(50), OPT)) == pytest.approx(
+        OPT.peak_lr * OPT.min_lr_frac, rel=1e-3)
+
+
+def test_grad_clipping():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    s = init_state(p)
+    _, _, m = apply_updates(p, g, s, OPT)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_loss_decreases():
+    params, opt = _fresh()
+    step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b, CFG), OPT))
+    first = last = None
+    for i in range(25):
+        params, opt, m = step(params, opt, _batch(i % 3))
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first
+
+
+def test_accum_matches_full_batch_grad_direction():
+    params, opt = _fresh()
+    astep = jax.jit(make_train_step_accum(lambda p, b: loss_fn(p, b, CFG), OPT, 2))
+    p2, o2, m2 = astep(params, opt, _batch())
+    assert np.isfinite(float(m2["loss"]))
+    assert int(o2["step"]) == 1
+
+
+def test_checkpoint_roundtrip_and_atomicity():
+    params, opt = _fresh()
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, async_save=False)
+        ck.save(3, {"params": params, "opt": opt}, extras={"next_step": 3})
+        assert ck.latest_step() == 3
+        restored, extras = ck.restore(3, {"params": params, "opt": opt})
+        assert extras["next_step"] == 3
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # no stray temp dirs after commit
+        assert not [p for p in os.listdir(d) if p.startswith(".tmp")]
+
+
+def test_checkpoint_gc_keeps_latest():
+    params, opt = _fresh()
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"p": params["final_norm"]})
+        assert sorted(ck.all_steps()) == [3, 4]
+
+
+def test_recovery_bit_determinism():
+    step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b, CFG), OPT))
+    loader = SyntheticLMLoader(vocab_size=97, seq_len=16, global_batch=4)
+
+    def sfn(state, batch):
+        p, o, m = step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    def bfn(s):
+        return {k: jnp.asarray(v) for k, v in loader.batch_at(s).items()}
+
+    def fresh_state():
+        p = init_params(jax.random.PRNGKey(0), CFG)
+        return {"params": p, "opt": init_state(p)}
+
+    with tempfile.TemporaryDirectory() as d:
+        a, _, rA = run_with_recovery(
+            n_steps=20, step_fn=sfn, state=fresh_state(), batch_fn=bfn,
+            ckpt=CheckpointManager(d + "/a", async_save=False), ckpt_every=5,
+            injector=FailureInjector({7, 13}))
+        b, _, rB = run_with_recovery(
+            n_steps=20, step_fn=sfn, state=fresh_state(), batch_fn=bfn,
+            ckpt=CheckpointManager(d + "/b", async_save=False), ckpt_every=5)
+    assert rA == 2 and rB == 0
+    for x, y in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_straggler_detector():
+    det = StragglerDetector(alpha=0.5, threshold=2.0)
+    for _ in range(5):
+        det.observe(0, 0.1)
+    assert det.observe(6, 1.0)          # 10x slower -> flagged
+    assert len(det.events) == 1
+
+
+def test_failure_exhaustion_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RuntimeError):
+            run_with_recovery(
+                n_steps=5,
+                step_fn=lambda s, b: (_ for _ in ()).throw(RuntimeError("boom")),
+                state={}, batch_fn=lambda s: None,
+                ckpt=CheckpointManager(d, async_save=False), max_retries=2)
