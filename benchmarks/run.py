@@ -85,6 +85,11 @@ def main() -> None:
 
     bench_kernels()
 
+    from benchmarks import serving
+    for r in serving.run(max(n // 2, 10_000),
+                         n_queries=4_000 if args.quick else 12_000):
+        _csv(r["name"], r["us"], r["derived"])
+
     from benchmarks import ablations
     for r in ablations.run(max(n // 2, 10_000)):
         _csv(f"ablation_pack{int(r['pack'])}_combine{int(r['combine'])}",

@@ -1,0 +1,55 @@
+"""Index-serving benchmark: build->freeze->query QPS at the paper-report sizes.
+
+One entry per (path, batch) cell so the serving subsystem shows up in the perf
+trajectory next to the job-side kernels: point lookup and top-k continuation,
+micro-batched at {1, 64, 4096}, plus the index freeze itself.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+BATCH_SIZES = (1, 64, 4096)
+
+
+def run(n_tokens: int = 60_000, *, n_queries: int = 12_000,
+        topk: int = 8) -> list[dict]:
+    from repro.core import run_job
+    from repro.core.stats import NGramConfig
+    from repro.data import corpus as corpus_mod
+    from repro.index import build_index, continuations, lookup
+    from repro.launch.serve_ngrams import make_query_stream, microbatch_drive
+
+    prof = corpus_mod.NYT
+    tokens = corpus_mod.zipf_corpus(n_tokens, prof, seed=0, duplicate_frac=0.02)
+    cfg = NGramConfig(sigma=5, tau=4, vocab_size=prof.vocab_size)
+    stats = run_job(tokens, cfg)
+
+    rows: list[dict] = []
+    t0 = time.perf_counter()
+    idx = build_index(stats, vocab_size=prof.vocab_size)
+    idx.lanes.block_until_ready()
+    rows.append({"name": "index_build", "us": (time.perf_counter() - t0) * 1e6,
+                 "derived": f"rows={len(stats)};bytes={idx.nbytes}"})
+
+    grams, lengths = make_query_stream(stats, n_queries=n_queries, sigma=5,
+                                       vocab_size=prof.vocab_size, miss_frac=0.3)
+
+    def answer_lookup(g, ln):
+        return np.asarray(lookup(idx, g, ln))
+
+    def answer_topk(g, ln):
+        # continuations() masks the gram past the prefix length itself
+        return np.asarray(continuations(idx, g, np.maximum(ln - 1, 0),
+                                        k=topk)[3])
+
+    for mode, answer in (("lookup", answer_lookup), ("topk", answer_topk)):
+        for batch in BATCH_SIZES:
+            qps, lat = microbatch_drive(answer, grams, lengths, batch)
+            rows.append({
+                "name": f"serve_{mode}_b{batch}",
+                "us": float(np.median(lat) * 1e6),
+                "derived": f"qps={qps:.0f}",
+            })
+    return rows

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# One-step verify: install dev deps (best effort -- the suite degrades
+# gracefully without hypothesis) and run the tier-1 test command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt \
+    || echo "warning: dev dep install failed (offline?); continuing" >&2
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,9 @@
+"""Computing n-Gram Statistics in MapReduce -- jax/pallas reproduction.
+
+Importing the package installs small compatibility shims for older jax
+releases (see ``repro._compat``) so every subpackage can target the modern
+``jax.shard_map`` / ``AxisType`` API unconditionally.
+"""
+from . import _compat
+
+_compat.install()

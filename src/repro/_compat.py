@@ -1,0 +1,45 @@
+"""Version shims so the distributed code runs on older jax releases.
+
+The codebase targets the modern public API (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``).
+Older jax (< 0.5) ships the same functionality under experimental names; rather
+than gate every call site, :func:`install` backfills the modern names once at
+``repro`` import time.  On a current jax this is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+
+def install() -> None:
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # pre-AxisType jax: every axis behaves as Auto
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=True, **kw):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma, **kw)
+
+        jax.shard_map = shard_map

@@ -84,10 +84,9 @@ class NGramStats:
         keep = flags & (total >= tau)
         rows, lens0 = np.nonzero(keep)
         sigma = sorted_terms.shape[1]
-        grams = np.zeros((rows.size, sigma), dtype=np.int32)
         lengths = (lens0 + 1).astype(np.int32)
-        for out_i, (r, l) in enumerate(zip(rows, lens0 + 1)):
-            grams[out_i, :l] = sorted_terms[r, :l]
+        keep_pos = np.arange(sigma, dtype=np.int32)[None, :] < lengths[:, None]
+        grams = sorted_terms[rows].astype(np.int32) * keep_pos
         cvals = counts[rows, lens0].astype(np.int64)
         return NGramStats(grams, lengths, cvals, dict(counters or {}))
 

@@ -21,6 +21,7 @@ emits everything at the end of the block, which is the natural TPU formulation
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -183,9 +184,7 @@ def build_distributed_job(cfg: NGramConfig, mesh, axis_name: str, capacity: int,
         if cfg.combine:
             records = combine_records(records, n_l, has_bucket=has_bucket)
         w = records[:, n_l]
-        lead = records[:, 0] >> jnp.uint32(
-            (packing.terms_per_lane(_vocab(cfg)) - 1)
-            * packing.bits_for_vocab(_vocab(cfg)))
+        lead = packing.lead_term(records[:, 0], vocab_size=_vocab(cfg))
         local_rec, overflow = shuffle.shuffle(
             records, lead, w > 0, axis_name=axis_name, n_parts=n_parts,
             capacity=capacity)
@@ -233,13 +232,9 @@ def sigma_split(tokens, cfg: NGramConfig, sigma_head: int = 16,
     to one reducer.  survivor_frac only sizes buffers (validated by an overflow
     counter upstream).
     """
-    import numpy as np
-    from .stats import NGramStats
-
     tokens = jnp.asarray(tokens, jnp.int32)
     if sigma_head >= cfg.sigma:
         return run(tokens, cfg)
-    import dataclasses
     cfg_a = dataclasses.replace(cfg, sigma=sigma_head)
     stats_a = run(tokens, cfg_a)
 

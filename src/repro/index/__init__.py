@@ -1,0 +1,16 @@
+"""Device-resident n-gram index + batched query serving.
+
+The read side of the system: ``build`` freezes a finished job's ``NGramStats``
+into a sorted packed-lane artifact, ``query`` answers batched point-count and
+top-k-continuation queries against it, and ``serve`` shards both over a mesh
+with the job shuffle's own hash partitioner (shards align with reducer outputs).
+"""
+from . import build, query, serve
+from .build import NGramIndex, build_index
+from .query import continuations, lookup
+from .serve import ShardedNGramIndex, build_sharded_index, make_server
+from .serve import serve as serve_queries
+
+__all__ = ["build", "query", "serve", "NGramIndex", "build_index", "lookup",
+           "continuations", "ShardedNGramIndex", "build_sharded_index",
+           "make_server", "serve_queries"]

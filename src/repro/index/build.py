@@ -1,0 +1,201 @@
+"""Freeze a finished SUFFIX-sigma job into a device-resident, queryable index.
+
+The job leaves an ``NGramStats`` blob -- (gram, cf) rows in arbitrary order -- whose
+only lookup path is a Python dict.  Following Pibiri & Venturini's observation that
+the post-job win is a *sorted, compressed, immutable* layout, ``build_index``
+re-packs the rows into the same packed-lane record format the shuffle/sort phases
+use (``mapreduce.pack``), sorted with the same multi-key lexicographic sort
+(``mapreduce.sort``), and adds two acceleration structures:
+
+  * **per-length sections** -- rows ordered by (|gram|, lex); ``section_start[l]``
+    delimits the length-(l+1) section, so a point query binary-searches only the
+    rows of its own length;
+  * **first-term fanout table** -- within each section, rows of equal lead term are
+    contiguous (the lead term occupies the most-significant bits of lane 0), so
+    ``fanout[l-1, b] .. fanout[l-1, b+1]`` brackets the rows whose lead-term bucket
+    is ``b``.  This cuts the binary search from log2(R) to log2(rows-per-bucket)
+    probes -- the "one-hash narrows the hot path" idea of Lemire & Kaser, realized
+    as a monotone table instead of a probabilistic filter (exactness matters: the
+    index must return cf, not membership).
+
+A second view of the same rows -- the **continuation view** -- is ordered by
+(|gram|, packed *prefix* lanes, cf desc).  Rows extending a common prefix are
+contiguous AND sorted by count, so top-k next-token completion is two binary
+searches plus a k-row gather; the per-section running sum (``cont_cumsum``) gives
+the total continuation mass of a prefix in O(1).
+
+Everything is a flat jnp array (registered dataclass pytree), so the artifact can
+be ``device_put`` whole, stacked along a leading shard axis (``serve.py``), and
+closed over by jitted query functions.  Counts are stored as uint32 on device
+(cf <= total tokens; the int64 path stays on the host-side ``NGramStats``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bsearch import search_steps  # re-export: queries need it
+from repro.mapreduce import pack as packing
+from repro.mapreduce import sort
+from repro.core.stats import NGramStats
+
+MAX_FANOUT = 4096   # fanout table columns per length section (memory/probe trade)
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NGramIndex:
+    """Immutable device-resident n-gram index (see module docstring).
+
+    Rows 0..n_rows-1 are real; rows n_rows..size-1 are all-ones sentinels that sort
+    after every real row (binary searches never land on them inside a section).
+    """
+
+    # --- point-lookup view: rows sorted by (length, lex packed lanes) ------------
+    lanes: jax.Array          # [size, L] uint32 packed gram lanes
+    counts: jax.Array         # [size]    uint32 collection frequencies
+    section_start: jax.Array  # [sigma+1] int32: section l+1 = rows [s[l], s[l+1])
+    fanout: jax.Array         # [sigma, n_fanout+1] int32 lead-term bucket offsets
+    # --- continuation view: rows sorted by (length, prefix lanes, cf desc) -------
+    cont_prefix: jax.Array    # [size, L] uint32 packed lanes of the length-1 prefix
+    cont_last: jax.Array      # [size]    uint32 final term of each gram
+    cont_counts: jax.Array    # [size]    uint32 cf, descending within prefix group
+    cont_fanout: jax.Array    # [sigma, n_fanout+1] int32 prefix-lead bucket offsets
+    cont_cumsum: jax.Array    # [size+1]  uint32 running sum of cont_counts
+    # --- static meta (part of the treedef; identical across shards) --------------
+    sigma: int = dataclasses.field(metadata=dict(static=True))
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    size: int = dataclasses.field(metadata=dict(static=True))
+    fanout_shift: int = dataclasses.field(metadata=dict(static=True))
+    n_fanout: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_lanes(self) -> int:
+        # last axis, so the property also holds for a [P, size, L] sharded stack
+        return int(self.lanes.shape[-1])
+
+    @property
+    def n_rows(self) -> int:
+        """Real (non-sentinel) rows; the last section end."""
+        return int(self.section_start[-1])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(f).nbytes) for f in (
+            self.lanes, self.counts, self.section_start, self.fanout,
+            self.cont_prefix, self.cont_last, self.cont_counts,
+            self.cont_fanout, self.cont_cumsum))
+
+
+def fanout_layout(vocab_size: int) -> tuple[int, int]:
+    """(shift, n_buckets): lead term t maps to bucket t >> shift, monotonically."""
+    shift = 0
+    while ((vocab_size + 1) >> shift) > MAX_FANOUT:
+        shift += 1
+    n_buckets = ((vocab_size + 1) >> shift) + 1
+    return shift, n_buckets
+
+
+def _pad_rows(a: np.ndarray, size: int, fill) -> np.ndarray:
+    pad = [(0, size - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad, constant_values=fill)
+
+
+def _offsets(sorted_key: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    return np.searchsorted(sorted_key, queries, side="left").astype(np.int32)
+
+
+def build_index(stats: NGramStats, *, vocab_size: int,
+                pad_to: int | None = None) -> NGramIndex:
+    """Freeze ``stats`` (a finished job's output) into an :class:`NGramIndex`.
+
+    ``pad_to`` fixes the padded row capacity (sharded builds pass a common
+    capacity so shards stack into one array); default rounds R+1 up to 128.
+    Bucketed (time-series) counts are marginalized -- the index serves cf.
+    """
+    grams = np.asarray(stats.grams, np.int32)
+    lengths = np.asarray(stats.lengths, np.int32)
+    counts = np.asarray(stats.counts)
+    if counts.ndim == 2:
+        counts = counts.sum(axis=1)
+    counts = counts.astype(np.uint32)
+    r, sigma = grams.shape
+    n_l = packing.n_lanes(sigma, vocab_size)
+    shift, n_fanout = fanout_layout(vocab_size)
+    size = pad_to if pad_to is not None else max(128, -(-(r + 1) // 128) * 128)
+    if size < r + 1:
+        raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
+
+    lanes = np.asarray(packing.pack_terms(jnp.asarray(grams),
+                                          vocab_size=vocab_size), np.uint32)
+    lead = grams[:, 0].astype(np.uint32)
+
+    # ---- point-lookup view: one lexicographic sort on (length | lanes) ----------
+    keys = jnp.concatenate([jnp.asarray(lengths, jnp.uint32)[:, None],
+                            jnp.asarray(lanes)], axis=1)
+    keys_s, (counts_s, lead_s) = sort.sort_with_payload(
+        keys, [jnp.asarray(counts), jnp.asarray(lead)])
+    keys_s = np.asarray(keys_s)
+    len_s = keys_s[:, 0].astype(np.int64)
+    lanes_s = keys_s[:, 1:]
+    # combined (length, bucket) key is monotone: length is the primary sort key and
+    # the lead term sits in lane 0's most-significant bits
+    combined = len_s * n_fanout + (np.asarray(lead_s, np.int64) >> shift)
+    section_start = _offsets(len_s, np.arange(1, sigma + 2))
+    grid = (np.arange(1, sigma + 1)[:, None] * n_fanout
+            + np.arange(n_fanout + 1)[None, :])
+    fanout = np.minimum(_offsets(combined, grid.reshape(-1)).reshape(
+        sigma, n_fanout + 1), section_start[1:][:, None]).astype(np.int32)
+
+    # ---- continuation view: (length | prefix lanes | cf desc) -------------------
+    prefix = grams * (np.arange(sigma)[None, :] < (lengths - 1)[:, None])
+    p_lanes = np.asarray(packing.pack_terms(jnp.asarray(prefix),
+                                            vocab_size=vocab_size), np.uint32)
+    last = grams[np.arange(r), np.maximum(lengths - 1, 0)].astype(np.uint32) \
+        if r else np.zeros((0,), np.uint32)
+    p_lead = prefix[:, 0].astype(np.uint32)
+    ckeys = jnp.concatenate([jnp.asarray(lengths, jnp.uint32)[:, None],
+                             jnp.asarray(p_lanes),
+                             (~jnp.asarray(counts)).astype(jnp.uint32)[:, None]],
+                            axis=1)
+    ckeys_s, (c_last_s, c_counts_s, c_lead_s) = sort.sort_with_payload(
+        ckeys, [jnp.asarray(last), jnp.asarray(counts), jnp.asarray(p_lead)])
+    ckeys_s = np.asarray(ckeys_s)
+    cp_lanes_s = ckeys_s[:, 1:1 + n_l]
+    c_combined = (ckeys_s[:, 0].astype(np.int64) * n_fanout
+                  + (np.asarray(c_lead_s, np.int64) >> shift))
+    cont_fanout = np.minimum(_offsets(c_combined, grid.reshape(-1)).reshape(
+        sigma, n_fanout + 1), section_start[1:][:, None]).astype(np.int32)
+    # running mass in int64 first: the total over all rows is ~sigma x corpus
+    # tokens and can exceed uint32 even when every individual cf fits.  A wrap
+    # would silently corrupt continuation totals, so refuse loudly instead --
+    # sharding the index (serve.py) divides the mass per shard.
+    mass = np.cumsum(np.asarray(c_counts_s, np.int64))
+    if r and mass[-1] > np.iinfo(np.uint32).max:
+        raise ValueError(
+            f"total continuation mass {int(mass[-1])} overflows the uint32 "
+            "device cumsum; build the index sharded (build_sharded_index) or "
+            "raise tau")
+    cont_cumsum = np.zeros((size + 1,), np.uint32)
+    cont_cumsum[1:r + 1] = mass.astype(np.uint32)
+    if r:
+        cont_cumsum[r + 1:] = cont_cumsum[r]
+
+    return NGramIndex(
+        lanes=jnp.asarray(_pad_rows(lanes_s, size, _SENTINEL)),
+        counts=jnp.asarray(_pad_rows(np.asarray(counts_s, np.uint32), size, 0)),
+        section_start=jnp.asarray(section_start),
+        fanout=jnp.asarray(fanout),
+        cont_prefix=jnp.asarray(_pad_rows(cp_lanes_s, size, _SENTINEL)),
+        cont_last=jnp.asarray(_pad_rows(np.asarray(c_last_s, np.uint32), size, 0)),
+        cont_counts=jnp.asarray(_pad_rows(np.asarray(c_counts_s, np.uint32),
+                                          size, 0)),
+        cont_fanout=jnp.asarray(cont_fanout),
+        cont_cumsum=jnp.asarray(cont_cumsum),
+        sigma=sigma, vocab_size=vocab_size, size=size,
+        fanout_shift=shift, n_fanout=n_fanout,
+    )

@@ -1,0 +1,130 @@
+"""Batched queries against a frozen :class:`~repro.index.build.NGramIndex`.
+
+All entry points are jitted, operate on whole query batches, and are branchless
+inside (fixed-iteration binary searches; misses and invalid queries resolve to
+count 0 / empty completion lists through masks, never through control flow), so
+one compiled program serves any traffic mix.
+
+Query plan (both views):
+
+  1. length + lead-term bucket -> [lo, hi) bracket from the fanout table (O(1));
+  2. lexicographic lower/upper bound on the packed lanes inside the bracket --
+     ``use_kernels=True`` routes the search through the Pallas ``bsearch`` kernel
+     (``repro.kernels.ops``), else the pure-jnp ``ref`` path (same contract);
+  3. gather counts / top-k continuation rows at the found positions.
+
+Validity rules: a query gram must have 1 <= len <= sigma, all terms in 1..vocab
+before the PAD tail, and nothing after it.  Continuation prefixes allow len 0
+(top-k unigrams) on a single-device index; the sharded server requires len >= 1
+(shards partition by lead term -- see ``serve.py``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.mapreduce import pack as packing
+from .build import NGramIndex, search_steps
+
+
+def _search(idx: NGramIndex, view: jax.Array, q_lanes: jax.Array, lo: jax.Array,
+            hi: jax.Array, *, upper: bool, use_kernels: bool) -> jax.Array:
+    steps = search_steps(idx.size)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.bsearch(view, q_lanes, lo, hi, upper=upper, steps=steps)
+    from repro.kernels import ref as kref
+    return kref.bsearch_ref(view, q_lanes, lo, hi, upper=upper, steps=steps)
+
+
+def _bracket(idx: NGramIndex, table: jax.Array, length: jax.Array,
+             lead: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[lo, hi) rows of the (length, lead-term bucket) fanout cell."""
+    sec = jnp.clip(length - 1, 0, idx.sigma - 1)
+    b = jnp.clip((lead >> jnp.uint32(idx.fanout_shift)).astype(jnp.int32),
+                 0, idx.n_fanout - 1)
+    return table[sec, b], table[sec, b + 1]
+
+
+def _clean(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
+           lo_len: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(masked grams, lengths, valid): zero the PAD tail, validate term ranges."""
+    grams = grams.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    in_len = jnp.arange(idx.sigma, dtype=jnp.int32)[None, :] < lengths[:, None]
+    grams = grams * in_len
+    ok_terms = jnp.all(jnp.where(in_len, (grams >= 1) & (grams <= idx.vocab_size),
+                                 True), axis=1)
+    valid = (lengths >= lo_len) & (lengths <= idx.sigma) & ok_terms
+    return grams, lengths, valid
+
+
+@partial(jax.jit, static_argnames=("use_kernels",))
+def lookup_packed(idx: NGramIndex, q_lanes: jax.Array, q_len: jax.Array,
+                  valid: jax.Array, *, use_kernels: bool = False) -> jax.Array:
+    """Point counts [Q] uint32 for pre-packed queries (the serving hot path)."""
+    lead = packing.lead_term(q_lanes[:, 0], vocab_size=idx.vocab_size)
+    lo, hi = _bracket(idx, idx.fanout, q_len, lead)
+    pos = _search(idx, idx.lanes, q_lanes, lo, hi, upper=False,
+                  use_kernels=use_kernels)
+    safe = jnp.minimum(pos, idx.size - 1)
+    hit = (pos < hi) & jnp.all(idx.lanes[safe] == q_lanes, axis=1) & valid
+    return jnp.where(hit, idx.counts[safe], 0)
+
+
+@partial(jax.jit, static_argnames=("use_kernels",))
+def lookup(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
+           *, use_kernels: bool = False) -> jax.Array:
+    """Collection frequencies [Q] uint32 of raw query grams [Q, sigma].
+
+    Misses (gram absent / below tau / malformed) return 0 -- exactly the oracle's
+    ``counts.get(gram, 0)`` for frequent-gram stores.
+    """
+    grams, lengths, valid = _clean(idx, grams, lengths, lo_len=1)
+    q_lanes = packing.pack_terms(grams, vocab_size=idx.vocab_size)
+    return lookup_packed(idx, q_lanes, lengths, valid, use_kernels=use_kernels)
+
+
+@partial(jax.jit, static_argnames=("k", "use_kernels"))
+def continuations_packed(idx: NGramIndex, p_lanes: jax.Array, p_len: jax.Array,
+                         valid: jax.Array, *, k: int,
+                         use_kernels: bool = False):
+    """Top-k completions for pre-packed prefixes (see :func:`continuations`)."""
+    lead = packing.lead_term(p_lanes[:, 0], vocab_size=idx.vocab_size)
+    target_len = p_len + 1
+    lo, hi = _bracket(idx, idx.cont_fanout, target_len, lead)
+    lb = _search(idx, idx.cont_prefix, p_lanes, lo, hi, upper=False,
+                 use_kernels=use_kernels)
+    ub = _search(idx, idx.cont_prefix, p_lanes, lo, hi, upper=True,
+                 use_kernels=use_kernels)
+    lb = jnp.where(valid, lb, 0)
+    ub = jnp.where(valid, ub, 0)
+    n_distinct = (ub - lb).astype(jnp.uint32)
+    total = idx.cont_cumsum[ub] - idx.cont_cumsum[lb]
+    offs = lb[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    in_group = offs < ub[:, None]
+    safe = jnp.minimum(offs, idx.size - 1)
+    terms = jnp.where(in_group, idx.cont_last[safe], 0)
+    counts = jnp.where(in_group, idx.cont_counts[safe], 0)
+    return n_distinct, total, terms, counts
+
+
+@partial(jax.jit, static_argnames=("k", "use_kernels"))
+def continuations(idx: NGramIndex, prefixes: jax.Array, p_len: jax.Array,
+                  *, k: int, use_kernels: bool = False):
+    """Top-k next-token completions of each prefix [Q, sigma] (len in 0..sigma-1).
+
+    Returns (n_distinct [Q], total [Q], terms [Q, k], counts [Q, k]): the number
+    of distinct frequent continuations, their total mass (sum of cf over ALL
+    continuations, not just the top k), and the k highest-cf (next_term, cf)
+    pairs, count-descending, zero-padded.  Both are over the index's frequent
+    grams (cf >= tau), i.e. the continuation statistics a backoff LM or
+    completion ranker reads.
+    """
+    prefixes, p_len, valid = _clean(idx, prefixes, p_len, lo_len=0)
+    valid = valid & (p_len <= idx.sigma - 1)
+    p_lanes = packing.pack_terms(prefixes, vocab_size=idx.vocab_size)
+    return continuations_packed(idx, p_lanes, p_len, valid, k=k,
+                                use_kernels=use_kernels)

@@ -1,0 +1,201 @@
+"""Sharded query serving over a mesh -- the MapReduce shuffle run in reverse.
+
+The job-side shuffle routes *records* to reducers by hash(lead term)
+(``mapreduce.shuffle``, the paper's Algorithm-4 partitioner).  Serving routes
+*queries* the same way: ``build_sharded_index`` partitions the frozen index rows
+with the identical hash, so shard p of the index holds exactly the grams reducer
+p would have emitted, every query's answer lives on one known shard, and -- since
+all continuations of a prefix share its lead term -- top-k completion queries
+route identically to point lookups.
+
+One serving step inside ``shard_map`` is the dispatch pattern inverted:
+
+  partition  queries by hash(lead term)          (shuffle.partition_ids)
+  bucketize  into the [P, capacity, W] buffer    (shuffle.bucketize)
+  all_to_all queries to their owning shard       (shuffle.exchange)
+  answer     locally (index/query.py, optionally the Pallas bsearch kernel)
+  all_to_all results back along the same route
+  scatter    results to each query's original slot (carried as a meta lane)
+
+Capacity is the same head-room knob as the job shuffle: overflow is counted,
+never dropped, and the driver retries with doubled capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.stats import NGramStats
+from repro.mapreduce import pack as packing
+from repro.mapreduce import shuffle
+from .build import NGramIndex, build_index
+from . import query as q
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedNGramIndex:
+    """An :class:`NGramIndex` per mesh slice, stacked on a sharded leading axis."""
+
+    index: NGramIndex          # every array leaf is [P, ...], sharded on dim 0
+    mesh: jax.sharding.Mesh
+    axis_name: str
+    # compiled serving steps keyed by (mode, k, capacity, use_kernels); lives on
+    # the instance so it dies with the index (no stale cross-index hits)
+    _servers: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
+
+    @property
+    def n_parts(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    @property
+    def sigma(self) -> int:
+        return self.index.sigma
+
+
+def shard_of_rows(first_terms: np.ndarray, n_parts: int) -> np.ndarray:
+    """Owning shard per gram row -- identical to the job shuffle's partitioner."""
+    h = shuffle.hash_u32(jnp.asarray(first_terms, jnp.uint32))
+    return np.asarray(h % jnp.uint32(n_parts), np.int64)
+
+
+def build_sharded_index(stats: NGramStats, *, vocab_size: int, mesh,
+                        axis_name: str = "data") -> ShardedNGramIndex:
+    """Partition ``stats`` rows by hash(lead term) and freeze one index per shard.
+
+    Shards are padded to a common capacity so they stack into single [P, ...]
+    arrays that ``device_put`` lays out along the mesh axis.
+    """
+    n_parts = mesh.shape[axis_name]
+    part = shard_of_rows(np.asarray(stats.grams)[:, 0] if len(stats) else
+                         np.zeros((0,), np.int64), n_parts)
+    shard_stats = []
+    for p in range(n_parts):
+        m = part == p
+        shard_stats.append(NGramStats(stats.grams[m], stats.lengths[m],
+                                      stats.counts[m]))
+    cap = max(128, -(-(max(len(s) for s in shard_stats) + 1) // 128) * 128)
+    shards = [build_index(s, vocab_size=vocab_size, pad_to=cap)
+              for s in shard_stats]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *shards)
+    stacked = jax.device_put(stacked, NamedSharding(mesh, P(axis_name)))
+    return ShardedNGramIndex(stacked, mesh, axis_name)
+
+
+def result_width(mode: str, k: int) -> int:
+    """uint32 result lanes per query: cf, or n_distinct|total|terms[k]|counts[k]."""
+    return 1 if mode == "lookup" else 2 + 2 * k
+
+
+def make_server(sharded: ShardedNGramIndex, *, mode: str = "lookup", k: int = 8,
+                capacity: int = 64, use_kernels: bool = False):
+    """Compile one serving step: (grams [P, B_local, sigma], lengths [P, B_local])
+    -> (results [P, B_local, R_out] uint32, global overflow count).
+
+    ``mode``: "lookup" (point cf) or "continuations" (top-k completion); the
+    sharded path needs length >= 1 either way (routing hashes the lead term --
+    empty-prefix unigram top-k would need a cross-shard merge; single-device
+    ``query.continuations`` handles that case).
+    """
+    if mode not in ("lookup", "continuations"):
+        raise ValueError(f"unknown serve mode {mode!r}")
+    mesh, axis_name = sharded.mesh, sharded.axis_name
+    n_parts = sharded.n_parts
+    idx_meta = sharded.index
+    n_l, sigma = idx_meta.n_lanes, idx_meta.sigma
+    r_out = result_width(mode, k)
+
+    def step(idx_tree, grams, lengths):
+        idx = jax.tree_util.tree_map(lambda a: a[0], idx_tree)
+        grams, lengths = grams[0], lengths[0]          # [B_local, sigma], [B_local]
+        b_local = grams.shape[0]
+        grams, lengths, valid = q._clean(idx, grams, lengths, lo_len=1)
+        if mode == "continuations":
+            valid = valid & (lengths <= sigma - 1)
+        lanes = packing.pack_terms(grams, vocab_size=idx.vocab_size)
+        lead = grams[:, 0].astype(jnp.uint32)
+        slot = jnp.arange(b_local, dtype=jnp.uint32)
+        records = jnp.concatenate(
+            [lanes, lengths.astype(jnp.uint32)[:, None], slot[:, None],
+             valid.astype(jnp.uint32)[:, None]], axis=1)
+        part = shuffle.partition_ids(lead, valid, n_parts)
+        buf, overflow = shuffle.bucketize(records, part, n_parts, capacity)
+        slot_map = buf[:, :, n_l + 1].reshape(-1)       # local send-side bookkeeping
+        sent = buf[:, :, n_l + 2].reshape(-1) > 0
+        remote = shuffle.exchange(buf, axis_name)       # [P*cap, W] queries to answer
+        r_lanes = remote[:, :n_l]
+        r_len = remote[:, n_l].astype(jnp.int32)
+        r_valid = remote[:, n_l + 2] > 0
+        if mode == "lookup":
+            cf = q.lookup_packed(idx, r_lanes, r_len, r_valid,
+                                 use_kernels=use_kernels)
+            res = cf[:, None]
+        else:
+            nd, tot, terms, counts = q.continuations_packed(
+                idx, r_lanes, r_len, r_valid, k=k, use_kernels=use_kernels)
+            res = jnp.concatenate([nd[:, None], tot[:, None], terms, counts],
+                                  axis=1)
+        res = res.astype(jnp.uint32).reshape(n_parts, capacity, r_out)
+        back = jax.lax.all_to_all(res, axis_name, split_axis=0, concat_axis=0)
+        back = back.reshape(-1, r_out)                  # aligned with sent buffer
+        tgt = jnp.where(sent, slot_map, b_local).astype(jnp.int32)
+        out = jnp.zeros((b_local, r_out), jnp.uint32).at[tgt].set(back,
+                                                                  mode="drop")
+        return out[None], jax.lax.psum(overflow, axis_name)
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name, None, None), P(axis_name, None)),
+        out_specs=(P(axis_name), P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def _cached_server(sharded: ShardedNGramIndex, mode: str, k: int, capacity: int,
+                   use_kernels: bool):
+    """Compiled serving step for this index + static config (a micro-batching
+    frontend calls serve() per batch; the program is reusable)."""
+    key = (mode, k, capacity, use_kernels)
+    if key not in sharded._servers:
+        sharded._servers[key] = make_server(sharded, mode=mode, k=k,
+                                            capacity=capacity,
+                                            use_kernels=use_kernels)
+    return sharded._servers[key]
+
+
+def serve(sharded: ShardedNGramIndex, grams, lengths, *, mode: str = "lookup",
+          k: int = 8, capacity_factor: float = 2.0, use_kernels: bool = False,
+          max_retries: int = 6) -> np.ndarray:
+    """Answer one query batch on the mesh, retrying on shuffle overflow.
+
+    grams [B, sigma], lengths [B] (host or device).  Returns uint32 [B] counts
+    (mode "lookup") or [B, 2+2k] packed continuation results (see
+    :func:`result_width`).  Hash routing balances Zipf-skewed lead terms the same
+    way the job shuffle does; ``capacity_factor`` is the head-room knob.
+    """
+    n_parts = sharded.n_parts
+    grams = np.asarray(grams)
+    lengths = np.asarray(lengths)
+    b = grams.shape[0]
+    b_local = -(-b // n_parts)
+    pad = b_local * n_parts - b
+    g = np.pad(grams, ((0, pad), (0, 0))).reshape(n_parts, b_local, -1)
+    ln = np.pad(lengths, (0, pad)).reshape(n_parts, b_local)
+    # b_local rows per (src, dst) pair is always enough -- the clamp makes small
+    # batches retry-free while big batches keep the factor*B/P head-room sizing
+    capacity = min(b_local, max(8, int(capacity_factor * b_local / n_parts) + 1))
+    for _ in range(max_retries):
+        server = _cached_server(sharded, mode, k, capacity, use_kernels)
+        out, overflow = server(sharded.index, jnp.asarray(g, jnp.int32),
+                               jnp.asarray(ln, jnp.int32))
+        if int(overflow) == 0:
+            break
+        capacity *= 2
+    else:
+        raise RuntimeError(f"query shuffle overflow persisted at {capacity}")
+    out = np.asarray(out).reshape(n_parts * b_local, -1)[:b]
+    return out[:, 0] if mode == "lookup" else out

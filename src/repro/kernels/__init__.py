@@ -4,10 +4,13 @@ on CPU; see each module's docstring for the VMEM tiling rationale):
   lcp_boundary   -- reducer inner loop (LCP + per-length boundary flags)
   suffix_pack    -- map emit (windowed gather + bit pack, fused)
   hash_partition -- shuffle partitioner (hash + histogram, fused)
+  bsearch        -- index serving inner loop (batched lexicographic bounds)
 """
 from . import ops, ref
+from .bsearch import bsearch
 from .hash_partition import hash_partition
 from .lcp_boundary import lcp_boundary
 from .suffix_pack import suffix_pack
 
-__all__ = ["ops", "ref", "lcp_boundary", "suffix_pack", "hash_partition"]
+__all__ = ["ops", "ref", "lcp_boundary", "suffix_pack", "hash_partition",
+           "bsearch"]

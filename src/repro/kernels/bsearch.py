@@ -1,0 +1,97 @@
+"""Batched lexicographic binary-search kernel -- the index-serving inner loop.
+
+Point lookups and continuation-range queries both reduce to lower/upper-bound
+searches of a query's packed lanes against the sorted index lanes (see
+``repro.index``).  XLA's unfused form re-reads the probed index rows from HBM on
+every one of the ~log2(R) steps *per query*; the kernel instead pins the index
+lanes in VMEM once per query block and runs all queries of the block in lockstep
+through a fixed-iteration, branchless search (every query does exactly ``steps``
+probes, so there is no divergence -- the fanout table upstream makes the extra
+probes cheap by shrinking every [lo, hi) to a bucket).
+
+TPU mapping: queries tile the grid; the index lanes ride in full as block input
+(VMEM residency is the design constraint: an index shard is L*4 bytes/row, so
+~1M rows of sigma<=16 packed grams fit the ~16 MiB budget -- beyond that, shard
+over the mesh first, which ``repro.index.serve`` does anyway).  The per-step row
+gather is a VMEM dynamic take along the row axis; comparisons are uint32 VPU ops.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def search_steps(n_rows: int) -> int:
+    """Fixed iteration count covering any [lo, hi) bracket within n_rows rows."""
+    return max(1, math.ceil(math.log2(max(n_rows, 2)))) + 1
+
+
+def _make_kernel(steps: int, upper: bool):
+    def kernel(lanes_ref, q_ref, lo_ref, hi_ref, pos_ref):
+        lanes = lanes_ref[...]                       # [R, L] (whole index shard)
+        q = q_ref[...]                               # [B, L]
+        b = q.shape[0]
+
+        def body(_, state):
+            lo, hi = state
+            mid = jax.lax.div(lo + hi, 2)
+            rows = jnp.take(lanes, mid, axis=0)      # [B, L]
+            eq = rows == q
+            # lexicographic rows<q: first differing lane decides
+            prefix_eq = jnp.concatenate(
+                [jnp.ones((b, 1), jnp.bool_),
+                 jnp.cumprod(eq[:, :-1].astype(jnp.int32), axis=1).astype(bool)],
+                axis=1)
+            go_right = jnp.any(prefix_eq & (rows < q), axis=1)
+            if upper:
+                go_right = go_right | jnp.all(eq, axis=1)
+            open_ = lo < hi
+            lo = jnp.where(open_ & go_right, mid + 1, lo)
+            hi = jnp.where(open_ & ~go_right, mid, hi)
+            return lo, hi
+
+        lo, _ = jax.lax.fori_loop(0, steps, body, (lo_ref[...], hi_ref[...]))
+        pos_ref[...] = lo
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("upper", "steps", "block", "interpret"))
+def bsearch(lanes: jax.Array, queries: jax.Array, lo: jax.Array, hi: jax.Array,
+            *, upper: bool = False, steps: int | None = None, block: int = 1024,
+            interpret: bool = True) -> jax.Array:
+    """Positions [Q] int32 of the lower (or upper) bound of each query.
+
+    lanes   : [R, L] uint32, rows sorted lexicographically (lane-major)
+    queries : [Q, L] uint32 packed query lanes
+    lo, hi  : [Q] int32 per-query search brackets, 0 <= lo <= hi <= R
+    upper   : False -> first row >= query; True -> first row > query
+    """
+    r, n_l = lanes.shape
+    q = queries.shape[0]
+    if steps is None:
+        steps = search_steps(r)
+    nb = -(-q // block)
+    q_pad = nb * block
+    qs = jnp.pad(queries, ((0, q_pad - q), (0, 0)))
+    lo_p = jnp.pad(lo.astype(jnp.int32), (0, q_pad - q))
+    hi_p = jnp.pad(hi.astype(jnp.int32), (0, q_pad - q))
+
+    pos = pl.pallas_call(
+        _make_kernel(steps, upper),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((r, n_l), lambda i: (0, 0)),
+            pl.BlockSpec((block, n_l), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+        interpret=interpret,
+    )(lanes, qs, lo_p, hi_p)
+    return pos[:q]

@@ -27,7 +27,8 @@ def _make_kernel(n_parts: int):
         p = (h % jnp.uint32(n_parts)).astype(jnp.int32)
         p = jnp.where(valid_ref[...], p, n_parts)
         part_ref[...] = p
-        ids = jnp.arange(n_parts, dtype=jnp.int32)
+        # iota, not arange (arange would become a captured constant -- rejected)
+        ids = jax.lax.broadcasted_iota(jnp.int32, (n_parts,), 0)
         hist_ref[...] = jnp.sum((p[:, None] == ids[None, :]).astype(jnp.int32),
                                 axis=0, keepdims=True)
 

@@ -28,7 +28,9 @@ def _kernel(cur_ref, prev_ref, lcp_ref, flags_ref):
     eq = (cur == prev).astype(jnp.int32)
     lcp = jnp.sum(jnp.cumprod(eq, axis=1), axis=1).astype(jnp.int32)
     length = cur.shape[1]
-    lengths = jnp.arange(1, length + 1, dtype=jnp.int32)
+    # iota, not arange: arange traces to a materialized constant, which
+    # pallas_call rejects ("captures constants ... pass them as inputs")
+    lengths = jax.lax.broadcasted_iota(jnp.int32, (length,), 0) + 1
     lcp_ref[...] = lcp
     flags_ref[...] = (lcp[:, None] < lengths[None, :]) & (cur != 0)
 

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 
+from .bsearch import bsearch as _bsearch
 from .hash_partition import hash_partition as _hash_partition
 from .lcp_boundary import lcp_boundary as _lcp_boundary
 from .suffix_pack import suffix_pack as _suffix_pack
@@ -16,6 +17,12 @@ INTERPRET = jax.default_backend() != "tpu"
 
 def lcp_boundary(sorted_terms, *, block_rows: int = 512):
     return _lcp_boundary(sorted_terms, block_rows=block_rows, interpret=INTERPRET)
+
+
+def bsearch(lanes, queries, lo, hi, *, upper: bool = False,
+            steps: int | None = None, block: int = 1024):
+    return _bsearch(lanes, queries, lo, hi, upper=upper, steps=steps,
+                    block=block, interpret=INTERPRET)
 
 
 def suffix_pack(tokens, *, sigma: int, vocab_size: int, block: int = 1024):

@@ -29,6 +29,43 @@ def suffix_pack_ref(tokens: jax.Array, *, sigma: int, vocab_size: int) -> jax.Ar
     return packing.pack_terms((w * keep).astype(jnp.int32), vocab_size=vocab_size)
 
 
+def bsearch_ref(lanes: jax.Array, queries: jax.Array, lo: jax.Array,
+                hi: jax.Array, *, upper: bool = False,
+                steps: int | None = None) -> jax.Array:
+    """Batched lexicographic lower/upper bound on sorted packed lanes [R, L].
+
+    Fixed-iteration branchless search, vmapped over queries; semantics match
+    ``repro.kernels.bsearch.bsearch`` (its allclose target and the default
+    ``use_kernels=False`` serving path)."""
+    if steps is None:
+        from .bsearch import search_steps
+        steps = search_steps(lanes.shape[0])
+
+    def one(q, lo_i, hi_i):
+        def body(_, state):
+            lo_c, hi_c = state
+            mid = (lo_c + hi_c) // 2
+            row = lanes[mid]
+            eq = row == q
+            prefix_eq = jnp.concatenate(
+                [jnp.ones((1,), jnp.bool_),
+                 jnp.cumprod(eq[:-1].astype(jnp.int32)).astype(bool)])
+            go_right = jnp.any(prefix_eq & (row < q))
+            if upper:
+                go_right = go_right | jnp.all(eq)
+            open_ = lo_c < hi_c
+            lo_c = jnp.where(open_ & go_right, mid + 1, lo_c)
+            hi_c = jnp.where(open_ & ~go_right, mid, hi_c)
+            return lo_c, hi_c
+
+        out, _ = jax.lax.fori_loop(0, steps, body,
+                                   (lo_i.astype(jnp.int32),
+                                    hi_i.astype(jnp.int32)))
+        return out
+
+    return jax.vmap(one)(queries, lo, hi)
+
+
 def hash_partition_ref(keys: jax.Array, valid: jax.Array,
                        n_parts: int) -> tuple[jax.Array, jax.Array]:
     """(partition ids [N] with n_parts for invalid, histogram [n_parts])."""

@@ -1,0 +1,160 @@
+"""n-gram query serving driver: job -> frozen index -> micro-batched QPS report.
+
+    PYTHONPATH=src python -m repro.launch.serve_ngrams --tokens 200000 \
+        --sigma 5 --tau 4 --profile nyt --batch-sizes 1,64,4096
+
+Runs one SUFFIX-sigma job, freezes the output into the device-resident index
+(``repro.index``), then drives a synthetic query stream through the batched
+lookup and top-k continuation paths with fixed-size micro-batches -- the shape a
+production frontend hands the device: collect queries until the batch fills (or
+a deadline passes), pad the tail, launch one jitted program.  Reports QPS and
+per-batch latency percentiles per batch size; ``--devices N`` serves the same
+stream through the sharded ``shard_map`` path on an N-way host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def _percentiles(lat_s: list[float]) -> str:
+    import numpy as np
+    a = np.asarray(lat_s) * 1e3
+    return (f"p50={np.percentile(a, 50):.2f}ms p99={np.percentile(a, 99):.2f}ms "
+            f"max={a.max():.2f}ms")
+
+
+def make_query_stream(stats, *, n_queries: int, sigma: int, vocab_size: int,
+                      miss_frac: float, seed: int = 0):
+    """(grams [N, sigma], lengths [N]): sampled index rows + uniform-random misses.
+
+    Hits are drawn cf-weighted (hot grams are queried more -- the serving-load
+    analogue of the corpus Zipf skew the shuffle partitioner absorbs)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    grams = np.zeros((n_queries, sigma), np.int32)
+    lengths = np.zeros((n_queries,), np.int32)
+    n_rows = len(stats)
+    is_miss = rng.random(n_queries) < miss_frac
+    if n_rows:
+        p = np.asarray(stats.counts, np.float64)
+        p = p / p.sum()
+        rows = rng.choice(n_rows, size=n_queries, p=p)
+        grams = np.asarray(stats.grams)[rows].astype(np.int32)
+        lengths = np.asarray(stats.lengths)[rows].astype(np.int32)
+    miss_len = rng.integers(1, sigma + 1, n_queries).astype(np.int32)
+    miss_g = rng.integers(1, vocab_size + 1, (n_queries, sigma)).astype(np.int32)
+    miss_g *= np.arange(sigma)[None, :] < miss_len[:, None]
+    grams = np.where(is_miss[:, None], miss_g, grams)
+    lengths = np.where(is_miss, miss_len, lengths)
+    return grams, lengths
+
+
+def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
+    """Feed the stream through ``answer`` in fixed micro-batches; (qps, lat[s])."""
+    import numpy as np
+    n = grams.shape[0]
+    n_batches = -(-n // batch)
+    pad = n_batches * batch - n
+    g = np.pad(grams, ((0, pad), (0, 0)))
+    ln = np.pad(lengths, (0, pad))
+    for i in range(min(warmup, n_batches)):      # compile + cache warm
+        answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
+    lat = []
+    t_all = time.perf_counter()
+    for i in range(n_batches):
+        t0 = time.perf_counter()
+        answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
+        lat.append(time.perf_counter() - t0)
+    qps = n / (time.perf_counter() - t_all)
+    return qps, lat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=200_000)
+    ap.add_argument("--sigma", type=int, default=5)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--profile", default="nyt", choices=["nyt", "cw"])
+    ap.add_argument("--queries", type=int, default=20_000)
+    ap.add_argument("--miss-frac", type=float, default=0.3)
+    ap.add_argument("--batch-sizes", default="1,64,4096")
+    ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=0,
+                    help=">1: serve through the sharded shard_map path on an "
+                         "N-way host mesh (sets XLA_FLAGS; must run first)")
+    ap.add_argument("--use-kernels", action="store_true")
+    args = ap.parse_args()
+    if args.devices > 1:
+        # --devices always wins: drop any pre-set device-count flag, keep the
+        # rest of XLA_FLAGS, and append ours
+        import re
+        prev = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                      os.environ.get("XLA_FLAGS", ""))
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = f"{prev.strip()} {flag}".strip()
+
+    import jax
+    import numpy as np
+    from repro import index as index_mod
+    from repro.core import run_job
+    from repro.core.stats import NGramConfig
+    from repro.data import corpus as corpus_mod
+
+    prof = corpus_mod.PROFILES[args.profile]
+    tokens = corpus_mod.zipf_corpus(args.tokens, prof, seed=0, duplicate_frac=0.02)
+    cfg = NGramConfig(sigma=args.sigma, tau=args.tau, vocab_size=prof.vocab_size)
+
+    t0 = time.time()
+    stats = run_job(tokens, cfg)
+    t_job = time.time() - t0
+    t0 = time.time()
+    if args.devices > 1:
+        mesh = jax.make_mesh((args.devices,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sharded = index_mod.build_sharded_index(stats, vocab_size=prof.vocab_size,
+                                                mesh=mesh)
+        idx_bytes = sharded.index.nbytes
+    else:
+        idx = index_mod.build_index(stats, vocab_size=prof.vocab_size)
+        idx_bytes = idx.nbytes
+    t_build = time.time() - t0
+    print(f"job: {args.tokens} tokens -> {len(stats)} frequent grams "
+          f"in {t_job:.2f}s; index frozen in {t_build:.2f}s "
+          f"({idx_bytes / 2**20:.1f} MiB)")
+
+    grams, lengths = make_query_stream(stats, n_queries=args.queries,
+                                       sigma=args.sigma,
+                                       vocab_size=prof.vocab_size,
+                                       miss_frac=args.miss_frac)
+
+    if args.devices > 1:
+        def answer_lookup(g, ln):
+            return index_mod.serve_queries(sharded, g, ln,
+                                           use_kernels=args.use_kernels)
+
+        def answer_topk(g, ln):
+            return index_mod.serve_queries(sharded, g, np.maximum(ln - 1, 1),
+                                           mode="continuations", k=args.topk,
+                                           use_kernels=args.use_kernels)
+    else:
+        def answer_lookup(g, ln):
+            return np.asarray(index_mod.lookup(
+                idx, g, ln, use_kernels=args.use_kernels))
+
+        def answer_topk(g, ln):
+            # continuations() masks the gram past the prefix length itself
+            return np.asarray(index_mod.continuations(
+                idx, g, np.maximum(ln - 1, 0), k=args.topk,
+                use_kernels=args.use_kernels)[3])
+
+    for mode, answer in (("lookup", answer_lookup), ("topk", answer_topk)):
+        for batch in (int(b) for b in args.batch_sizes.split(",")):
+            qps, lat = microbatch_drive(answer, grams, lengths, batch)
+            print(f"serve_{mode} batch={batch:>5} qps={qps:>10.0f} "
+                  f"{_percentiles(lat)}")
+
+
+if __name__ == "__main__":
+    main()

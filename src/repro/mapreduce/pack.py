@@ -72,6 +72,18 @@ def unpack_terms(lanes_arr: jax.Array, *, vocab_size: int, sigma: int) -> jax.Ar
     return t[..., :sigma].astype(jnp.int32)
 
 
+def lead_term(lane0: jax.Array, *, vocab_size: int) -> jax.Array:
+    """First (most significant) term id of lane 0 -- the shuffle/serving routing key.
+
+    The packer puts earlier terms in more-significant bits, so the lead term is a
+    single shift of the first lane: the same key the paper's Algorithm-4 partitioner
+    hashes, and the key the serving layer routes queries by so index shards align
+    with reducer outputs.
+    """
+    shift = (terms_per_lane(vocab_size) - 1) * bits_for_vocab(vocab_size)
+    return (lane0.astype(jnp.uint32) >> jnp.uint32(shift)).astype(jnp.uint32)
+
+
 def record_width(sigma: int, vocab_size: int, n_meta: int = 0) -> int:
     """Lanes per shuffle record: packed suffix + weight lane + meta lanes."""
     return n_lanes(sigma, vocab_size) + 1 + n_meta

@@ -1,0 +1,140 @@
+"""Index build->query round trips against the pure-Python oracle."""
+import numpy as np
+import pytest
+
+from repro.core import oracle, run_job
+from repro.core.stats import NGramConfig, NGramStats
+from repro.data import corpus as corpus_mod
+from repro.index import build_index, continuations, lookup
+
+
+def grams_matrix(gram_tuples, sigma):
+    g = np.zeros((len(gram_tuples), sigma), np.int32)
+    ln = np.zeros(len(gram_tuples), np.int32)
+    for i, t in enumerate(gram_tuples):
+        g[i, : len(t)] = t
+        ln[i] = len(t)
+    return g, ln
+
+
+def check_continuations(exp, idx, prefixes, k, **kw):
+    sigma = idx.sigma
+    pg, pl = grams_matrix(prefixes, sigma)
+    nd, total, terms, counts = [np.asarray(x) for x in
+                                continuations(idx, pg, pl, k=k, **kw)]
+    for i, p in enumerate(prefixes):
+        ext = {g[-1]: c for g, c in exp.items()
+               if len(g) == len(p) + 1 and g[: len(p)] == p}
+        assert nd[i] == len(ext), p
+        assert total[i] == sum(ext.values()), p
+        got = [int(c) for c in counts[i] if c > 0]
+        assert got == sorted(ext.values(), reverse=True)[:k], p
+        for t, c in zip(terms[i], counts[i]):     # pairs are real (term, cf) rows
+            if c > 0:
+                assert ext[int(t)] == int(c), p
+
+
+@pytest.fixture(scope="module")
+def corpus_index():
+    """Acceptance-sized fixture: >= 100k tokens through job -> index."""
+    prof = corpus_mod.NYT
+    toks = corpus_mod.zipf_corpus(120_000, prof, seed=3, duplicate_frac=0.05)
+    sigma, tau = 4, 4
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=prof.vocab_size)
+    stats = run_job(toks, cfg)
+    exp = oracle.ngram_counts(toks, sigma, tau)
+    idx = build_index(stats, vocab_size=prof.vocab_size)
+    return exp, idx
+
+
+def test_every_oracle_gram_round_trips(corpus_index):
+    exp, idx = corpus_index
+    gram_tuples = sorted(exp)
+    g, ln = grams_matrix(gram_tuples, idx.sigma)
+    got = np.asarray(lookup(idx, g, ln))
+    want = np.array([exp[t] for t in gram_tuples])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_miss_heavy_batch(corpus_index):
+    exp, idx = corpus_index
+    rng = np.random.default_rng(0)
+    n = 5000
+    ln = rng.integers(1, idx.sigma + 1, n).astype(np.int32)
+    g = rng.integers(1, idx.vocab_size + 1, (n, idx.sigma)).astype(np.int32)
+    g *= np.arange(idx.sigma)[None, :] < ln[:, None]
+    got = np.asarray(lookup(idx, g, ln))
+    want = np.array([exp.get(tuple(int(x) for x in r[: l]), 0)
+                     for r, l in zip(g, ln)])
+    assert (want > 0).mean() < 0.5          # the batch really is miss-heavy
+    np.testing.assert_array_equal(got, want)
+
+
+def test_topk_continuations_match_oracle(corpus_index):
+    exp, idx = corpus_index
+    rng = np.random.default_rng(1)
+    # prefixes of real frequent grams (dense continuation sets) + empty prefix
+    pool = [g[:-1] for g in exp if len(g) >= 2]
+    prefixes = [()] + [pool[i] for i in rng.choice(len(pool), 40)]
+    check_continuations(exp, idx, prefixes, k=8)
+
+
+def test_invalid_and_malformed_queries_are_misses(corpus_index):
+    _, idx = corpus_index
+    sigma, v = idx.sigma, idx.vocab_size
+    g = np.array([
+        [0] * sigma,                         # length 0
+        [v + 1] + [0] * (sigma - 1),         # out-of-vocab term
+        [1, 0] + [2] * (sigma - 2),          # PAD inside the gram
+        [1] * sigma,                         # length beyond sigma
+    ], np.int32)
+    ln = np.array([0, 1, 3, sigma + 1], np.int32)
+    assert np.asarray(lookup(idx, g, ln)).tolist() == [0, 0, 0, 0]
+
+
+def test_kernel_path_matches_ref_path():
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 50, 4000)
+    cfg = NGramConfig(sigma=5, tau=2, vocab_size=49)
+    stats = run_job(toks, cfg)
+    exp = oracle.ngram_counts(toks, 5, 2)
+    idx = build_index(stats, vocab_size=49)
+    gram_tuples = sorted(exp)
+    g, ln = grams_matrix(gram_tuples, 5)
+    ref = np.asarray(lookup(idx, g, ln))
+    ker = np.asarray(lookup(idx, g, ln, use_kernels=True))
+    np.testing.assert_array_equal(ref, ker)
+    np.testing.assert_array_equal(ref, [exp[t] for t in gram_tuples])
+    prefixes = [(), (1,), (2, 1), gram_tuples[-1][:2]]
+    check_continuations(exp, idx, prefixes, k=4, use_kernels=True)
+
+
+def test_bucketed_series_counts_marginalize():
+    """An index built from a time-series job serves the marginal cf."""
+    from repro.core import suffix_sigma
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 20, 2000)
+    buckets = rng.integers(0, 3, toks.shape[0])
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=19, n_buckets=3)
+    stats = suffix_sigma.run(toks, cfg, bucket_ids=buckets)
+    idx = build_index(stats, vocab_size=19)
+    exp = oracle.ngram_counts(toks, 3, 2)
+    gram_tuples = sorted(exp)
+    g, ln = grams_matrix(gram_tuples, 3)
+    np.testing.assert_array_equal(np.asarray(lookup(idx, g, ln)),
+                                  [exp[t] for t in gram_tuples])
+
+
+def test_empty_and_tiny_index():
+    empty = NGramStats(np.zeros((0, 3), np.int32), np.zeros(0, np.int32),
+                       np.zeros(0, np.int64))
+    idx = build_index(empty, vocab_size=10)
+    g, ln = grams_matrix([(1,), (1, 2)], 3)
+    assert np.asarray(lookup(idx, g, ln)).tolist() == [0, 0]
+    nd, total, terms, counts = continuations(idx, g, np.zeros(2, np.int32), k=2)
+    assert np.asarray(nd).tolist() == [0, 0]
+    one = NGramStats(np.array([[5, 0, 0]], np.int32), np.array([1], np.int32),
+                     np.array([7], np.int64))
+    idx1 = build_index(one, vocab_size=10)
+    g, ln = grams_matrix([(5,), (6,)], 3)
+    assert np.asarray(lookup(idx1, g, ln)).tolist() == [7, 0]
