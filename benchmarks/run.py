@@ -87,7 +87,8 @@ def main() -> None:
 
     from benchmarks import serving
     for r in serving.run(max(n // 2, 10_000),
-                         n_queries=4_000 if args.quick else 12_000):
+                         n_queries=4_000 if args.quick else 12_000,
+                         compress=not args.quick):
         _csv(r["name"], r["us"], r["derived"])
 
     from benchmarks import ablations

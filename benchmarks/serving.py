@@ -2,24 +2,36 @@
 
 One entry per (path, batch) cell so the serving subsystem shows up in the perf
 trajectory next to the job-side kernels: point lookup and top-k continuation,
-micro-batched at {1, 64, 4096}, plus the index freeze itself.
+micro-batched at {1, 64, 4096}, plus the index freeze itself.  With
+``compress=True`` (or ``--compress`` on the CLI) every cell is measured for the
+front-coded + Elias-Fano layout too, and the header rows report bytes and
+bytes-per-gram for both.
+
+The compressed layout's contract -- >= 2x smaller, batch-4096 latency within 3x
+of the uncompressed plan -- is checked from *interleaved* uncompressed /
+compressed batches (``--compress`` on the CLI), so host-load drift hits both
+sides equally instead of whichever layout happened to run last.
+
+    PYTHONPATH=src python benchmarks/serving.py --compress
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 BATCH_SIZES = (1, 64, 4096)
+CONTRACT_BATCH = 4096
 
 
-def run(n_tokens: int = 60_000, *, n_queries: int = 12_000,
-        topk: int = 8) -> list[dict]:
+def _setup(n_tokens: int, n_queries: int, topk: int, compress: bool):
     from repro.core import run_job
     from repro.core.stats import NGramConfig
     from repro.data import corpus as corpus_mod
-    from repro.index import build_index, continuations, lookup
-    from repro.launch.serve_ngrams import make_query_stream, microbatch_drive
+    from repro.index import (build_index, compress_index, continuations,
+                             lookup)
+    from repro.launch.serve_ngrams import make_query_stream
 
     prof = corpus_mod.NYT
     tokens = corpus_mod.zipf_corpus(n_tokens, prof, seed=0, duplicate_frac=0.02)
@@ -27,29 +39,111 @@ def run(n_tokens: int = 60_000, *, n_queries: int = 12_000,
     stats = run_job(tokens, cfg)
 
     rows: list[dict] = []
+    n_grams = max(len(stats), 1)
     t0 = time.perf_counter()
     idx = build_index(stats, vocab_size=prof.vocab_size)
     idx.lanes.block_until_ready()
     rows.append({"name": "index_build", "us": (time.perf_counter() - t0) * 1e6,
-                 "derived": f"rows={len(stats)};bytes={idx.nbytes}"})
+                 "derived": f"rows={len(stats)};bytes={idx.nbytes};"
+                            f"bpg={idx.nbytes / n_grams:.2f}"})
+    layouts = [("", idx)]
+    if compress:
+        t0 = time.perf_counter()
+        cidx = compress_index(idx)
+        cidx.heads.block_until_ready()
+        rows.append({"name": "index_compress",
+                     "us": (time.perf_counter() - t0) * 1e6,
+                     "derived": f"rows={len(stats)};bytes={cidx.nbytes};"
+                                f"bpg={cidx.nbytes / n_grams:.2f};"
+                                f"ratio={idx.nbytes / cidx.nbytes:.2f}"})
+        layouts.append(("_comp", cidx))
 
     grams, lengths = make_query_stream(stats, n_queries=n_queries, sigma=5,
                                        vocab_size=prof.vocab_size, miss_frac=0.3)
 
-    def answer_lookup(g, ln):
-        return np.asarray(lookup(idx, g, ln))
+    def answers(ix):
+        def answer_lookup(g, ln):
+            return np.asarray(lookup(ix, g, ln))
 
-    def answer_topk(g, ln):
-        # continuations() masks the gram past the prefix length itself
-        return np.asarray(continuations(idx, g, np.maximum(ln - 1, 0),
-                                        k=topk)[3])
+        def answer_topk(g, ln):
+            # continuations() masks the gram past the prefix length itself
+            return np.asarray(continuations(ix, g, np.maximum(ln - 1, 0),
+                                            k=topk)[3])
+        return answer_lookup, answer_topk
 
-    for mode, answer in (("lookup", answer_lookup), ("topk", answer_topk)):
-        for batch in BATCH_SIZES:
-            qps, lat = microbatch_drive(answer, grams, lengths, batch)
-            rows.append({
-                "name": f"serve_{mode}_b{batch}",
-                "us": float(np.median(lat) * 1e6),
-                "derived": f"qps={qps:.0f}",
-            })
+    return rows, layouts, answers, grams, lengths
+
+
+def run(n_tokens: int = 60_000, *, n_queries: int = 12_000,
+        topk: int = 8, compress: bool = False,
+        _ctx: tuple | None = None) -> list[dict]:
+    from repro.launch.serve_ngrams import microbatch_drive
+
+    rows, layouts, answers, grams, lengths = _ctx if _ctx is not None else \
+        _setup(n_tokens, n_queries, topk, compress)
+    for tag, ix in layouts:
+        answer_lookup, answer_topk = answers(ix)
+        for mode, answer in (("lookup", answer_lookup), ("topk", answer_topk)):
+            for batch in BATCH_SIZES:
+                qps, lat = microbatch_drive(answer, grams, lengths, batch)
+                rows.append({
+                    "name": f"serve_{mode}{tag}_b{batch}",
+                    "us": float(np.median(lat) * 1e6),
+                    "derived": f"qps={qps:.0f}",
+                })
     return rows
+
+
+def contract_slowdown(layouts, answers, grams, lengths, *,
+                      batch: int = CONTRACT_BATCH, reps: int = 9) -> float:
+    """Worst compressed/uncompressed median-latency ratio over both modes,
+    measured batch-interleaved so load transients cancel."""
+    (_, idx), (_, cidx) = layouts
+    g, ln = grams[:batch], lengths[:batch]
+    worst = 0.0
+    for mode_i in (0, 1):
+        a_u = answers(idx)[mode_i]
+        a_c = answers(cidx)[mode_i]
+        a_u(g, ln), a_c(g, ln), a_u(g, ln), a_c(g, ln)     # compile + warm
+        lat_u, lat_c = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            a_u(g, ln)
+            lat_u.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            a_c(g, ln)
+            lat_c.append(time.perf_counter() - t0)
+        worst = max(worst, float(np.median(lat_c) / np.median(lat_u)))
+    return worst
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=60_000)
+    ap.add_argument("--queries", type=int, default=12_000)
+    ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--compress", action="store_true",
+                    help="also measure the front-coded + Elias-Fano layout and "
+                         "check the size/latency contract")
+    args = ap.parse_args()
+    ctx = _setup(args.tokens, max(args.queries, CONTRACT_BATCH), args.topk,
+                 args.compress)
+    rows = run(args.tokens, n_queries=args.queries, topk=args.topk,
+               compress=args.compress, _ctx=ctx)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    if args.compress:
+        _, layouts, answers, grams, lengths = ctx
+        nb, nc = layouts[0][1].nbytes, layouts[1][1].nbytes
+        ratio = nb / nc
+        slowdown = contract_slowdown(layouts, answers, grams, lengths)
+        print(f"# compressed layout: {nb} -> {nc} bytes "
+              f"({ratio:.2f}x smaller), worst interleaved b{CONTRACT_BATCH} "
+              f"median-latency slowdown {slowdown:.2f}x")
+        assert ratio >= 2.0, f"compression ratio {ratio:.2f} < 2x contract"
+        assert slowdown <= 3.0, f"slowdown {slowdown:.2f} > 3x contract"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,29 @@
 #!/usr/bin/env bash
 # One-step verify: install dev deps (best effort -- the suite degrades
-# gracefully without hypothesis) and run the tier-1 test command.
+# gracefully without hypothesis / pytest-cov) and run the tier-1 test command.
+#
+#   scripts/ci.sh            # full tier-1 suite (+ coverage gate if available)
+#   scripts/ci.sh --fast     # quick tier: skips the slow corpus/property tiers
+#
+# The coverage gate engages whenever pytest-cov is importable; the floor is
+# seeded conservatively below the suite's measured coverage so it catches
+# wholesale test deletion, not refactors.  Ratchet it up as coverage grows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt \
     || echo "warning: dev dep install failed (offline?); continuing" >&2
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+EXTRA=()
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    EXTRA+=(-m "not slow")
+fi
+if python -c "import pytest_cov" 2>/dev/null; then
+    EXTRA+=(--cov=repro --cov-report=term --cov-fail-under=60)
+else
+    echo "note: pytest-cov not installed; running without the coverage gate" >&2
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    ${EXTRA[@]+"${EXTRA[@]}"} "$@"

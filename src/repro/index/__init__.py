@@ -1,16 +1,24 @@
 """Device-resident n-gram index + batched query serving.
 
 The read side of the system: ``build`` freezes a finished job's ``NGramStats``
-into a sorted packed-lane artifact, ``query`` answers batched point-count and
-top-k-continuation queries against it, and ``serve`` shards both over a mesh
-with the job shuffle's own hash partitioner (shards align with reducer outputs).
+into a sorted packed-lane artifact, ``compress`` re-encodes it losslessly
+(front-coded blocks + Elias-Fano monotone structures, ~3x smaller), ``query``
+answers batched point-count and top-k-continuation queries against either
+layout, and ``serve`` shards both over a mesh with the job shuffle's own hash
+partitioner (shards align with reducer outputs; empty-prefix top-k merges
+across shards on the host).
 """
-from . import build, query, serve
+from . import build, compress, query, serve
 from .build import NGramIndex, build_index
+from .compress import (CompressedNGramIndex, EliasFano, build_compressed_index,
+                       compress_index)
 from .query import continuations, lookup
-from .serve import ShardedNGramIndex, build_sharded_index, make_server
+from .serve import (ShardedNGramIndex, build_sharded_index,
+                    empty_prefix_continuations, make_server)
 from .serve import serve as serve_queries
 
-__all__ = ["build", "query", "serve", "NGramIndex", "build_index", "lookup",
-           "continuations", "ShardedNGramIndex", "build_sharded_index",
-           "make_server", "serve_queries"]
+__all__ = ["build", "compress", "query", "serve", "NGramIndex", "build_index",
+           "CompressedNGramIndex", "EliasFano", "build_compressed_index",
+           "compress_index", "lookup", "continuations", "ShardedNGramIndex",
+           "build_sharded_index", "empty_prefix_continuations", "make_server",
+           "serve_queries"]

@@ -1,0 +1,393 @@
+"""Compressed index layout: front-coded blocks + Elias-Fano monotone structures.
+
+The frozen :class:`~repro.index.build.NGramIndex` stores every row's packed
+lanes verbatim; past VMEM-resident shard sizes that is the dominant cost.
+Following Pibiri & Venturini (*Handling Massive N-Gram Datasets Efficiently*),
+the sorted immutable layout admits two classic compressors, both implemented
+here in device-decodable form:
+
+**Front-coded blocks.**  Rows are cut into fixed ``block_size`` blocks.  Each
+block stores its first row verbatim (the *head*, kept bit-packed in lane form so
+the existing lexicographic binary search runs on heads unchanged) and every
+other row as ``(lcp, suffix terms)`` against its predecessor: ``lcp`` values ride
+in a nibble/byte stream, suffix terms in a ``bits_for_vocab``-wide stream, and a
+per-block base offset (cumulative suffix-term count) replaces per-row pointers
+-- in-block offsets are a prefix sum of ``store_len - lcp``, which the decoder
+recomputes on the fly.  Prefix sharing is measured at build time with the same
+``lcp_boundary`` kernel the SUFFIX-sigma reducer uses.
+
+**Elias-Fano.**  Every monotone structure the query plan reads (section
+starts, the continuation fanout table, ``cont_cumsum``) is split into
+unary-coded high bits (uint32 words plus a per-word rank directory) and packed
+low bits; ``select`` is a branchless
+fixed-trip-count search over the rank directory plus an in-word popcount scan,
+so bracket lookups and continuation-mass queries stay jittable and batched.
+
+Row order, sentinel padding, and tie-breaks are inherited *exactly* from the
+uncompressed index -- ``compress_index`` is a pure re-encoding, which is what
+makes bit-exact differential testing against :class:`NGramIndex` possible (see
+``tests/test_compress.py``; a silently corrupted count would otherwise hide
+behind plausible-looking output).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitpack import extract_bits, pack_bits
+from repro.mapreduce import pack as packing
+from repro.core.stats import NGramStats
+from repro.kernels.bsearch import search_steps
+from .build import NGramIndex, build_index
+
+
+# --------------------------------------------------------------------------- #
+# Elias-Fano
+# --------------------------------------------------------------------------- #
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EliasFano:
+    """Monotone non-decreasing uint sequence in ~(2 + log2(U/n)) bits/value.
+
+    ``high`` holds the unary upper parts (one i sits at bit ``i + (v_i >> l)``),
+    ``word_rank`` the cumulative popcount per high word (the select directory),
+    ``low`` the packed ``low_bits``-wide lower parts.
+    """
+
+    low: jax.Array        # [lw] uint32 packed low bits
+    high: jax.Array       # [hw] uint32 unary high bits
+    word_rank: jax.Array  # [hw+1] uint32 cumulative popcount of ``high``
+    n: int = dataclasses.field(metadata=dict(static=True))
+    low_bits: int = dataclasses.field(metadata=dict(static=True))
+    universe: int = dataclasses.field(metadata=dict(static=True))
+
+    @staticmethod
+    def encode(values: np.ndarray, universe: int | None = None) -> "EliasFano":
+        v = np.asarray(values, np.uint64)
+        n = int(v.shape[0])
+        if n == 0:
+            raise ValueError("cannot Elias-Fano encode an empty sequence")
+        if np.any(np.diff(v.astype(np.int64)) < 0):
+            raise ValueError("sequence is not monotone non-decreasing")
+        u = int(v.max()) if universe is None else int(universe)
+        if u < int(v.max()):
+            raise ValueError(f"universe {u} < max value {int(v.max())}")
+        l = max(0, int(math.floor(math.log2(max(u, 1) / n))) if u > n else 0)
+        l = min(l, 31)
+        low = pack_bits((v & np.uint64((1 << l) - 1)).astype(np.uint32), l)
+        ones = np.arange(n, dtype=np.uint64) + (v >> np.uint64(l))
+        n_bits = n + (u >> l) + 1
+        hw = max(1, -(-n_bits // 32))
+        high = np.zeros((hw,), np.uint32)
+        np.bitwise_or.at(high, (ones >> np.uint64(5)).astype(np.int64),
+                         np.uint32(1) << (ones & np.uint64(31)).astype(np.uint32))
+        pop = np.array([bin(int(w)).count("1") for w in high], np.uint32)
+        word_rank = np.zeros((hw + 1,), np.uint32)
+        word_rank[1:] = np.cumsum(pop, dtype=np.uint32)
+        return EliasFano(jnp.asarray(low), jnp.asarray(high),
+                         jnp.asarray(word_rank), n=n, low_bits=l, universe=u)
+
+    def select(self, i: jax.Array) -> jax.Array:
+        """Values [*i.shape] uint32 at positions ``i`` (0 <= i < n), jit-safe."""
+        i = i.astype(jnp.uint32)
+        # word holding the i-th one: last w with word_rank[w] <= i
+        w = (jnp.searchsorted(self.word_rank, i, side="right") - 1).astype(jnp.int32)
+        w = jnp.clip(w, 0, self.high.shape[0] - 1)
+        rank_in = i - jnp.take(self.word_rank, w)
+        word = jnp.take(self.high, w)
+        bits = (word[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+        cum = jnp.cumsum(bits, axis=-1)
+        bitpos = jnp.sum((cum <= rank_in[..., None]).astype(jnp.uint32), axis=-1)
+        one_pos = w.astype(jnp.uint32) * 32 + bitpos
+        high_val = one_pos - i
+        low_val = extract_bits(self.low, i, self.low_bits)
+        return (high_val << jnp.uint32(self.low_bits)) | low_val
+
+    def decode_all(self) -> jax.Array:
+        """All n values [n] uint32 in one pass over the high words.
+
+        The batched-select fast path: a query batch issuing more selects than
+        ~n/32 amortizes this whole-table decode (O(high words + n) work, and a
+        *transient* buffer -- the resident layout stays compressed) and then
+        reads answers with one plain gather each, instead of paying a
+        rank-directory search per query.
+        """
+        hw = self.high.shape[0]
+        j = jnp.arange(32, dtype=jnp.uint32)
+        bits = (self.high[:, None] >> j[None, :]) & jnp.uint32(1)    # [hw, 32]
+        pos = jnp.arange(hw, dtype=jnp.uint32)[:, None] * 32 + j
+        # compact the one-positions by sorting (ones first, position order kept):
+        # XLA lowers sort far better than the equivalent scatter on every
+        # backend we serve from
+        masked = jnp.where(bits > 0, pos, jnp.uint32(0xFFFFFFFF)).reshape(-1)
+        one_pos = jax.lax.sort(masked)[:self.n]
+        high_val = one_pos - jnp.arange(self.n, dtype=jnp.uint32)
+        low_val = extract_bits(self.low, jnp.arange(self.n), self.low_bits)
+        return (high_val << jnp.uint32(self.low_bits)) | low_val
+
+    def select_many(self, i: jax.Array) -> jax.Array:
+        """:meth:`select`, but batch-adaptive: whole-decode + gather when the
+        (static) batch size amortizes it, per-query directory search when not."""
+        if self.n <= 64 * int(np.prod(i.shape)):
+            return jnp.take(self.decode_all(), jnp.clip(i, 0, self.n - 1))
+        return self.select(i)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(a).nbytes)
+                   for a in (self.low, self.high, self.word_rank))
+
+
+# --------------------------------------------------------------------------- #
+# Compressed index
+# --------------------------------------------------------------------------- #
+
+def lcp_width_for(sigma: int) -> int:
+    """Nibble for sigma <= 14, byte beyond: lcp values never straddle a word."""
+    if sigma <= 14:
+        return 4
+    if sigma <= 254:
+        return 8
+    raise ValueError(f"sigma {sigma} out of supported range")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompressedNGramIndex:
+    """Front-coded + Elias-Fano re-encoding of an :class:`NGramIndex`.
+
+    Same logical rows in the same order (sentinels included); every query path
+    must answer bit-identically to the uncompressed index.
+    """
+
+    # --- point-lookup view -------------------------------------------------- #
+    heads: jax.Array         # [nb, 1+L] uint32 (row length | packed head lanes)
+    lcps: jax.Array          # packed lcp stream, lcp_width bits/row
+    payload: jax.Array       # packed suffix-term stream, term_bits bits/term
+    block_base: jax.Array    # [nb+1] uint32 cumulative suffix terms per block
+    counts_packed: jax.Array  # packed cf stream, count_width bits/row
+    ef_section: EliasFano    # section_start  (sigma+1 values, universe=size)
+    # (no point-view fanout: point lookups bsearch ALL heads -- with one search
+    # per query a bracket fetch costs more than the steps it saves; the
+    # continuation path runs two searches per query and keeps its bracket)
+    # --- continuation view -------------------------------------------------- #
+    cont_heads: jax.Array        # [nb, 1+L] uint32 (gram length | prefix lanes)
+    cont_lcps: jax.Array
+    cont_payload: jax.Array
+    cont_block_base: jax.Array
+    cont_last_packed: jax.Array   # packed next-term stream, term_bits bits/row
+    cont_counts_packed: jax.Array  # packed cf stream, count_width bits/row
+    ef_cont_fanout: EliasFano
+    ef_cumsum: EliasFano          # cont_cumsum (size+1 values)
+    # --- static meta -------------------------------------------------------- #
+    sigma: int = dataclasses.field(metadata=dict(static=True))
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    size: int = dataclasses.field(metadata=dict(static=True))
+    fanout_shift: int = dataclasses.field(metadata=dict(static=True))
+    n_fanout: int = dataclasses.field(metadata=dict(static=True))
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+    head_span: int = dataclasses.field(metadata=dict(static=True))
+    head_steps: int = dataclasses.field(metadata=dict(static=True))
+    term_bits: int = dataclasses.field(metadata=dict(static=True))
+    count_width: int = dataclasses.field(metadata=dict(static=True))
+    lcp_width: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_lanes(self) -> int:
+        return packing.n_lanes(self.sigma, self.vocab_size)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.size // self.block_size
+
+    @property
+    def n_rows(self) -> int:
+        """Real (non-sentinel) rows; the last section end."""
+        return int(np.asarray(self.ef_section.select(
+            jnp.asarray([self.ef_section.n - 1]))[0]))
+
+    @property
+    def nbytes(self) -> int:
+        arrays = (self.heads, self.lcps, self.payload, self.block_base,
+                  self.counts_packed, self.cont_heads, self.cont_lcps,
+                  self.cont_payload, self.cont_block_base,
+                  self.cont_last_packed, self.cont_counts_packed)
+        efs = (self.ef_section, self.ef_cont_fanout, self.ef_cumsum)
+        return (sum(int(np.asarray(a).nbytes) for a in arrays)
+                + sum(e.nbytes for e in efs))
+
+    def section_starts(self) -> jax.Array:
+        """Decoded [sigma+1] int32 section starts (the in-block length key)."""
+        return self.ef_section.decode_all().astype(jnp.int32)
+
+
+def _row_lengths(section_start: np.ndarray, size: int) -> np.ndarray:
+    """Row length 1..sigma (sentinels: sigma+1) from the section start table."""
+    return np.searchsorted(section_start, np.arange(size), side="right") \
+        .astype(np.int32)
+
+
+def _front_code(terms: np.ndarray, lanes: np.ndarray, row_len: np.ndarray,
+                *, len_off: int, block_size: int, term_bits: int,
+                lcp_width: int, payload_words: int | None):
+    """(heads, lcps, payload, block_base) for one view.
+
+    terms  : [size, S] int32 decoded term rows (view order, sentinels included)
+    lanes  : [size, L] uint32 packed rows (head storage, for the head bsearch)
+    len_off: 0 for the point view, 1 for the continuation (prefix) view --
+             stored terms per row = clip(row_len - len_off, 0, S); everything
+             past that is PAD and reconstructed as 0.
+    """
+    from repro.kernels import ops as kops
+    size, sigma = terms.shape
+    b = block_size
+    if size % b:
+        raise ValueError(f"size {size} not a multiple of block_size {b}")
+    store_len = np.clip(row_len - len_off, 0, sigma).astype(np.int32)
+    lcp = np.asarray(kops.lcp_boundary(jnp.asarray(terms))[0])
+    lcp = np.minimum(lcp, store_len)
+    lcp[0::b] = 0                      # block heads restart the coding chain
+    ns = store_len - lcp
+    j = np.arange(sigma)[None, :]
+    stored_mask = (j >= lcp[:, None]) & (j < store_len[:, None])
+    suffix = terms[stored_mask].astype(np.uint32)   # C-order: row-major ✓
+    cum = np.zeros(size + 1, np.int64)
+    np.cumsum(ns, out=cum[1:])
+    # size % b == 0, so the stride already ends on cum[size]: [nb+1] entries
+    block_base = cum[0::b].astype(np.uint32)
+    payload = pack_bits(suffix, term_bits, n_words=payload_words)
+    lcps = pack_bits(lcp.astype(np.uint32), lcp_width)
+    heads = np.concatenate(
+        [row_len[0::b].astype(np.uint32)[:, None], lanes[0::b]], axis=1)
+    return heads, lcps, payload, block_base
+
+
+def compress_index(idx: NGramIndex, *, block_size: int = 4,
+                   count_width: int | None = None,
+                   payload_words: int | None = None,
+                   cont_payload_words: int | None = None,
+                   cumsum_universe: int | None = None,
+                   head_span: int | None = None) -> CompressedNGramIndex:
+    """Re-encode ``idx`` losslessly.  The capacity overrides exist so sharded
+    builds can force identical array shapes / static meta across shards
+    (stacked pytrees need a common treedef)."""
+    sigma, vocab, size = idx.sigma, idx.vocab_size, idx.size
+    tb = packing.bits_for_vocab(vocab)
+    lw = lcp_width_for(sigma)
+    section_start = np.asarray(idx.section_start)
+    row_len = _row_lengths(section_start, size)
+    counts = np.asarray(idx.counts)
+    cw = count_width if count_width is not None else \
+        max(1, int(counts.max()).bit_length() if counts.size else 1)
+
+    lanes = np.asarray(idx.lanes)
+    terms = np.asarray(packing.unpack_terms(
+        jnp.asarray(lanes), vocab_size=vocab, sigma=sigma))
+    heads, lcps, payload, block_base = _front_code(
+        terms, lanes, row_len, len_off=0, block_size=block_size,
+        term_bits=tb, lcp_width=lw, payload_words=payload_words)
+
+    c_lanes = np.asarray(idx.cont_prefix)
+    c_terms = np.asarray(packing.unpack_terms(
+        jnp.asarray(c_lanes), vocab_size=vocab, sigma=sigma))
+    c_heads, c_lcps, c_payload, c_block_base = _front_code(
+        c_terms, c_lanes, row_len, len_off=1, block_size=block_size,
+        term_bits=tb, lcp_width=lw, payload_words=cont_payload_words)
+
+    fan = np.asarray(idx.fanout, np.int64).reshape(-1)
+    c_fan = np.asarray(idx.cont_fanout, np.int64).reshape(-1)
+    if head_span is None:
+        # widest fanout cell measured in blocks: every head-search bracket is
+        # [lo // B, lo // B + head_span), so the fixed-trip head bsearch stops
+        # after log2(span) instead of log2(n_blocks) steps -- the compressed
+        # layout's analogue of the fanout table shrinking the row search.  The
+        # +1 covers a cell straddling one extra block boundary than its row
+        # count suggests.
+        head_span = 1
+        for t in (np.asarray(idx.fanout), np.asarray(idx.cont_fanout)):
+            if t.size:
+                head_span = max(head_span, int(np.max(
+                    -(-t[:, 1:] // block_size) - t[:, :-1] // block_size)) + 1)
+        head_span = min(head_span, size // block_size)
+    cumsum = np.asarray(idx.cont_cumsum, np.int64)
+    for name, seq in (("fanout", fan), ("cont_fanout", c_fan)):
+        if seq.size and np.any(np.diff(seq) < 0):
+            raise AssertionError(f"{name} table is not monotone when flattened")
+
+    return CompressedNGramIndex(
+        heads=jnp.asarray(heads), lcps=jnp.asarray(lcps),
+        payload=jnp.asarray(payload), block_base=jnp.asarray(block_base),
+        counts_packed=jnp.asarray(pack_bits(counts.astype(np.uint32), cw)),
+        ef_section=EliasFano.encode(section_start, universe=size),
+        cont_heads=jnp.asarray(c_heads), cont_lcps=jnp.asarray(c_lcps),
+        cont_payload=jnp.asarray(c_payload),
+        cont_block_base=jnp.asarray(c_block_base),
+        cont_last_packed=jnp.asarray(
+            pack_bits(np.asarray(idx.cont_last, np.uint32), tb)),
+        cont_counts_packed=jnp.asarray(
+            pack_bits(np.asarray(idx.cont_counts, np.uint32), cw)),
+        ef_cont_fanout=EliasFano.encode(c_fan, universe=size),
+        ef_cumsum=EliasFano.encode(
+            cumsum, universe=cumsum_universe if cumsum_universe is not None
+            else int(cumsum[-1])),
+        sigma=sigma, vocab_size=vocab, size=size,
+        fanout_shift=idx.fanout_shift, n_fanout=idx.n_fanout,
+        block_size=block_size, head_span=head_span,
+        head_steps=search_steps(head_span),
+        term_bits=tb, count_width=cw, lcp_width=lw,
+    )
+
+
+def build_compressed_index(stats: NGramStats, *, vocab_size: int,
+                           pad_to: int | None = None,
+                           block_size: int = 4) -> CompressedNGramIndex:
+    """Job output -> compressed index (freeze uncompressed, then re-encode)."""
+    return compress_index(build_index(stats, vocab_size=vocab_size,
+                                      pad_to=pad_to), block_size=block_size)
+
+
+def decode_view(cidx: CompressedNGramIndex, view: str = "point") -> np.ndarray:
+    """Reconstruct the full [size, S] term matrix of one view (host, for tests).
+
+    Exactness here is the structural half of the parity argument: if the decode
+    round-trips every row, any query mismatch must be in the search plan.
+    """
+    if view == "point":
+        lcps, payload, base, len_off = (cidx.lcps, cidx.payload,
+                                        cidx.block_base, 0)
+    elif view == "cont":
+        lcps, payload, base, len_off = (cidx.cont_lcps, cidx.cont_payload,
+                                        cidx.cont_block_base, 1)
+    else:
+        raise ValueError(view)
+    size, sigma, b = cidx.size, cidx.sigma, cidx.block_size
+    sec = np.asarray(cidx.section_starts())
+    row_len = _row_lengths(sec, size)
+    store_len = np.clip(row_len - len_off, 0, sigma)
+    lcp = np.asarray(extract_bits(lcps, jnp.arange(size), cidx.lcp_width)) \
+        .astype(np.int64)
+    ns = store_len - lcp
+    total = int(np.asarray(base)[-1])
+    vals = np.asarray(extract_bits(payload, jnp.arange(max(total, 1)),
+                                   cidx.term_bits)).astype(np.int64)[:total]
+    cum = np.zeros(size + 1, np.int64)
+    np.cumsum(ns, out=cum[1:])
+    j = np.arange(sigma)[None, :]
+    tpos = cum[:-1, None] + (j - lcp[:, None])
+    stored_mask = (j >= lcp[:, None]) & (j < store_len[:, None])
+    aligned = np.where(stored_mask, vals[np.clip(tpos, 0, max(total - 1, 0))], 0)
+    lcp_b = lcp.reshape(-1, b)
+    aligned_b = aligned.reshape(-1, b, sigma)
+    slen_b = store_len.reshape(-1, b)
+    cand = np.where(lcp_b[:, :, None] <= j[None], np.arange(b)[None, :, None], -1)
+    prov = np.maximum.accumulate(cand, axis=1)
+    taken = np.take_along_axis(aligned_b, prov, axis=1)
+    slen_p = np.take_along_axis(
+        np.broadcast_to(slen_b[:, :, None], aligned_b.shape), prov, axis=1)
+    out = np.where(j[None] < slen_p, taken, 0).reshape(size, sigma)
+    return out.astype(np.int64)

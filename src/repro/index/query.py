@@ -5,13 +5,29 @@ inside (fixed-iteration binary searches; misses and invalid queries resolve to
 count 0 / empty completion lists through masks, never through control flow), so
 one compiled program serves any traffic mix.
 
-Query plan (both views):
+Query plan, uncompressed :class:`NGramIndex` (both views):
 
   1. length + lead-term bucket -> [lo, hi) bracket from the fanout table (O(1));
   2. lexicographic lower/upper bound on the packed lanes inside the bracket --
      ``use_kernels=True`` routes the search through the Pallas ``bsearch`` kernel
      (``repro.kernels.ops``), else the pure-jnp ``ref`` path (same contract);
   3. gather counts / top-k continuation rows at the found positions.
+
+Compressed :class:`~repro.index.compress.CompressedNGramIndex` (same public
+entry points; dispatch is on the index type, which is static under jit):
+
+  1. bracket as above, but the fanout cell boundaries come from Elias-Fano
+     ``select`` instead of a dense table;
+  2. the same bsearch (kernel or ref) runs over the per-block *head* rows --
+     heads carry an explicit length column, so one search spans all sections;
+  3. the candidate block is decoded and ranked in one pass (``block_decode``
+     kernel or its ref oracle): global position = block * block_size + in-block
+     rank, clipped into [lo, hi);
+  4. counts / continuation rows are gathered from the fixed-width bit streams.
+
+Because rank counting is global (out-of-bracket rows still compare consistently
+under the (length, terms) order) the clip step makes bracketed and global
+answers identical -- the parity suite leans on this.
 
 Validity rules: a query gram must have 1 <= len <= sigma, all terms in 1..vocab
 before the PAD tail, and nothing after it.  Continuation prefixes allow len 0
@@ -25,18 +41,27 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bitpack import extract_bits
 from repro.mapreduce import pack as packing
 from .build import NGramIndex, search_steps
+from .compress import CompressedNGramIndex, EliasFano
 
 
-def _search(idx: NGramIndex, view: jax.Array, q_lanes: jax.Array, lo: jax.Array,
-            hi: jax.Array, *, upper: bool, use_kernels: bool) -> jax.Array:
-    steps = search_steps(idx.size)
+def _bsearch(view: jax.Array, q_lanes: jax.Array, lo: jax.Array,
+             hi: jax.Array, *, upper: bool, use_kernels: bool,
+             steps: int | None = None) -> jax.Array:
+    if steps is None:
+        steps = search_steps(view.shape[0])
     if use_kernels:
         from repro.kernels import ops as kops
         return kops.bsearch(view, q_lanes, lo, hi, upper=upper, steps=steps)
     from repro.kernels import ref as kref
     return kref.bsearch_ref(view, q_lanes, lo, hi, upper=upper, steps=steps)
+
+
+def _search(idx: NGramIndex, view: jax.Array, q_lanes: jax.Array, lo: jax.Array,
+            hi: jax.Array, *, upper: bool, use_kernels: bool) -> jax.Array:
+    return _bsearch(view, q_lanes, lo, hi, upper=upper, use_kernels=use_kernels)
 
 
 def _bracket(idx: NGramIndex, table: jax.Array, length: jax.Array,
@@ -61,10 +86,125 @@ def _clean(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
     return grams, lengths, valid
 
 
+# --------------------------------------------------------------------------- #
+# compressed-index plan: EF bracket -> head bsearch -> block decode -> gather
+# --------------------------------------------------------------------------- #
+
+def _c_head_bracket(cidx: CompressedNGramIndex, table: EliasFano,
+                    length: jax.Array, lead: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """[lo_h, hi_h) *block* bracket of the (length, lead-term bucket) cell.
+
+    One EF select fetches the cell's start row; the static ``head_span`` (the
+    widest cell measured at build time, in blocks) bounds its width, which both
+    seeds the head bsearch and caps its trip count (``head_steps``) -- without
+    the fanout bracket every head probe would pay log2(n_blocks) steps.  The
+    cell end itself is never needed: ranks count against the *global*
+    (length, terms) order, under which rows outside the cell still compare
+    consistently, so cell-clipping the result would be a no-op for any valid
+    query (invalid ones are masked upstream).
+    """
+    sec = jnp.clip(length - 1, 0, cidx.sigma - 1)
+    b = jnp.clip((lead >> jnp.uint32(cidx.fanout_shift)).astype(jnp.int32),
+                 0, cidx.n_fanout - 1)
+    flat = sec * (cidx.n_fanout + 1) + b
+    lo_h = table.select_many(flat).astype(jnp.int32) // cidx.block_size
+    return lo_h, jnp.minimum(lo_h + cidx.head_span, cidx.n_blocks)
+
+
+def _c_rank(cidx: CompressedNGramIndex, blk: jax.Array, q_terms: jax.Array,
+            q_len: jax.Array, sec: jax.Array, *, cont: bool,
+            use_kernels: bool) -> tuple[jax.Array, jax.Array]:
+    """(cnt_lt, cnt_eq) of each query inside its candidate block."""
+    if cont:
+        args = (cidx.cont_lcps, cidx.cont_payload, cidx.cont_block_base)
+    else:
+        args = (cidx.lcps, cidx.payload, cidx.block_base)
+    kw = dict(term_bits=cidx.term_bits, lcp_width=cidx.lcp_width,
+              block_size=cidx.block_size, len_off=1 if cont else 0)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.block_decode(*args, sec, blk, q_terms, q_len, **kw)
+    from repro.kernels import ref as kref
+    return kref.block_decode_ref(*args, sec, blk, q_terms, q_len, **kw)
+
+
+def _c_lookup_packed(cidx: CompressedNGramIndex, q_lanes: jax.Array,
+                     q_len: jax.Array, valid: jax.Array, *,
+                     use_kernels: bool) -> jax.Array:
+    b, nb = cidx.block_size, cidx.n_blocks
+    sec = cidx.section_starts()
+    qkey = jnp.concatenate([q_len.astype(jnp.uint32)[:, None], q_lanes], axis=1)
+    # point rows are unique, so the block holding q (if any) is the last one
+    # whose head <= q: upper bound over heads, minus one.  The search runs
+    # over ALL heads: with one search per query the EF fanout bracket costs
+    # more to fetch than the log2(n_blocks / widest-cell) steps it saves
+    # (measured on the CPU ref path; continuations amortize it over two
+    # searches and keep it)
+    zeros = jnp.zeros_like(q_len)
+    pos_h = _bsearch(cidx.heads, qkey, zeros, zeros + nb, upper=True,
+                     use_kernels=use_kernels)
+    blk = jnp.clip(pos_h - 1, 0, nb - 1)
+    q_terms = packing.unpack_terms(q_lanes, vocab_size=cidx.vocab_size,
+                                   sigma=cidx.sigma).astype(jnp.int32)
+    cnt_lt, cnt_eq = _c_rank(cidx, blk, q_terms, q_len, sec, cont=False,
+                             use_kernels=use_kernels)
+    pos = jnp.clip(blk * b + cnt_lt, 0, cidx.size - 1)
+    hit = valid & (cnt_eq > 0)       # uniqueness makes equality self-validating
+    cf = extract_bits(cidx.counts_packed, pos, cidx.count_width)
+    return jnp.where(hit, cf, 0).astype(jnp.uint32)
+
+
+def _c_continuations_packed(cidx: CompressedNGramIndex, p_lanes: jax.Array,
+                            p_len: jax.Array, valid: jax.Array, *, k: int,
+                            use_kernels: bool):
+    b, nb = cidx.block_size, cidx.n_blocks
+    sec = cidx.section_starts()
+    lead = packing.lead_term(p_lanes[:, 0], vocab_size=cidx.vocab_size)
+    target = p_len + 1
+    lo_h, hi_h = _c_head_bracket(cidx, cidx.ef_cont_fanout, target, lead)
+    qkey = jnp.concatenate([target.astype(jnp.uint32)[:, None], p_lanes], axis=1)
+    p_terms = packing.unpack_terms(p_lanes, vocab_size=cidx.vocab_size,
+                                   sigma=cidx.sigma).astype(jnp.int32)
+    # duplicate prefixes can straddle blocks, so the lower bound needs the
+    # block *before* the first head >= q, the upper bound the block of the
+    # last head <= q (see compress.py docstring for the run/head argument)
+    m_lb = _bsearch(cidx.cont_heads, qkey, lo_h, hi_h, upper=False,
+                    use_kernels=use_kernels, steps=cidx.head_steps)
+    blk_lb = jnp.clip(m_lb - 1, 0, nb - 1)
+    m_ub = _bsearch(cidx.cont_heads, qkey, lo_h, hi_h, upper=True,
+                    use_kernels=use_kernels, steps=cidx.head_steps)
+    blk_ub = jnp.clip(m_ub - 1, 0, nb - 1)
+    # one fused rank call for both bounds (same decode program, doubled batch)
+    nq = blk_lb.shape[0]
+    lt2, eq2 = _c_rank(cidx, jnp.concatenate([blk_lb, blk_ub]),
+                       jnp.concatenate([p_terms, p_terms]),
+                       jnp.concatenate([target, target]), sec, cont=True,
+                       use_kernels=use_kernels)
+    lb = jnp.where(valid, blk_lb * b + lt2[:nq], 0)
+    ub = jnp.where(valid, blk_ub * b + lt2[nq:] + eq2[nq:], 0)
+    n_distinct = (ub - lb).astype(jnp.uint32)
+    mass = cidx.ef_cumsum.select_many(jnp.concatenate([ub, lb]))
+    total = mass[:nq] - mass[nq:]
+    offs = lb[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    in_group = offs < ub[:, None]
+    safe = jnp.minimum(offs, cidx.size - 1)
+    terms = jnp.where(in_group,
+                      extract_bits(cidx.cont_last_packed, safe, cidx.term_bits),
+                      0)
+    counts = jnp.where(in_group,
+                       extract_bits(cidx.cont_counts_packed, safe,
+                                    cidx.count_width), 0)
+    return n_distinct, total, terms, counts
+
+
 @partial(jax.jit, static_argnames=("use_kernels",))
 def lookup_packed(idx: NGramIndex, q_lanes: jax.Array, q_len: jax.Array,
                   valid: jax.Array, *, use_kernels: bool = False) -> jax.Array:
     """Point counts [Q] uint32 for pre-packed queries (the serving hot path)."""
+    if isinstance(idx, CompressedNGramIndex):
+        return _c_lookup_packed(idx, q_lanes, q_len, valid,
+                                use_kernels=use_kernels)
     lead = packing.lead_term(q_lanes[:, 0], vocab_size=idx.vocab_size)
     lo, hi = _bracket(idx, idx.fanout, q_len, lead)
     pos = _search(idx, idx.lanes, q_lanes, lo, hi, upper=False,
@@ -92,6 +232,9 @@ def continuations_packed(idx: NGramIndex, p_lanes: jax.Array, p_len: jax.Array,
                          valid: jax.Array, *, k: int,
                          use_kernels: bool = False):
     """Top-k completions for pre-packed prefixes (see :func:`continuations`)."""
+    if isinstance(idx, CompressedNGramIndex):
+        return _c_continuations_packed(idx, p_lanes, p_len, valid, k=k,
+                                       use_kernels=use_kernels)
     lead = packing.lead_term(p_lanes[:, 0], vocab_size=idx.vocab_size)
     target_len = p_len + 1
     lo, hi = _bracket(idx, idx.cont_fanout, target_len, lead)

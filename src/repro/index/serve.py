@@ -34,6 +34,7 @@ from repro.core.stats import NGramStats
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle
 from .build import NGramIndex, build_index
+from .compress import compress_index
 from . import query as q
 
 
@@ -44,8 +45,10 @@ class ShardedNGramIndex:
     index: NGramIndex          # every array leaf is [P, ...], sharded on dim 0
     mesh: jax.sharding.Mesh
     axis_name: str
-    # compiled serving steps keyed by (mode, k, capacity, use_kernels); lives on
-    # the instance so it dies with the index (no stale cross-index hits)
+    # compiled serving steps keyed by (mode, k, capacity, use_kernels), plus
+    # the cached empty-prefix merge vector keyed by ("empty_prefix", k,
+    # use_kernels); lives on the instance so it dies with the index (no stale
+    # cross-index hits)
     _servers: dict = dataclasses.field(default_factory=dict, repr=False,
                                        compare=False)
 
@@ -65,11 +68,17 @@ def shard_of_rows(first_terms: np.ndarray, n_parts: int) -> np.ndarray:
 
 
 def build_sharded_index(stats: NGramStats, *, vocab_size: int, mesh,
-                        axis_name: str = "data") -> ShardedNGramIndex:
+                        axis_name: str = "data", compress: bool = False,
+                        block_size: int = 4) -> ShardedNGramIndex:
     """Partition ``stats`` rows by hash(lead term) and freeze one index per shard.
 
     Shards are padded to a common capacity so they stack into single [P, ...]
-    arrays that ``device_put`` lays out along the mesh axis.
+    arrays that ``device_put`` lays out along the mesh axis.  ``compress=True``
+    re-encodes every shard into the front-coded + Elias-Fano layout
+    (``repro.index.compress``); a first pass measures each shard's stream sizes
+    and bit widths, then all shards are re-encoded against the maxima so the
+    compressed pytrees share one treedef (static meta) and stack like the
+    uncompressed ones.
     """
     n_parts = mesh.shape[axis_name]
     part = shard_of_rows(np.asarray(stats.grams)[:, 0] if len(stats) else
@@ -82,6 +91,16 @@ def build_sharded_index(stats: NGramStats, *, vocab_size: int, mesh,
     cap = max(128, -(-(max(len(s) for s in shard_stats) + 1) // 128) * 128)
     shards = [build_index(s, vocab_size=vocab_size, pad_to=cap)
               for s in shard_stats]
+    if compress:
+        probe = [compress_index(s, block_size=block_size) for s in shards]
+        shards = [compress_index(
+            s, block_size=block_size,
+            count_width=max(c.count_width for c in probe),
+            payload_words=max(c.payload.shape[0] for c in probe),
+            cont_payload_words=max(c.cont_payload.shape[0] for c in probe),
+            cumsum_universe=max(c.ef_cumsum.universe for c in probe),
+            head_span=max(c.head_span for c in probe),
+        ) for s in shards]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *shards)
     stacked = jax.device_put(stacked, NamedSharding(mesh, P(axis_name)))
     return ShardedNGramIndex(stacked, mesh, axis_name)
@@ -98,9 +117,9 @@ def make_server(sharded: ShardedNGramIndex, *, mode: str = "lookup", k: int = 8,
     -> (results [P, B_local, R_out] uint32, global overflow count).
 
     ``mode``: "lookup" (point cf) or "continuations" (top-k completion); the
-    sharded path needs length >= 1 either way (routing hashes the lead term --
-    empty-prefix unigram top-k would need a cross-shard merge; single-device
-    ``query.continuations`` handles that case).
+    compiled step needs length >= 1 either way (routing hashes the lead term).
+    Length-0 prefixes are handled outside the step by :func:`serve` via the
+    host-side cross-shard merge (:func:`empty_prefix_continuations`).
     """
     if mode not in ("lookup", "continuations"):
         raise ValueError(f"unknown serve mode {mode!r}")
@@ -155,6 +174,41 @@ def make_server(sharded: ShardedNGramIndex, *, mode: str = "lookup", k: int = 8,
     return jax.jit(fn)
 
 
+def empty_prefix_continuations(sharded: ShardedNGramIndex, *, k: int = 8,
+                               use_kernels: bool = False) -> np.ndarray:
+    """Merged empty-prefix (unigram top-k) answer [2+2k] uint32.
+
+    The hash-routed serving step cannot answer length-0 prefixes (there is no
+    lead term to route by), but every unigram lives on exactly one shard, so the
+    cross-shard merge is exact: each shard reports its local top-k over the
+    length-1 section, the host sums the disjoint distinct/mass totals and keeps
+    the k best (term id breaks count ties, deterministically).  Any global top-k
+    unigram is a fortiori in its own shard's top-k, so k rows per shard suffice.
+    """
+    sigma = sharded.sigma
+    pg = np.zeros((1, sigma), np.int32)
+    pl = np.zeros((1,), np.int32)
+    n_distinct = 0
+    total = 0
+    pairs: list[tuple[int, int]] = []
+    for p in range(sharded.n_parts):
+        idx_p = jax.tree_util.tree_map(lambda a: a[p], sharded.index)
+        nd, tot, terms, counts = q.continuations(idx_p, pg, pl, k=k,
+                                                 use_kernels=use_kernels)
+        n_distinct += int(np.asarray(nd)[0])
+        total += int(np.asarray(tot)[0])
+        for t, c in zip(np.asarray(terms)[0], np.asarray(counts)[0]):
+            if c > 0:
+                pairs.append((int(c), int(t)))
+    pairs.sort(key=lambda tc: (-tc[0], tc[1]))
+    out = np.zeros((2 + 2 * k,), np.uint32)
+    out[0], out[1] = n_distinct, total
+    for i, (c, t) in enumerate(pairs[:k]):
+        out[2 + i] = t
+        out[2 + k + i] = c
+    return out
+
+
 def _cached_server(sharded: ShardedNGramIndex, mode: str, k: int, capacity: int,
                    use_kernels: bool):
     """Compiled serving step for this index + static config (a micro-batching
@@ -176,10 +230,18 @@ def serve(sharded: ShardedNGramIndex, grams, lengths, *, mode: str = "lookup",
     (mode "lookup") or [B, 2+2k] packed continuation results (see
     :func:`result_width`).  Hash routing balances Zipf-skewed lead terms the same
     way the job shuffle does; ``capacity_factor`` is the head-room knob.
+
+    Length-0 continuation prefixes (unigram top-k) cannot be hash-routed; they
+    are answered once via the host-side cross-shard merge
+    (:func:`empty_prefix_continuations`, cached on the index -- the answer is a
+    pure function of (index, k)) and broadcast into their slots, so the sharded
+    path accepts the same query mix as the single-device one.
     """
     n_parts = sharded.n_parts
     grams = np.asarray(grams)
     lengths = np.asarray(lengths)
+    empty = (np.asarray(lengths) == 0) if mode == "continuations" else \
+        np.zeros(lengths.shape, bool)
     b = grams.shape[0]
     b_local = -(-b // n_parts)
     pad = b_local * n_parts - b
@@ -197,5 +259,13 @@ def serve(sharded: ShardedNGramIndex, grams, lengths, *, mode: str = "lookup",
         capacity *= 2
     else:
         raise RuntimeError(f"query shuffle overflow persisted at {capacity}")
-    out = np.asarray(out).reshape(n_parts * b_local, -1)[:b]
+    # np.array (not asarray): the device buffer view is read-only and the
+    # empty-prefix overlay below writes into rows
+    out = np.array(out).reshape(n_parts * b_local, -1)[:b]
+    if empty.any():
+        key = ("empty_prefix", k, use_kernels)
+        if key not in sharded._servers:
+            sharded._servers[key] = empty_prefix_continuations(
+                sharded, k=k, use_kernels=use_kernels)
+        out[empty] = sharded._servers[key]
     return out[:, 0] if mode == "lookup" else out

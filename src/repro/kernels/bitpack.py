@@ -1,0 +1,75 @@
+"""Fixed-width bit streams over uint32 words -- the compressed index's substrate.
+
+A stream stores n values of a common ``width`` (< 32 bits) back to back,
+LSB-first: bit b of the stream lives in word ``b >> 5`` at in-word position
+``b & 31``, and value i occupies stream bits [i*width, (i+1)*width).  Packing is
+host-side numpy (build time); extraction is pure jnp (branchless two-word fetch,
+safe for any traced index), so the same helper serves the jitted query path, the
+kernel oracles, and -- because it is plain jnp on values -- the Pallas kernels
+themselves.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def words_for(n_values: int, width: int) -> int:
+    return -(-(n_values * width) // 32)
+
+
+def pack_bits(values: np.ndarray, width: int,
+              n_words: int | None = None) -> np.ndarray:
+    """Pack ``values`` (uint, each < 2**width) into a uint32 word stream.
+
+    ``n_words`` pads the stream (sharded builds pass a common capacity so shard
+    streams stack); the pad is zeros and is never addressed by real indices.
+    """
+    values = np.asarray(values, np.uint64)
+    n = values.shape[0]
+    if width < 0 or width > 32:
+        raise ValueError(f"width must be in [0, 32], got {width}")
+    if width and n and int(values.max()) >> width:
+        raise ValueError(f"value {int(values.max())} overflows width {width}")
+    if n * width >= 1 << 32:
+        # extract_bits (and the block_decode kernel) compute bit positions in
+        # uint32; past 2^32 bits they would wrap and read garbage silently --
+        # refuse loudly instead (shard the index first, serve.py does anyway)
+        raise ValueError(f"stream of {n}x{width} bits exceeds the uint32 "
+                         "bit-address space; shard the index instead")
+    need = words_for(n, width)
+    nw = need if n_words is None else n_words
+    if nw < need:
+        raise ValueError(f"n_words={nw} < required {need}")
+    words = np.zeros((nw,), np.uint32)
+    if width == 0 or n == 0:
+        return words
+    bitpos = np.arange(n, dtype=np.uint64) * np.uint64(width)
+    for b in range(width):
+        p = bitpos + np.uint64(b)
+        bit = ((values >> np.uint64(b)) & np.uint64(1)).astype(np.uint32)
+        np.bitwise_or.at(words, (p >> np.uint64(5)).astype(np.int64),
+                         bit << (p & np.uint64(31)).astype(np.uint32))
+    return words
+
+
+def extract_bits(words: jnp.ndarray, idx: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Values [*idx.shape] uint32 at stream positions ``idx`` (any int shape).
+
+    Out-of-range / negative indices (masked lanes upstream) read garbage but
+    never fault: word fetches are clamped into the stream.
+    """
+    if width == 0:
+        return jnp.zeros(idx.shape, jnp.uint32)
+    nw = words.shape[0]
+    bitp = idx.astype(jnp.uint32) * jnp.uint32(width)
+    w_lo = jnp.clip((bitp >> 5).astype(jnp.int32), 0, nw - 1)
+    w_hi = jnp.clip(w_lo + 1, 0, nw - 1)
+    sh = bitp & jnp.uint32(31)
+    lo = jnp.take(words, w_lo) >> sh
+    # (32 - sh) & 31 keeps the shift in range; the sh==0 lane is masked anyway
+    hi = jnp.where(sh > 0,
+                   jnp.take(words, w_hi) << ((jnp.uint32(32) - sh) & jnp.uint32(31)),
+                   jnp.uint32(0))
+    mask = jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+    return (lo | hi) & mask

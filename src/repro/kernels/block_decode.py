@@ -1,0 +1,148 @@
+"""Front-coded block decode + in-block rank kernel -- the compressed-index
+serving inner loop.
+
+After the head binary search picks each query's candidate block (see
+``repro.index.compress``), the query needs the number of block rows whose
+(length, terms) key sorts strictly below / equal to its own -- that rank, plus
+``block * block_size``, is the global lower/upper bound position.  XLA's unfused
+form materializes a [Q, block, sigma] decoded tensor in HBM; the kernel instead
+walks the block's front-coding chain once per query tile entirely in VMEM,
+reconstructing each row from the packed lcp / suffix-term streams and folding
+the lexicographic comparison into the same pass, so only the two rank counters
+ever leave the core.
+
+TPU mapping: query tiles ride the grid; the compressed streams (a few bits per
+row -- the whole point) ride in full as block inputs.  The per-row suffix fetch
+is a clamped dynamic take on the payload words with two-word bit extraction;
+the chain itself is a ``fori_loop`` over ``block_size`` rows with the previous
+decoded row as carry (front coding is inherently sequential per block, but every
+query in the tile walks its own block in lockstep on the VPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(*, sigma: int, term_bits: int, lcp_width: int,
+                 block_size: int, len_off: int):
+    # masks stay python ints (weak scalars): a jnp constant here would be
+    # captured by the traced kernel, which pallas_call rejects
+    per_word = 32 // lcp_width
+    lcp_mask = (1 << lcp_width) - 1
+    term_mask = (1 << term_bits) - 1
+
+    def kernel(lcps_ref, payload_ref, base_ref, sec_ref, blk_ref, qt_ref,
+               qlen_ref, lt_ref, eq_ref):
+        lcps = lcps_ref[...]
+        payload = payload_ref[...]
+        nw = payload.shape[0]
+        sec = sec_ref[...]                            # [sigma+1] int32
+        blk = blk_ref[...]                            # [B] int32
+        qt = qt_ref[...]                              # [B, S] int32
+        qlen = qlen_ref[...]                          # [B] int32
+        b = blk.shape[0]
+        base = jnp.take(base_ref[...], blk).astype(jnp.int32)   # [B]
+        # iota, not arange: arange traces to a materialized constant, which
+        # pallas_call rejects ("captures constants ... pass them as inputs")
+        jota = jax.lax.broadcasted_iota(jnp.int32, (sigma,), 0)
+
+        def body(r, state):
+            prev, ns_off, cnt_lt, cnt_eq = state
+            g = blk * block_size + r                               # [B]
+            lw = jnp.take(lcps, g // per_word)
+            lcp = ((lw >> ((g % per_word) * lcp_width).astype(jnp.uint32))
+                   & lcp_mask).astype(jnp.int32)
+            row_len = jnp.sum((g[:, None] >= sec[None, :]).astype(jnp.int32),
+                              axis=1)                              # [B]
+            store_len = jnp.clip(row_len - len_off, 0, sigma)
+            lcp = jnp.minimum(lcp, store_len)
+            tpos = (base + ns_off)[:, None] + (jota[None, :] - lcp[:, None])
+            bitp = tpos.astype(jnp.uint32) * term_bits
+            w_lo = jnp.clip((bitp >> 5).astype(jnp.int32), 0, nw - 1)
+            sh = bitp & 31
+            lo = jnp.take(payload, w_lo) >> sh
+            hi = jnp.where(
+                sh > 0,
+                jnp.take(payload, jnp.clip(w_lo + 1, 0, nw - 1))
+                << ((32 - sh) & 31),
+                0)
+            stored = ((lo | hi) & term_mask).astype(jnp.int32)
+            cur = jnp.where(jota[None, :] < lcp[:, None], prev,
+                            jnp.where(jota[None, :] < store_len[:, None],
+                                      stored, 0))
+            # lexicographic (row_len, terms) vs (q_len, q_terms)
+            eq = cur == qt
+            prefix_eq = jnp.concatenate(
+                [jnp.ones((b, 1), jnp.bool_),
+                 jnp.cumprod(eq[:, :-1].astype(jnp.int32), axis=1).astype(bool)],
+                axis=1)
+            t_lt = jnp.any(prefix_eq & (cur < qt), axis=1)
+            t_eq = jnp.all(eq, axis=1)
+            len_eq = row_len == qlen
+            is_lt = (row_len < qlen) | (len_eq & t_lt)
+            is_eq = len_eq & t_eq
+            return (cur, ns_off + store_len - lcp,
+                    cnt_lt + is_lt.astype(jnp.int32),
+                    cnt_eq + is_eq.astype(jnp.int32))
+
+        init = (jnp.zeros((b, sigma), jnp.int32), jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32))
+        _, _, cnt_lt, cnt_eq = jax.lax.fori_loop(0, block_size, body, init)
+        lt_ref[...] = cnt_lt
+        eq_ref[...] = cnt_eq
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("term_bits", "lcp_width", "block_size",
+                                   "len_off", "qblock", "interpret"))
+def block_decode(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
+                 sec_starts: jax.Array, blk: jax.Array, q_terms: jax.Array,
+                 q_len: jax.Array, *, term_bits: int, lcp_width: int,
+                 block_size: int, len_off: int, qblock: int = 256,
+                 interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(cnt_lt [Q], cnt_eq [Q]) int32: per query, how many rows of its candidate
+    block sort strictly below / compare equal to the query key.
+
+    lcps       : packed lcp stream, ``lcp_width`` bits/row (word-aligned widths)
+    payload    : packed suffix-term stream, ``term_bits`` bits/term
+    block_base : [nb+1] uint32 cumulative suffix-term count at block starts
+    sec_starts : [sigma+1] int32 decoded section starts (row-length key)
+    blk        : [Q] int32 candidate block per query (0 <= blk < nb)
+    q_terms    : [Q, sigma] int32 query terms; q_len: [Q] int32 query length key
+    len_off    : 0 = point view, 1 = continuation (prefix) view
+    """
+    q, sigma = q_terms.shape
+    nb = -(-q // qblock)
+    q_pad = nb * qblock
+    blk_p = jnp.pad(blk.astype(jnp.int32), (0, q_pad - q))
+    qt_p = jnp.pad(q_terms.astype(jnp.int32), ((0, q_pad - q), (0, 0)))
+    qlen_p = jnp.pad(q_len.astype(jnp.int32), (0, q_pad - q))
+    sec = sec_starts.astype(jnp.int32)
+    n_sec = sec.shape[0]
+    w1, w2, w3 = lcps.shape[0], payload.shape[0], block_base.shape[0]
+
+    cnt_lt, cnt_eq = pl.pallas_call(
+        _make_kernel(sigma=sigma, term_bits=term_bits, lcp_width=lcp_width,
+                     block_size=block_size, len_off=len_off),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((w1,), lambda i: (0,)),
+            pl.BlockSpec((w2,), lambda i: (0,)),
+            pl.BlockSpec((w3,), lambda i: (0,)),
+            pl.BlockSpec((n_sec,), lambda i: (0,)),
+            pl.BlockSpec((qblock,), lambda i: (i,)),
+            pl.BlockSpec((qblock, sigma), lambda i: (i, 0)),
+            pl.BlockSpec((qblock,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((qblock,), lambda i: (i,)),
+                   pl.BlockSpec((qblock,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((q_pad,), jnp.int32)],
+        interpret=interpret,
+    )(lcps, payload, block_base, sec, blk_p, qt_p, qlen_p)
+    return cnt_lt[:q], cnt_eq[:q]

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 
+from .block_decode import block_decode as _block_decode
 from .bsearch import bsearch as _bsearch
 from .hash_partition import hash_partition as _hash_partition
 from .lcp_boundary import lcp_boundary as _lcp_boundary
@@ -33,3 +34,12 @@ def suffix_pack(tokens, *, sigma: int, vocab_size: int, block: int = 1024):
 def hash_partition(keys, valid, *, n_parts: int, block: int = 4096):
     return _hash_partition(keys, valid, n_parts=n_parts, block=block,
                            interpret=INTERPRET)
+
+
+def block_decode(lcps, payload, block_base, sec_starts, blk, q_terms, q_len, *,
+                 term_bits: int, lcp_width: int, block_size: int, len_off: int,
+                 qblock: int = 256):
+    return _block_decode(lcps, payload, block_base, sec_starts, blk, q_terms,
+                         q_len, term_bits=term_bits, lcp_width=lcp_width,
+                         block_size=block_size, len_off=len_off, qblock=qblock,
+                         interpret=INTERPRET)

@@ -66,6 +66,97 @@ def bsearch_ref(lanes: jax.Array, queries: jax.Array, lo: jax.Array,
     return jax.vmap(one)(queries, lo, hi)
 
 
+def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
+                     sec_starts: jax.Array, blk: jax.Array, q_terms: jax.Array,
+                     q_len: jax.Array, *, term_bits: int, lcp_width: int,
+                     block_size: int, len_off: int) -> tuple[jax.Array, jax.Array]:
+    """(cnt_lt [Q], cnt_eq [Q]): front-coded block decode + in-block rank.
+
+    Semantics match ``repro.kernels.block_decode.block_decode`` (its allclose
+    target and the ``use_kernels=False`` compressed-serving path).  Decode is the
+    parallel form of the coding chain: lane j of row r comes from the last row
+    p <= r whose stored span covers j.  When row id and term value pack into an
+    int32 together, one running max over ``(row << term_bits) | value`` resolves
+    the provider AND fetches its value (rows past a provider's span contribute
+    the provider's explicit 0, so the zero-fill rides along); otherwise the
+    provider index is cummax'd alone and gathered.  Both equal the sequential
+    prev-row substitution the kernel runs.
+    """
+    from repro.kernels.bitpack import extract_bits
+
+    b, sigma = block_size, q_terms.shape[1]
+    g = blk.astype(jnp.int32)[:, None] * b + jnp.arange(b, dtype=jnp.int32)
+    lcp = extract_bits(lcps, g, lcp_width).astype(jnp.int32)        # [Q, B]
+    row_len = jnp.sum((g[..., None] >= sec_starts[None, None, :])
+                      .astype(jnp.int32), axis=-1)                  # [Q, B]
+    store_len = jnp.clip(row_len - len_off, 0, sigma)
+    lcp = jnp.minimum(lcp, store_len)
+    # no forced reset at row 0: a head lane with lcp > 0 decodes as 0 (negative
+    # provider here, the zero-initialized prev carry in the kernel) -- the
+    # builder always writes lcp 0 at block heads, so the case only arises in
+    # fuzzed streams
+    ns = store_len - lcp
+    off_in = jnp.concatenate(
+        [jnp.zeros((g.shape[0], 1), jnp.int32),
+         jnp.cumsum(ns, axis=1)[:, :-1]], axis=1)
+    base = block_base[blk].astype(jnp.int32)
+    j = jnp.arange(sigma, dtype=jnp.int32)
+    tpos = base[:, None, None] + off_in[..., None] + (j - lcp[..., None])
+    # gathers dominate on CPU: when a row's suffix span fits a small static word
+    # window, fetch the window once per row and mux lanes out of it arithmetically
+    # instead of issuing two word gathers per (row, lane)
+    # lane words sit up to ((S-1)*tb + 31) >> 5 words past the row's first word
+    # (worst case: the row starts at bit 31 of its word)
+    span_words = ((sigma - 1) * term_bits + 31) // 32 + 1
+    if span_words <= 6:
+        nw = payload.shape[0]
+        row_bit0 = (base[:, None] + off_in).astype(jnp.uint32) * term_bits
+        w0 = (row_bit0 >> 5).astype(jnp.int32)                      # [Q, B]
+        win = jnp.stack([jnp.take(payload, jnp.clip(w0 + t, 0, nw - 1))
+                         for t in range(span_words + 1)], axis=-1)  # [Q,B,W+1]
+        bitp = jnp.maximum(tpos, 0).astype(jnp.uint32) * term_bits
+        rel = (bitp >> 5).astype(jnp.int32) - w0[..., None]
+        lo_w = hi_w = jnp.zeros(bitp.shape, jnp.uint32)
+        for t in range(span_words):
+            lo_w = jnp.where(rel == t, win[..., t:t + 1], lo_w)
+            hi_w = jnp.where(rel == t, win[..., t + 1:t + 2], hi_w)
+        sh = bitp & 31
+        stored = ((lo_w >> sh)
+                  | jnp.where(sh > 0, hi_w << ((32 - sh) & 31), 0)) \
+            & jnp.uint32((1 << term_bits) - 1)
+        stored = stored.astype(jnp.int32)
+    else:
+        stored = extract_bits(payload, tpos, term_bits).astype(jnp.int32)
+    valid_store = (j >= lcp[..., None]) & (j < store_len[..., None])
+    aligned = jnp.where(valid_store, stored, 0)                     # [Q, B, S]
+    covers = lcp[..., None] <= j
+    r_id = jnp.arange(b, dtype=jnp.int32)[None, :, None]
+    if b.bit_length() + term_bits <= 31:
+        kv = jnp.where(covers, (r_id << term_bits) | aligned, -1)
+        run = jax.lax.cummax(kv, axis=1)
+        # run < 0 == no provider yet (fuzzed streams only): decode 0, not mask
+        decoded = jnp.where(run < 0, 0, run & ((1 << term_bits) - 1))
+    else:  # row id and value don't co-pack: cummax the provider, then gather
+        prov = jax.lax.cummax(jnp.where(covers, r_id, -1), axis=1)
+        decoded = jnp.where(
+            prov >= 0,
+            jnp.take_along_axis(aligned, jnp.maximum(prov, 0), axis=1), 0)
+
+    qt = q_terms.astype(jnp.int32)[:, None, :]
+    eq = decoded == qt
+    prefix_eq = jnp.concatenate(
+        [jnp.ones(eq[..., :1].shape, jnp.bool_),
+         jnp.cumprod(eq[..., :-1].astype(jnp.int32), axis=-1).astype(bool)],
+        axis=-1)
+    t_lt = jnp.any(prefix_eq & (decoded < qt), axis=-1)
+    t_eq = jnp.all(eq, axis=-1)
+    len_eq = row_len == q_len.astype(jnp.int32)[:, None]
+    is_lt = (row_len < q_len[:, None]) | (len_eq & t_lt)
+    is_eq = len_eq & t_eq
+    return (jnp.sum(is_lt.astype(jnp.int32), axis=1),
+            jnp.sum(is_eq.astype(jnp.int32), axis=1))
+
+
 def hash_partition_ref(keys: jax.Array, valid: jax.Array,
                        n_parts: int) -> tuple[jax.Array, jax.Array]:
     """(partition ids [N] with n_parts for invalid, histogram [n_parts])."""

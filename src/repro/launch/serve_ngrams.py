@@ -85,6 +85,9 @@ def main() -> None:
                     help=">1: serve through the sharded shard_map path on an "
                          "N-way host mesh (sets XLA_FLAGS; must run first)")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="serve the front-coded + Elias-Fano layout "
+                         "(repro.index.compress) instead of the flat lanes")
     args = ap.parse_args()
     if args.devices > 1:
         # --devices always wins: drop any pre-set device-count flag, keep the
@@ -114,15 +117,22 @@ def main() -> None:
         mesh = jax.make_mesh((args.devices,), ("data",),
                              axis_types=(jax.sharding.AxisType.Auto,))
         sharded = index_mod.build_sharded_index(stats, vocab_size=prof.vocab_size,
-                                                mesh=mesh)
+                                                mesh=mesh,
+                                                compress=args.compress)
         idx_bytes = sharded.index.nbytes
+    elif args.compress:
+        idx = index_mod.build_compressed_index(stats,
+                                               vocab_size=prof.vocab_size)
+        idx_bytes = idx.nbytes
     else:
         idx = index_mod.build_index(stats, vocab_size=prof.vocab_size)
         idx_bytes = idx.nbytes
     t_build = time.time() - t0
+    layout = "compressed" if args.compress else "flat"
     print(f"job: {args.tokens} tokens -> {len(stats)} frequent grams "
-          f"in {t_job:.2f}s; index frozen in {t_build:.2f}s "
-          f"({idx_bytes / 2**20:.1f} MiB)")
+          f"in {t_job:.2f}s; {layout} index frozen in {t_build:.2f}s "
+          f"({idx_bytes / 2**20:.1f} MiB, "
+          f"{idx_bytes / max(len(stats), 1):.1f} B/gram)")
 
     grams, lengths = make_query_stream(stats, n_queries=args.queries,
                                        sigma=args.sigma,
