@@ -12,17 +12,26 @@ of the uncompressed plan -- is checked from *interleaved* uncompressed /
 compressed batches (``--compress`` on the CLI), so host-load drift hits both
 sides equally instead of whichever layout happened to run last.
 
-    PYTHONPATH=src python benchmarks/serving.py --compress
+``--streaming`` adds the generational-index freshness cells: incremental ingest
+of a 10% corpus delta (job on the delta + L0 freeze) vs a from-scratch rebuild
+(job on the full corpus + full freeze), measured *interleaved* per the
+host-noise protocol, plus the forced-compaction merge cost and the post-merge
+query latency.  Every run writes ``BENCH_serving.json`` so the serving perf
+trajectory is recorded run over run.
+
+    PYTHONPATH=src python benchmarks/serving.py --compress --streaming
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 BATCH_SIZES = (1, 64, 4096)
 CONTRACT_BATCH = 4096
+BENCH_JSON = "BENCH_serving.json"
 
 
 def _setup(n_tokens: int, n_queries: int, topk: int, compress: bool):
@@ -94,6 +103,81 @@ def run(n_tokens: int = 60_000, *, n_queries: int = 12_000,
     return rows
 
 
+def run_streaming(n_tokens: int = 60_000, *, delta_frac: float = 0.1,
+                  reps: int = 5, batch: int = 4096) -> list[dict]:
+    """Generational freshness cells: incremental ingest vs full rebuild.
+
+    One rep of each, alternating (the interleaved-median protocol: host-load
+    transients hit both sides equally), then medians.  The incremental path is
+    job(delta) + L0 freeze + any size-ratio merges; the rebuild path is
+    job(base+delta) + full freeze.
+    """
+    from repro.core import run_job
+    from repro.core.stats import NGramConfig
+    from repro.data import corpus as corpus_mod
+    from repro.index import GenerationalIndex, build_index, lookup
+    from repro.launch.serve_ngrams import make_query_stream
+
+    prof = corpus_mod.NYT
+    n_delta = int(n_tokens * delta_frac)
+    full = corpus_mod.zipf_corpus(n_tokens + n_delta, prof, seed=0,
+                                  duplicate_frac=0.02)
+    base, delta = full[:n_tokens], full[n_tokens:]
+    cfg = NGramConfig(sigma=5, tau=4, vocab_size=prof.vocab_size)
+    stats_base = run_job(base, cfg)
+    base_idx = build_index(stats_base, vocab_size=prof.vocab_size)
+
+    def incremental():
+        gen = GenerationalIndex(sigma=5, vocab_size=prof.vocab_size)
+        gen.levels = [base_idx]
+        gen.generation = 1
+        gen.ingest(run_job(delta, cfg))
+        return gen
+
+    def rebuild():
+        return build_index(run_job(full, cfg), vocab_size=prof.vocab_size)
+
+    incremental(), rebuild()                      # compile + cache warm
+    t_inc, t_reb = [], []
+    gen = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        gen = incremental()
+        t_inc.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rebuild()
+        t_reb.append(time.perf_counter() - t0)
+    inc_us = float(np.median(t_inc) * 1e6)
+    reb_us = float(np.median(t_reb) * 1e6)
+
+    t0 = time.perf_counter()
+    gen.compact_all()                             # forced merge, job-free
+    t_merge = time.perf_counter() - t0
+
+    grams, lengths = make_query_stream(stats_base, n_queries=batch, sigma=5,
+                                       vocab_size=prof.vocab_size,
+                                       miss_frac=0.3)
+    lookup(gen, grams, lengths)                   # compile
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(lookup(gen, grams, lengths))
+        lat.append(time.perf_counter() - t0)
+
+    return [
+        {"name": "streaming_ingest_10pct", "us": inc_us,
+         "derived": f"tok_per_s={n_delta / (inc_us / 1e6):.0f};"
+                    f"speedup_vs_rebuild={reb_us / inc_us:.2f}"},
+        {"name": "streaming_full_rebuild", "us": reb_us,
+         "derived": f"tokens={n_tokens + n_delta}"},
+        {"name": "streaming_compaction", "us": t_merge * 1e6,
+         "derived": f"rows={gen.n_rows};segments={gen.n_segments}"},
+        {"name": f"streaming_postmerge_lookup_b{batch}",
+         "us": float(np.median(lat) * 1e6),
+         "derived": f"qps={batch / np.median(lat):.0f}"},
+    ]
+
+
 def contract_slowdown(layouts, answers, grams, lengths, *,
                       batch: int = CONTRACT_BATCH, reps: int = 9) -> float:
     """Worst compressed/uncompressed median-latency ratio over both modes,
@@ -125,14 +209,36 @@ def main() -> None:
     ap.add_argument("--compress", action="store_true",
                     help="also measure the front-coded + Elias-Fano layout and "
                          "check the size/latency contract")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also measure generational freshness: incremental "
+                         "10%% ingest vs full rebuild (interleaved medians), "
+                         "compaction cost, post-merge latency")
     args = ap.parse_args()
     ctx = _setup(args.tokens, max(args.queries, CONTRACT_BATCH), args.topk,
                  args.compress)
     rows = run(args.tokens, n_queries=args.queries, topk=args.topk,
                compress=args.compress, _ctx=ctx)
+    if args.streaming:
+        rows.extend(run_streaming(args.tokens))
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    record = {"tokens": args.tokens, "queries": args.queries,
+              "compress": args.compress, "streaming": args.streaming,
+              "rows": rows}
+    # append-only history: the perf *trajectory*, not just the latest run
+    runs = []
+    try:
+        with open(BENCH_JSON) as f:
+            prev = json.load(f)
+        runs = prev["runs"] if "runs" in prev else [prev]
+    except (FileNotFoundError, json.JSONDecodeError, KeyError):
+        pass
+    runs.append(record)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"runs": runs}, f, indent=2)
+    print(f"# wrote {len(rows)} rows to {BENCH_JSON} "
+          f"(run {len(runs)} in history)")
     if args.compress:
         _, layouts, answers, grams, lengths = ctx
         nb, nc = layouts[0][1].nbytes, layouts[1][1].nbytes
@@ -143,6 +249,14 @@ def main() -> None:
               f"median-latency slowdown {slowdown:.2f}x")
         assert ratio >= 2.0, f"compression ratio {ratio:.2f} < 2x contract"
         assert slowdown <= 3.0, f"slowdown {slowdown:.2f} > 3x contract"
+    if args.streaming:
+        by_name = {r["name"]: r for r in rows}
+        speedup = (by_name["streaming_full_rebuild"]["us"]
+                   / by_name["streaming_ingest_10pct"]["us"])
+        print(f"# streaming: incremental 10% ingest {speedup:.2f}x faster "
+              "than full rebuild (interleaved medians)")
+        assert speedup > 1.5, \
+            f"incremental ingest speedup {speedup:.2f} not measurably > 1x"
 
 
 if __name__ == "__main__":

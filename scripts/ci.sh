@@ -5,6 +5,10 @@
 #   scripts/ci.sh            # full tier-1 suite (+ coverage gate if available)
 #   scripts/ci.sh --fast     # quick tier: skips the slow corpus/property tiers
 #
+# Both tiers finish with an examples smoke step: the streaming-ingest demo
+# must run end to end (job -> generational ingest -> cached queries) in
+# under 60s on CPU.
+#
 # The coverage gate engages whenever pytest-cov is importable; the floor is
 # seeded conservatively below the suite's measured coverage so it catches
 # wholesale test deletion, not refactors.  Ratchet it up as coverage grows.
@@ -27,3 +31,8 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     ${EXTRA[@]+"${EXTRA[@]}"} "$@"
+
+echo "examples smoke: streaming_ingest.py (60s budget)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 60 \
+    python examples/streaming_ingest.py > /dev/null
+echo "examples smoke: OK"

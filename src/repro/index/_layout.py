@@ -1,0 +1,45 @@
+"""Shared row-layout constants and helpers for the index modules.
+
+``build.py``, ``compress.py``, and ``merge.py`` all agree on one physical row
+layout -- sentinel-padded sorted rows, a bucketed first-term fanout grid, and
+128-row capacity quanta -- so the constants live here once instead of drifting
+apart in three copies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MAX_FANOUT = 4096   # fanout table columns per length section (memory/probe trade)
+SENTINEL = np.uint32(0xFFFFFFFF)   # pad rows: sort after every real row
+PAD_QUANTUM = 128   # row capacities round up to this (shards/segments stack)
+
+
+def fanout_layout(vocab_size: int) -> tuple[int, int]:
+    """(shift, n_buckets): lead term t maps to bucket t >> shift, monotonically."""
+    shift = 0
+    while ((vocab_size + 1) >> shift) > MAX_FANOUT:
+        shift += 1
+    n_buckets = ((vocab_size + 1) >> shift) + 1
+    return shift, n_buckets
+
+
+def round_capacity(n_rows: int) -> int:
+    """Default padded capacity for ``n_rows`` real rows (+1 sentinel guard)."""
+    return max(PAD_QUANTUM, -(-(n_rows + 1) // PAD_QUANTUM) * PAD_QUANTUM)
+
+
+def pad_rows(a: np.ndarray, size: int, fill) -> np.ndarray:
+    """Pad axis 0 of ``a`` to ``size`` rows with ``fill``."""
+    pad = [(0, size - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad, constant_values=fill)
+
+
+def row_offsets(sorted_key: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Lower-bound offsets of ``queries`` in a sorted key column, int32."""
+    return np.searchsorted(sorted_key, queries, side="left").astype(np.int32)
+
+
+def row_lengths(section_start: np.ndarray, size: int) -> np.ndarray:
+    """Row length 1..sigma (sentinels: sigma+1) from the section start table."""
+    return np.searchsorted(section_start, np.arange(size), side="right") \
+        .astype(np.int32)

@@ -2,32 +2,35 @@
 
 The job leaves an ``NGramStats`` blob -- (gram, cf) rows in arbitrary order -- whose
 only lookup path is a Python dict.  Following Pibiri & Venturini's observation that
-the post-job win is a *sorted, compressed, immutable* layout, ``build_index``
-re-packs the rows into the same packed-lane record format the shuffle/sort phases
-use (``mapreduce.pack``), sorted with the same multi-key lexicographic sort
-(``mapreduce.sort``), and adds two acceleration structures:
+the post-job win is a *sorted, compressed, immutable* layout, the build is split in
+two along the line the generational (LSM-style) index composes over:
 
-  * **per-length sections** -- rows ordered by (|gram|, lex); ``section_start[l]``
-    delimits the length-(l+1) section, so a point query binary-searches only the
-    rows of its own length;
-  * **first-term fanout table** -- within each section, rows of equal lead term are
-    contiguous (the lead term occupies the most-significant bits of lane 0), so
-    ``fanout[l-1, b] .. fanout[l-1, b+1]`` brackets the rows whose lead-term bucket
-    is ``b``.  This cuts the binary search from log2(R) to log2(rows-per-bucket)
-    probes -- the "one-hash narrows the hot path" idea of Lemire & Kaser, realized
-    as a monotone table instead of a probabilistic filter (exactness matters: the
-    index must return cf, not membership).
+  * :func:`segment_from_stats` packs the rows into the shuffle/sort phases' own
+    packed-lane record format (``mapreduce.pack``) and sorts them with the same
+    multi-key lexicographic sort (``mapreduce.sort``) into an
+    :class:`IndexSegment` -- the sorted immutable run of (length | lanes, cf)
+    rows that is the unit of merge (``index/merge.py``);
+  * :func:`index_from_segment` derives the acceleration structures from any
+    sorted segment, whether it came from a job or from a k-way merge of older
+    segments:
 
-A second view of the same rows -- the **continuation view** -- is ordered by
-(|gram|, packed *prefix* lanes, cf desc).  Rows extending a common prefix are
-contiguous AND sorted by count, so top-k next-token completion is two binary
-searches plus a k-row gather; the per-section running sum (``cont_cumsum``) gives
-the total continuation mass of a prefix in O(1).
+      - **per-length sections** -- ``section_start[l]`` delimits the length-(l+1)
+        section, so a point query binary-searches only rows of its own length;
+      - **first-term fanout table** -- within each section, rows of equal lead
+        term are contiguous, so ``fanout[l-1, b] .. fanout[l-1, b+1]`` brackets
+        the rows whose lead-term bucket is ``b`` (Lemire & Kaser's "one hash
+        narrows the hot path", as a monotone table instead of a filter);
+      - the **continuation view** -- the same rows re-ordered by (|gram|, packed
+        *prefix* lanes, cf desc, next term asc), plus the running-mass
+        ``cont_cumsum``.  The final next-term key makes the order a pure
+        function of the row *set* (not of input order), which is what lets a
+        merged segment rebuild bit-identical structures to a from-scratch build.
 
-Everything is a flat jnp array (registered dataclass pytree), so the artifact can
-be ``device_put`` whole, stacked along a leading shard axis (``serve.py``), and
-closed over by jitted query functions.  Counts are stored as uint32 on device
-(cf <= total tokens; the int64 path stays on the host-side ``NGramStats``).
+``build_index`` is their composition.  Everything is a flat jnp array
+(registered dataclass pytrees), so artifacts can be ``device_put`` whole,
+stacked along a leading shard axis (``serve.py``), and closed over by jitted
+query functions.  Counts are stored as uint32 on device (cf <= total tokens;
+the int64 path stays on the host-side ``NGramStats``).
 """
 from __future__ import annotations
 
@@ -41,9 +44,53 @@ from repro.kernels.bsearch import search_steps  # re-export: queries need it
 from repro.mapreduce import pack as packing
 from repro.mapreduce import sort
 from repro.core.stats import NGramStats
+from ._layout import (MAX_FANOUT, SENTINEL, fanout_layout, pad_rows,
+                      round_capacity, row_offsets)
 
-MAX_FANOUT = 4096   # fanout table columns per length section (memory/probe trade)
-_SENTINEL = np.uint32(0xFFFFFFFF)
+_SENTINEL = SENTINEL   # backwards-compat alias (pre-_layout name)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IndexSegment:
+    """One sorted immutable run of n-gram rows -- the unit of merge.
+
+    Rows are sorted by (length | packed lanes); rows 0..n_rows-1 are real, the
+    tail is all-ones sentinels that sort after every real row.  Both
+    :class:`NGramIndex` (which stores a segment verbatim plus derived
+    structures) and :class:`~repro.index.compress.CompressedNGramIndex` (which
+    re-encodes one, and decodes back via ``to_segment``) wrap this abstraction;
+    ``index/merge.py`` consumes and produces it.
+    """
+
+    keys: jax.Array    # [size, 1+L] uint32: (row length | packed gram lanes)
+    counts: jax.Array  # [size] uint32 collection frequencies (0 on sentinels)
+    sigma: int = dataclasses.field(metadata=dict(static=True))
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def size(self) -> int:
+        return int(self.keys.shape[-2])
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.keys.shape[-1]) - 1
+
+    @property
+    def lanes(self) -> jax.Array:
+        """Packed gram lanes [..., size, L] (the length column stripped)."""
+        return self.keys[..., 1:]
+
+    @property
+    def n_rows(self) -> int:
+        """Real (non-sentinel) rows; the length column is the primary sort key,
+        so one host-side searchsorted recovers the boundary."""
+        lens = np.asarray(self.keys[..., 0])
+        return int(np.searchsorted(lens, self.sigma, side="right"))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(f).nbytes) for f in (self.keys, self.counts))
 
 
 @jax.tree_util.register_dataclass
@@ -51,13 +98,12 @@ _SENTINEL = np.uint32(0xFFFFFFFF)
 class NGramIndex:
     """Immutable device-resident n-gram index (see module docstring).
 
-    Rows 0..n_rows-1 are real; rows n_rows..size-1 are all-ones sentinels that sort
-    after every real row (binary searches never land on them inside a section).
+    Wraps the point-lookup :class:`IndexSegment` (rows sorted by (length, lex
+    packed lanes); sentinel tail) plus the derived acceleration structures.
     """
 
-    # --- point-lookup view: rows sorted by (length, lex packed lanes) ------------
-    lanes: jax.Array          # [size, L] uint32 packed gram lanes
-    counts: jax.Array         # [size]    uint32 collection frequencies
+    # --- point-lookup view: the sorted segment itself ----------------------------
+    segment: IndexSegment
     section_start: jax.Array  # [sigma+1] int32: section l+1 = rows [s[l], s[l+1])
     fanout: jax.Array         # [sigma, n_fanout+1] int32 lead-term bucket offsets
     # --- continuation view: rows sorted by (length, prefix lanes, cf desc) -------
@@ -74,9 +120,19 @@ class NGramIndex:
     n_fanout: int = dataclasses.field(metadata=dict(static=True))
 
     @property
+    def lanes(self) -> jax.Array:
+        """[..., size, L] uint32 packed gram lanes (the segment's, sans length)."""
+        return self.segment.lanes
+
+    @property
+    def counts(self) -> jax.Array:
+        """[..., size] uint32 collection frequencies."""
+        return self.segment.counts
+
+    @property
     def n_lanes(self) -> int:
         # last axis, so the property also holds for a [P, size, L] sharded stack
-        return int(self.lanes.shape[-1])
+        return self.segment.n_lanes
 
     @property
     def n_rows(self) -> int:
@@ -85,37 +141,22 @@ class NGramIndex:
 
     @property
     def nbytes(self) -> int:
-        return sum(int(np.asarray(f).nbytes) for f in (
-            self.lanes, self.counts, self.section_start, self.fanout,
+        return self.segment.nbytes + sum(int(np.asarray(f).nbytes) for f in (
+            self.section_start, self.fanout,
             self.cont_prefix, self.cont_last, self.cont_counts,
             self.cont_fanout, self.cont_cumsum))
 
-
-def fanout_layout(vocab_size: int) -> tuple[int, int]:
-    """(shift, n_buckets): lead term t maps to bucket t >> shift, monotonically."""
-    shift = 0
-    while ((vocab_size + 1) >> shift) > MAX_FANOUT:
-        shift += 1
-    n_buckets = ((vocab_size + 1) >> shift) + 1
-    return shift, n_buckets
+    def to_segment(self) -> IndexSegment:
+        """The point-view segment (shared arrays, no copy)."""
+        return self.segment
 
 
-def _pad_rows(a: np.ndarray, size: int, fill) -> np.ndarray:
-    pad = [(0, size - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
-    return np.pad(a, pad, constant_values=fill)
+def segment_from_stats(stats: NGramStats, *, vocab_size: int,
+                       pad_to: int | None = None) -> IndexSegment:
+    """Sort a finished job's rows into an :class:`IndexSegment`.
 
-
-def _offsets(sorted_key: np.ndarray, queries: np.ndarray) -> np.ndarray:
-    return np.searchsorted(sorted_key, queries, side="left").astype(np.int32)
-
-
-def build_index(stats: NGramStats, *, vocab_size: int,
-                pad_to: int | None = None) -> NGramIndex:
-    """Freeze ``stats`` (a finished job's output) into an :class:`NGramIndex`.
-
-    ``pad_to`` fixes the padded row capacity (sharded builds pass a common
-    capacity so shards stack into one array); default rounds R+1 up to 128.
-    Bucketed (time-series) counts are marginalized -- the index serves cf.
+    Bucketed (time-series) counts are marginalized -- segments carry cf.
+    ``pad_to`` fixes the padded capacity (default rounds R+1 up to 128).
     """
     grams = np.asarray(stats.grams, np.int32)
     lengths = np.asarray(stats.lengths, np.int32)
@@ -124,51 +165,74 @@ def build_index(stats: NGramStats, *, vocab_size: int,
         counts = counts.sum(axis=1)
     counts = counts.astype(np.uint32)
     r, sigma = grams.shape
-    n_l = packing.n_lanes(sigma, vocab_size)
-    shift, n_fanout = fanout_layout(vocab_size)
-    size = pad_to if pad_to is not None else max(128, -(-(r + 1) // 128) * 128)
+    size = pad_to if pad_to is not None else round_capacity(r)
     if size < r + 1:
         raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
 
-    lanes = np.asarray(packing.pack_terms(jnp.asarray(grams),
-                                          vocab_size=vocab_size), np.uint32)
-    lead = grams[:, 0].astype(np.uint32)
+    lanes = packing.pack_terms(jnp.asarray(grams), vocab_size=vocab_size)
+    keys = jnp.concatenate([jnp.asarray(lengths, jnp.uint32)[:, None], lanes],
+                           axis=1)
+    keys_s, (counts_s,) = sort.sort_with_payload(keys, [jnp.asarray(counts)])
+    return IndexSegment(
+        keys=jnp.asarray(pad_rows(np.asarray(keys_s, np.uint32), size,
+                                  SENTINEL)),
+        counts=jnp.asarray(pad_rows(np.asarray(counts_s, np.uint32), size, 0)),
+        sigma=sigma, vocab_size=vocab_size)
 
-    # ---- point-lookup view: one lexicographic sort on (length | lanes) ----------
-    keys = jnp.concatenate([jnp.asarray(lengths, jnp.uint32)[:, None],
-                            jnp.asarray(lanes)], axis=1)
-    keys_s, (counts_s, lead_s) = sort.sort_with_payload(
-        keys, [jnp.asarray(counts), jnp.asarray(lead)])
-    keys_s = np.asarray(keys_s)
-    len_s = keys_s[:, 0].astype(np.int64)
-    lanes_s = keys_s[:, 1:]
-    # combined (length, bucket) key is monotone: length is the primary sort key and
-    # the lead term sits in lane 0's most-significant bits
-    combined = len_s * n_fanout + (np.asarray(lead_s, np.int64) >> shift)
-    section_start = _offsets(len_s, np.arange(1, sigma + 2))
+
+def index_from_segment(seg: IndexSegment, *,
+                       pad_to: int | None = None) -> NGramIndex:
+    """Derive the acceleration structures of a sorted segment -- the shared back
+    half of ``build_index`` and of every incremental merge (``index/merge.py``),
+    which is what makes merged and from-scratch indexes bit-identical.
+    """
+    sigma, vocab_size = seg.sigma, seg.vocab_size
+    r = seg.n_rows
+    keys = np.asarray(seg.keys)[:r]
+    counts_s = np.asarray(seg.counts)[:r]
+    len_s = keys[:, 0].astype(np.int64)
+    lanes_s = keys[:, 1:]
+    shift, n_fanout = fanout_layout(vocab_size)
+    size = pad_to if pad_to is not None else round_capacity(r)
+    if size < r + 1:
+        raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
+
+    grams = np.asarray(packing.unpack_terms(
+        jnp.asarray(lanes_s), vocab_size=vocab_size, sigma=sigma)) \
+        if r else np.zeros((0, sigma), np.int32)
+    lead_s = grams[:, 0].astype(np.uint32)
+    # combined (length, bucket) key is monotone: length is the primary sort key
+    # and the lead term sits in lane 0's most-significant bits
+    combined = len_s * n_fanout + (lead_s.astype(np.int64) >> shift)
+    section_start = row_offsets(len_s, np.arange(1, sigma + 2))
     grid = (np.arange(1, sigma + 1)[:, None] * n_fanout
             + np.arange(n_fanout + 1)[None, :])
-    fanout = np.minimum(_offsets(combined, grid.reshape(-1)).reshape(
+    fanout = np.minimum(row_offsets(combined, grid.reshape(-1)).reshape(
         sigma, n_fanout + 1), section_start[1:][:, None]).astype(np.int32)
 
-    # ---- continuation view: (length | prefix lanes | cf desc) -------------------
+    # ---- continuation view: (length | prefix lanes | cf desc | next term) -------
+    # the trailing next-term key breaks (prefix, cf) ties deterministically, so
+    # the view depends only on the row *set* -- merge parity leans on this
+    lengths = len_s.astype(np.int32)
     prefix = grams * (np.arange(sigma)[None, :] < (lengths - 1)[:, None])
-    p_lanes = np.asarray(packing.pack_terms(jnp.asarray(prefix),
-                                            vocab_size=vocab_size), np.uint32)
+    p_lanes = packing.pack_terms(jnp.asarray(prefix), vocab_size=vocab_size)
     last = grams[np.arange(r), np.maximum(lengths - 1, 0)].astype(np.uint32) \
         if r else np.zeros((0,), np.uint32)
     p_lead = prefix[:, 0].astype(np.uint32)
     ckeys = jnp.concatenate([jnp.asarray(lengths, jnp.uint32)[:, None],
-                             jnp.asarray(p_lanes),
-                             (~jnp.asarray(counts)).astype(jnp.uint32)[:, None]],
+                             p_lanes,
+                             (~jnp.asarray(counts_s)).astype(jnp.uint32)[:, None],
+                             jnp.asarray(last)[:, None]],
                             axis=1)
-    ckeys_s, (c_last_s, c_counts_s, c_lead_s) = sort.sort_with_payload(
-        ckeys, [jnp.asarray(last), jnp.asarray(counts), jnp.asarray(p_lead)])
+    n_l = seg.n_lanes
+    ckeys_s, (c_counts_s, c_lead_s) = sort.sort_with_payload(
+        ckeys, [jnp.asarray(counts_s), jnp.asarray(p_lead)])
     ckeys_s = np.asarray(ckeys_s)
     cp_lanes_s = ckeys_s[:, 1:1 + n_l]
+    c_last_s = ckeys_s[:, 2 + n_l]
     c_combined = (ckeys_s[:, 0].astype(np.int64) * n_fanout
                   + (np.asarray(c_lead_s, np.int64) >> shift))
-    cont_fanout = np.minimum(_offsets(c_combined, grid.reshape(-1)).reshape(
+    cont_fanout = np.minimum(row_offsets(c_combined, grid.reshape(-1)).reshape(
         sigma, n_fanout + 1), section_start[1:][:, None]).astype(np.int32)
     # running mass in int64 first: the total over all rows is ~sigma x corpus
     # tokens and can exceed uint32 even when every individual cf fits.  A wrap
@@ -186,16 +250,31 @@ def build_index(stats: NGramStats, *, vocab_size: int,
         cont_cumsum[r + 1:] = cont_cumsum[r]
 
     return NGramIndex(
-        lanes=jnp.asarray(_pad_rows(lanes_s, size, _SENTINEL)),
-        counts=jnp.asarray(_pad_rows(np.asarray(counts_s, np.uint32), size, 0)),
+        segment=IndexSegment(
+            keys=jnp.asarray(pad_rows(keys.astype(np.uint32), size, SENTINEL)),
+            counts=jnp.asarray(pad_rows(counts_s.astype(np.uint32), size, 0)),
+            sigma=sigma, vocab_size=vocab_size),
         section_start=jnp.asarray(section_start),
         fanout=jnp.asarray(fanout),
-        cont_prefix=jnp.asarray(_pad_rows(cp_lanes_s, size, _SENTINEL)),
-        cont_last=jnp.asarray(_pad_rows(np.asarray(c_last_s, np.uint32), size, 0)),
-        cont_counts=jnp.asarray(_pad_rows(np.asarray(c_counts_s, np.uint32),
-                                          size, 0)),
+        cont_prefix=jnp.asarray(pad_rows(cp_lanes_s.astype(np.uint32), size,
+                                         SENTINEL)),
+        cont_last=jnp.asarray(pad_rows(c_last_s.astype(np.uint32), size, 0)),
+        cont_counts=jnp.asarray(pad_rows(np.asarray(c_counts_s, np.uint32),
+                                         size, 0)),
         cont_fanout=jnp.asarray(cont_fanout),
         cont_cumsum=jnp.asarray(cont_cumsum),
         sigma=sigma, vocab_size=vocab_size, size=size,
         fanout_shift=shift, n_fanout=n_fanout,
     )
+
+
+def build_index(stats: NGramStats, *, vocab_size: int,
+                pad_to: int | None = None) -> NGramIndex:
+    """Freeze ``stats`` (a finished job's output) into an :class:`NGramIndex`.
+
+    ``pad_to`` fixes the padded row capacity (sharded builds pass a common
+    capacity so shards stack into one array).
+    """
+    return index_from_segment(
+        segment_from_stats(stats, vocab_size=vocab_size, pad_to=pad_to),
+        pad_to=pad_to)

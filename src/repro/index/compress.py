@@ -42,7 +42,8 @@ from repro.kernels.bitpack import extract_bits, pack_bits
 from repro.mapreduce import pack as packing
 from repro.core.stats import NGramStats
 from repro.kernels.bsearch import search_steps
-from .build import NGramIndex, build_index
+from ._layout import SENTINEL, pad_rows, row_lengths
+from .build import IndexSegment, NGramIndex, build_index
 
 
 # --------------------------------------------------------------------------- #
@@ -225,11 +226,33 @@ class CompressedNGramIndex:
         """Decoded [sigma+1] int32 section starts (the in-block length key)."""
         return self.ef_section.decode_all().astype(jnp.int32)
 
+    def to_segment(self) -> IndexSegment:
+        """Decode the point view back into the sorted :class:`IndexSegment`.
 
-def _row_lengths(section_start: np.ndarray, size: int) -> np.ndarray:
-    """Row length 1..sigma (sentinels: sigma+1) from the section start table."""
-    return np.searchsorted(section_start, np.arange(size), side="right") \
-        .astype(np.int32)
+        The inverse of ``compress_index`` restricted to the merge-relevant rows:
+        front-coded blocks decode to the exact term matrix (``decode_view``),
+        which re-packs to the exact lanes -- so segments extracted from the
+        compressed layout merge bit-identically to ones from the flat layout.
+        """
+        r = self.n_rows
+        terms = decode_view(self, "point")[:r].astype(np.int32)
+        lanes = np.asarray(packing.pack_terms(jnp.asarray(terms),
+                                              vocab_size=self.vocab_size),
+                           np.uint32)
+        sec = np.asarray(self.section_starts())
+        lens = row_lengths(sec, self.size)[:r].astype(np.uint32)
+        keys = np.concatenate([lens[:, None], lanes], axis=1)
+        counts = np.asarray(extract_bits(self.counts_packed,
+                                         jnp.arange(max(r, 1)),
+                                         self.count_width), np.uint32)[:r]
+        return IndexSegment(
+            keys=jnp.asarray(pad_rows(keys, self.size, SENTINEL)),
+            counts=jnp.asarray(pad_rows(counts, self.size, 0)),
+            sigma=self.sigma, vocab_size=self.vocab_size)
+
+
+# shared with build/merge via index/_layout (satellite: constants dedupe)
+_row_lengths = row_lengths
 
 
 def _front_code(terms: np.ndarray, lanes: np.ndarray, row_len: np.ndarray,

@@ -1,0 +1,338 @@
+"""Incremental index maintenance: k-way segment merge + generational (LSM) index.
+
+The job side emits one frozen artifact per run; before this module, refreshing
+the served index under a growing corpus meant re-sorting *everything*.  The
+sorted immutable :class:`~repro.index.build.IndexSegment` is the unit of
+composition (Pibiri & Venturini's layout observation), so freshness becomes the
+classic log-structured-merge discipline instead:
+
+  * :func:`merge_segments` -- k-way merge of sorted segments into one new
+    segment with duplicate grams' counts *summed*.  The sorted-run production is
+    jitted: pairwise merge-path (``kernels/merge_path.py`` Pallas kernel, or its
+    jnp ref), or a one-shot re-sort fallback reusing ``mapreduce.sort``; run
+    boundaries come from ``mapreduce.segment``'s lcp primitive either way.  The
+    count fold runs in int64 and refuses loudly if a merged cf overflows the
+    uint32 device lanes (mirroring the continuation-mass guard in ``build.py``).
+  * :func:`merge_indexes` -- segments in, finished artifact out:
+    ``index_from_segment`` rebuilds fanout/continuation/cumsum structures from
+    the merged rows *without re-running the job*, and re-compresses when the
+    inputs were compressed.  Because the structure build is shared with
+    ``build_index`` and the continuation order is a pure function of the row
+    set, ``merge(build(A), build(B))`` is bit-identical to ``build(A ∪ B)``.
+  * :class:`GenerationalIndex` -- L0..Ln immutable segments under a size-ratio
+    compaction policy: each ingest freezes a new L0 from a (small) job delta,
+    and merges cascade only when a newer run grows to within ``size_ratio`` of
+    its elder, so a 10% corpus delta costs a 10% job + occasional merges rather
+    than a full rebuild.  Point lookups sum cf across live segments; top-k
+    completion fetches per-segment candidates and merges them exactly
+    (``query.py``/``serve.py`` route both layouts, single-device and sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import reduce
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stats import NGramStats
+from repro.mapreduce import pack as packing
+from repro.mapreduce import segment as mr_segment
+from repro.mapreduce import sort as mr_sort
+from ._layout import SENTINEL, pad_rows, round_capacity
+from .build import IndexSegment, NGramIndex, build_index, index_from_segment
+from .compress import CompressedNGramIndex, build_compressed_index, compress_index
+
+DEFAULT_SIZE_RATIO = 4
+_U32_MAX = np.iinfo(np.uint32).max
+
+AnyIndex = "NGramIndex | CompressedNGramIndex"
+
+
+def _merged_run(segs: list[IndexSegment], *, route: str,
+                use_kernels: bool) -> tuple[np.ndarray, np.ndarray]:
+    """One sorted run (duplicates kept, sentinels at the tail) over all rows."""
+    if route == "sort":
+        # fallback: re-sort the concatenation (mapreduce.sort, the job's own
+        # multi-key lexicographic sort; sentinel rows sort to the tail)
+        keys = jnp.concatenate([s.keys for s in segs], axis=0)
+        counts = jnp.concatenate([s.counts for s in segs], axis=0)
+        keys, (counts,) = mr_sort.sort_with_payload(keys, [counts])
+    elif route == "merge":
+        if use_kernels:
+            from repro.kernels import ops as kops
+            merge2 = kops.merge_path
+        else:
+            from repro.kernels import ref as kref
+            merge2 = kref.merge_path_ref
+        keys, counts = reduce(
+            lambda acc, s: merge2(acc[0], s.keys, acc[1], s.counts),
+            segs[1:], (segs[0].keys, segs[0].counts))
+    else:
+        raise ValueError(f"unknown merge route {route!r}")
+    return np.asarray(keys, np.uint32), np.asarray(counts, np.uint32)
+
+
+def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
+                   pad_to: int | None = None) -> IndexSegment:
+    """Merge sorted segments into one, summing counts of duplicate grams.
+
+    ``route="merge"`` runs the jitted pairwise merge-path (Pallas kernel when
+    ``use_kernels``, jnp ref otherwise); ``route="sort"`` re-sorts the
+    concatenation (the ``mapreduce.sort`` fallback).  Raises ``ValueError``
+    if any merged count overflows the uint32 device lanes.
+    """
+    segs = list(segments)
+    if not segs:
+        raise ValueError("cannot merge zero segments")
+    sigma, vocab = segs[0].sigma, segs[0].vocab_size
+    for s in segs[1:]:
+        if (s.sigma, s.vocab_size) != (sigma, vocab):
+            raise ValueError(
+                f"segment meta mismatch: ({s.sigma}, {s.vocab_size}) vs "
+                f"({sigma}, {vocab})")
+    keys, counts = _merged_run(segs, route=route, use_kernels=use_kernels)
+
+    # run boundaries: a row starts a run iff it differs from its predecessor --
+    # mapreduce.segment's lcp primitive (lcp == n_cols <=> identical rows);
+    # uint32 -> int32 is a bit reinterpret, and lcp only compares equality
+    lcp = np.asarray(mr_segment.lcp_lengths(
+        jnp.asarray(keys).astype(jnp.int32)))
+    new_run = lcp < keys.shape[1]
+    starts = np.flatnonzero(new_run)
+    cs = np.concatenate([[0], np.cumsum(counts, dtype=np.int64)])
+    ends = np.append(starts[1:], keys.shape[0])
+    totals = cs[ends] - cs[starts]                      # int64: exact fold
+    run_keys = keys[starts]
+    real = run_keys[:, 0] <= np.uint32(sigma)           # sentinel length sorts last
+    r_keys = run_keys[real]
+    r_tot = totals[real]
+    # mirror of build.py's continuation-mass guard: a silently wrapped cf would
+    # serve plausible-looking garbage, so refuse loudly instead (raise tau, or
+    # shard the corpus so per-shard counts stay in range)
+    if r_tot.size and int(r_tot.max()) > _U32_MAX:
+        bad = int(np.argmax(r_tot))
+        raise ValueError(
+            f"merged count {int(r_tot[bad])} of gram row {bad} overflows the "
+            "uint32 device count lane; raise tau or shard the corpus before "
+            "merging")
+    r = int(r_keys.shape[0])
+    size = pad_to if pad_to is not None else round_capacity(r)
+    if size < r + 1:
+        raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
+    return IndexSegment(
+        keys=jnp.asarray(pad_rows(r_keys, size, SENTINEL)),
+        counts=jnp.asarray(pad_rows(r_tot.astype(np.uint32), size, 0)),
+        sigma=sigma, vocab_size=vocab)
+
+
+def merge_indexes(indexes, *, route: str = "merge", use_kernels: bool = False,
+                  pad_to: int | None = None):
+    """Merge finished indexes into one of the same layout, job-free.
+
+    All inputs must share (sigma, vocab_size) and layout; compressed inputs must
+    agree on ``block_size`` and yield a compressed result.
+    """
+    ixs = list(indexes)
+    if not ixs:
+        raise ValueError("cannot merge zero indexes")
+    compressed = isinstance(ixs[0], CompressedNGramIndex)
+    for ix in ixs[1:]:
+        if isinstance(ix, CompressedNGramIndex) != compressed:
+            raise ValueError("cannot merge mixed flat/compressed layouts")
+    seg = merge_segments([ix.to_segment() for ix in ixs], route=route,
+                         use_kernels=use_kernels)
+    idx = index_from_segment(seg, pad_to=pad_to)
+    if compressed:
+        bs = {ix.block_size for ix in ixs}
+        if len(bs) != 1:
+            raise ValueError(f"mixed block_size across inputs: {sorted(bs)}")
+        return compress_index(idx, block_size=bs.pop())
+    return idx
+
+
+def segment_to_stats(seg: IndexSegment) -> NGramStats:
+    """Host-side ``NGramStats`` view of a segment (sharded rebuilds, tests)."""
+    r = seg.n_rows
+    keys = np.asarray(seg.keys)[:r]
+    lengths = keys[:, 0].astype(np.int32)
+    grams = np.asarray(packing.unpack_terms(
+        jnp.asarray(keys[:, 1:]), vocab_size=seg.vocab_size,
+        sigma=seg.sigma)) if r else np.zeros((0, seg.sigma), np.int32)
+    counts = np.asarray(seg.counts)[:r].astype(np.int64)
+    return NGramStats(grams.astype(np.int32), lengths, counts)
+
+
+def stats_union(*stats: NGramStats) -> NGramStats:
+    """Dedup-summed union of job outputs -- the from-scratch merge oracle."""
+    acc: dict[tuple[int, ...], int] = {}
+    sigma = max((int(s.grams.shape[1]) for s in stats), default=0)
+    for s in stats:
+        for g, v in s.to_dict().items():
+            acc[g] = acc.get(g, 0) + v
+    grams = np.zeros((len(acc), sigma), np.int32)
+    lengths = np.zeros((len(acc),), np.int32)
+    counts = np.zeros((len(acc),), np.int64)
+    for i, (g, v) in enumerate(acc.items()):
+        grams[i, :len(g)] = g
+        lengths[i] = len(g)
+        counts[i] = v
+    return NGramStats(grams, lengths, counts)
+
+
+def merge_continuation_results(per_seg, *, k: int):
+    """Exact cross-segment fold of per-segment continuation answers.
+
+    per_seg: list of (n_distinct [Q], total [Q], terms [Q, m], counts [Q, m])
+    numpy-compatible tuples, each holding a segment's *complete* continuation
+    set (certified upstream: every n_distinct <= m).  Returns the standard
+    (nd [Q], total [Q], terms [Q, k], counts [Q, k]) with per-term counts
+    summed across segments, ranked (cf desc, term asc) -- the same tie order
+    the continuation view stores, so the fold is bit-compatible with a
+    from-scratch merged index.
+    """
+    nd0, tot0, t0, c0 = [np.asarray(x) for x in per_seg[0]]
+    q = nd0.shape[0]
+    total = np.zeros((q,), np.int64)
+    terms_all, counts_all, qid_all = [], [], []
+    for nd_i, tot_i, t_i, c_i in per_seg:
+        total += np.asarray(tot_i, np.int64)
+        t_i = np.asarray(t_i)
+        c_i = np.asarray(c_i, np.int64)
+        live = c_i > 0
+        qid = np.broadcast_to(np.arange(q)[:, None], t_i.shape)
+        terms_all.append(t_i[live].astype(np.int64))
+        counts_all.append(c_i[live])
+        qid_all.append(qid[live])
+    terms = np.concatenate(terms_all) if terms_all else np.zeros(0, np.int64)
+    cfs = np.concatenate(counts_all) if counts_all else np.zeros(0, np.int64)
+    qid = np.concatenate(qid_all) if qid_all else np.zeros(0, np.int64)
+    span = int(terms.max()) + 2 if terms.size else 2
+    key = qid * span + terms
+    uniq, inv = np.unique(key, return_inverse=True)
+    sums = np.bincount(inv, weights=cfs.astype(np.float64)).astype(np.int64)
+    # query-time mirror of the merge fold's guard: summed-across-segment
+    # masses/counts must fit the uint32 result lanes or refuse loudly
+    worst = max(int(sums.max()) if sums.size else 0,
+                int(total.max()) if total.size else 0)
+    if worst > _U32_MAX:
+        raise ValueError(
+            f"summed continuation mass {worst} across live segments overflows "
+            "uint32; compact the index or raise tau")
+    u_q = (uniq // span).astype(np.int64)
+    u_t = (uniq % span).astype(np.int64)
+    nd = np.bincount(u_q, minlength=q).astype(np.uint32)
+    # rank within each query: cf desc, term asc (the continuation tie order)
+    order = np.lexsort((u_t, -sums, u_q))
+    rank = np.arange(order.size) - np.concatenate(
+        [[0], np.cumsum(np.bincount(u_q, minlength=q))])[u_q[order]]
+    topk_t = np.zeros((q, k), np.uint32)
+    topk_c = np.zeros((q, k), np.uint32)
+    keep = rank < k
+    topk_t[u_q[order][keep], rank[keep]] = u_t[order][keep]
+    topk_c[u_q[order][keep], rank[keep]] = sums[order][keep]
+    return nd, total.astype(np.uint32), topk_t, topk_c
+
+
+class GenerationalIndex:
+    """L0..Ln immutable sorted segments + size-ratio compaction (an LSM tree).
+
+    ``ingest`` freezes a job delta into a new L0 (newest-first list) and then
+    compacts: while the newest run has grown to within ``size_ratio`` of its
+    elder (``rows(L0) * size_ratio >= rows(L1)``), the two merge -- so equal
+    ingests amortize into log-many segments and a small delta over a big base
+    costs no merge at all.  Segments are ordinary :class:`NGramIndex` /
+    :class:`CompressedNGramIndex` artifacts; queries go through ``query.py`` /
+    ``serve.py``, which sum point counts and exactly fold top-k candidates
+    across live segments.  ``generation`` bumps on every mutation -- the
+    serving cache's invalidation key.
+    """
+
+    def __init__(self, *, sigma: int, vocab_size: int, compress: bool = False,
+                 block_size: int = 4, size_ratio: int = DEFAULT_SIZE_RATIO,
+                 route: str = "merge", use_kernels: bool = False):
+        if size_ratio < 1:
+            raise ValueError("size_ratio must be >= 1")
+        self.sigma = sigma
+        self.vocab_size = vocab_size
+        self.compress = compress
+        self.block_size = block_size
+        self.size_ratio = size_ratio
+        self.route = route
+        self.use_kernels = use_kernels
+        self.levels: list = []          # newest (L0) first
+        self.generation = 0
+
+    # --- structure ----------------------------------------------------------- #
+
+    @property
+    def segments(self) -> tuple:
+        return tuple(self.levels)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.levels)
+
+    @property
+    def n_rows(self) -> int:
+        return sum(ix.n_rows for ix in self.levels)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(ix.nbytes for ix in self.levels)
+
+    def __repr__(self) -> str:
+        rows = "+".join(str(ix.n_rows) for ix in self.levels) or "0"
+        return (f"GenerationalIndex(gen={self.generation}, "
+                f"segments={self.n_segments}, rows={rows})")
+
+    # --- mutation ------------------------------------------------------------ #
+
+    def _freeze(self, stats: NGramStats):
+        if self.compress:
+            return build_compressed_index(stats, vocab_size=self.vocab_size,
+                                          block_size=self.block_size)
+        return build_index(stats, vocab_size=self.vocab_size)
+
+    def ingest(self, stats: NGramStats) -> dict:
+        """Freeze a job delta into L0, then compact.  Returns a report dict
+        (rows ingested, merges performed, live segment row counts)."""
+        if int(stats.grams.shape[1]) != self.sigma:
+            raise ValueError(
+                f"delta sigma {int(stats.grams.shape[1])} != index sigma "
+                f"{self.sigma}")
+        self.levels.insert(0, self._freeze(stats))
+        merges = self._compact()
+        self.generation += 1
+        return {"ingested_rows": len(stats), "merges": merges,
+                "segment_rows": [ix.n_rows for ix in self.levels]}
+
+    def _merge_front(self, n: int) -> None:
+        # elder segments first: merge-path ties keep generation order stable
+        merged = merge_indexes(list(reversed(self.levels[:n])),
+                               route=self.route, use_kernels=self.use_kernels)
+        self.levels[:n] = [merged]
+
+    def _compact(self) -> int:
+        merges = 0
+        while (len(self.levels) >= 2 and
+               self.levels[0].n_rows * self.size_ratio >= self.levels[1].n_rows):
+            self._merge_front(2)
+            merges += 1
+        return merges
+
+    def compact_all(self) -> None:
+        """Force-merge every live segment into one (maintenance/benchmarks)."""
+        if len(self.levels) >= 2:
+            self._merge_front(len(self.levels))
+            self.generation += 1
+
+
+def generational_from_stats(stats: NGramStats, *, vocab_size: int,
+                            compress: bool = False,
+                            **kw) -> GenerationalIndex:
+    """Bootstrap a generational index from one finished job's output."""
+    gen = GenerationalIndex(sigma=int(stats.grams.shape[1]),
+                            vocab_size=vocab_size, compress=compress, **kw)
+    gen.ingest(stats)
+    return gen

@@ -41,10 +41,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels.bitpack import extract_bits
 from repro.mapreduce import pack as packing
 from .build import NGramIndex, search_steps
 from .compress import CompressedNGramIndex, EliasFano
+from .merge import GenerationalIndex, merge_continuation_results
 
 
 def _bsearch(view: jax.Array, q_lanes: jax.Array, lo: jax.Array,
@@ -215,16 +218,66 @@ def lookup_packed(idx: NGramIndex, q_lanes: jax.Array, q_len: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("use_kernels",))
-def lookup(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
-           *, use_kernels: bool = False) -> jax.Array:
-    """Collection frequencies [Q] uint32 of raw query grams [Q, sigma].
-
-    Misses (gram absent / below tau / malformed) return 0 -- exactly the oracle's
-    ``counts.get(gram, 0)`` for frequent-gram stores.
-    """
+def _lookup_single(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
+                   *, use_kernels: bool = False) -> jax.Array:
+    """One-segment :func:`lookup` (jitted; the pre-generational entry point)."""
     grams, lengths, valid = _clean(idx, grams, lengths, lo_len=1)
     q_lanes = packing.pack_terms(grams, vocab_size=idx.vocab_size)
     return lookup_packed(idx, q_lanes, lengths, valid, use_kernels=use_kernels)
+
+
+_U32_MAX = np.iinfo(np.uint32).max
+
+
+def lookup_deferred(idx, grams, lengths, *, use_kernels: bool = False) -> list:
+    """Dispatch :func:`lookup` without materializing: per-segment device arrays.
+
+    The async serving half-pair: submit a batch now, fold it with
+    :func:`collect_lookup` one batch later, and jax's async dispatch overlaps
+    the device work of every live segment with the host's handling of the
+    previous batch -- no ``block_until_ready`` anywhere.
+    """
+    if isinstance(idx, GenerationalIndex):
+        return [_lookup_single(ix, grams, lengths, use_kernels=use_kernels)
+                for ix in idx.segments]
+    return [_lookup_single(idx, grams, lengths, use_kernels=use_kernels)]
+
+
+def collect_lookup(parts: list, n: int) -> np.ndarray:
+    """Materialize + fold deferred per-segment lookups -> [n] uint32.
+
+    The cross-segment sum runs in int64 and refuses loudly if a total
+    overflows the uint32 result lane -- the query-time mirror of the merge
+    fold's guard (``index/merge.py``), so a gram whose evidence is split
+    across segments can never serve a silently wrapped count.
+    """
+    acc = np.zeros((n,), np.int64)
+    for p in parts:
+        acc += np.asarray(p).astype(np.int64, copy=False)
+    if acc.size and int(acc.max()) > _U32_MAX:
+        raise ValueError(
+            f"summed cf {int(acc.max())} across live segments overflows "
+            "uint32; compact the index or raise tau")
+    return acc.astype(np.uint32)
+
+
+def lookup(idx, grams, lengths, *, use_kernels: bool = False):
+    """Collection frequencies [Q] uint32 of raw query grams [Q, sigma].
+
+    Misses (gram absent / below tau / malformed) return 0 -- exactly the oracle's
+    ``counts.get(gram, 0)`` for frequent-gram stores.  ``idx`` may be a single
+    frozen index (either layout) or a :class:`GenerationalIndex`, whose answer
+    is the sum of cf over live segments (a gram ingested twice has its evidence
+    split across segments until compaction folds it).
+    """
+    if not isinstance(idx, GenerationalIndex):
+        return _lookup_single(idx, grams, lengths, use_kernels=use_kernels)
+    segs = idx.segments
+    if len(segs) == 1:
+        return _lookup_single(segs[0], grams, lengths, use_kernels=use_kernels)
+    return collect_lookup(lookup_deferred(idx, grams, lengths,
+                                          use_kernels=use_kernels),
+                          np.asarray(grams).shape[0])
 
 
 @partial(jax.jit, static_argnames=("k", "use_kernels"))
@@ -255,8 +308,39 @@ def continuations_packed(idx: NGramIndex, p_lanes: jax.Array, p_len: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("k", "use_kernels"))
-def continuations(idx: NGramIndex, prefixes: jax.Array, p_len: jax.Array,
-                  *, k: int, use_kernels: bool = False):
+def _continuations_single(idx: NGramIndex, prefixes: jax.Array,
+                          p_len: jax.Array, *, k: int,
+                          use_kernels: bool = False):
+    """One-segment :func:`continuations` (jitted)."""
+    prefixes, p_len, valid = _clean(idx, prefixes, p_len, lo_len=0)
+    valid = valid & (p_len <= idx.sigma - 1)
+    p_lanes = packing.pack_terms(prefixes, vocab_size=idx.vocab_size)
+    return continuations_packed(idx, p_lanes, p_len, valid, k=k,
+                                use_kernels=use_kernels)
+
+
+def generational_continuation_sets(segments, fetch, *, k: int):
+    """Certified-complete per-segment continuation answers + the fetch width.
+
+    The cross-segment fold is only exact if every segment's *entire*
+    continuation set of every queried prefix was fetched, so the driver ladders
+    the fetch width: ask for top-m, check the returned (exact) n_distinct
+    against m, and double on any miss -- the retry-with-more-headroom idiom the
+    shuffle capacity already uses.  ``fetch(segment, m)`` returns the standard
+    (nd, total, terms, counts) tuple; this helper is shared by the local path
+    here and the sharded path in ``serve.py``.
+    """
+    m = max(int(k), 1)
+    while True:
+        per = [tuple(np.asarray(x) for x in fetch(ix, m)) for ix in segments]
+        max_nd = max((int(p[0].max()) if p[0].size else 0 for p in per),
+                     default=0)
+        if max_nd <= m:
+            return per, m
+        m = max(m * 2, 1 << (max_nd - 1).bit_length())
+
+
+def continuations(idx, prefixes, p_len, *, k: int, use_kernels: bool = False):
     """Top-k next-token completions of each prefix [Q, sigma] (len in 0..sigma-1).
 
     Returns (n_distinct [Q], total [Q], terms [Q, k], counts [Q, k]): the number
@@ -265,9 +349,25 @@ def continuations(idx: NGramIndex, prefixes: jax.Array, p_len: jax.Array,
     pairs, count-descending, zero-padded.  Both are over the index's frequent
     grams (cf >= tau), i.e. the continuation statistics a backoff LM or
     completion ranker reads.
+
+    ``idx`` may be a :class:`GenerationalIndex`: per-segment candidate sets are
+    fetched complete (see :func:`generational_continuation_sets`) and folded
+    exactly -- per-term counts summed across segments, ranked (cf desc, term
+    asc), the same tie order the continuation view stores.
     """
-    prefixes, p_len, valid = _clean(idx, prefixes, p_len, lo_len=0)
-    valid = valid & (p_len <= idx.sigma - 1)
-    p_lanes = packing.pack_terms(prefixes, vocab_size=idx.vocab_size)
-    return continuations_packed(idx, p_lanes, p_len, valid, k=k,
-                                use_kernels=use_kernels)
+    if not isinstance(idx, GenerationalIndex):
+        return _continuations_single(idx, prefixes, p_len, k=k,
+                                     use_kernels=use_kernels)
+    segs = idx.segments
+    qn = np.asarray(prefixes).shape[0]
+    if not segs:
+        return (np.zeros((qn,), np.uint32), np.zeros((qn,), np.uint32),
+                np.zeros((qn, k), np.uint32), np.zeros((qn, k), np.uint32))
+    if len(segs) == 1:
+        return _continuations_single(segs[0], prefixes, p_len, k=k,
+                                     use_kernels=use_kernels)
+    per, _ = generational_continuation_sets(
+        segs, lambda ix, m: _continuations_single(ix, prefixes, p_len, k=m,
+                                                  use_kernels=use_kernels),
+        k=k)
+    return merge_continuation_results(per, k=k)

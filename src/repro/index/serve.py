@@ -35,6 +35,8 @@ from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle
 from .build import NGramIndex, build_index
 from .compress import compress_index
+from .merge import (GenerationalIndex, merge_continuation_results,
+                    segment_to_stats)
 from . import query as q
 
 
@@ -104,6 +106,59 @@ def build_sharded_index(stats: NGramStats, *, vocab_size: int, mesh,
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *shards)
     stacked = jax.device_put(stacked, NamedSharding(mesh, P(axis_name)))
     return ShardedNGramIndex(stacked, mesh, axis_name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedGenerationalIndex:
+    """One :class:`ShardedNGramIndex` per live generational segment.
+
+    The PR-2 stacking trick (probe pass forcing common static meta so shard
+    pytrees stack) applies per segment; across segments sizes differ wildly
+    (that is the point of generations), so the segment axis stays a host-side
+    tuple and the cross-segment fold runs on the host -- same split as the
+    single-device generational path in ``query.py``.
+    """
+
+    shards: tuple          # one ShardedNGramIndex per segment, newest first
+    generation: int
+    mesh: jax.sharding.Mesh
+    axis_name: str
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.shards)
+
+    @property
+    def sigma(self) -> int:
+        return self.shards[0].sigma
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.index.nbytes for s in self.shards)
+
+
+def shard_generational(gen: GenerationalIndex, *, mesh, axis_name: str = "data",
+                       compress: bool | None = None,
+                       block_size: int | None = None) -> ShardedGenerationalIndex:
+    """Partition every live segment of ``gen`` over the mesh.
+
+    Layout defaults follow the generational index's own (``compress`` /
+    ``block_size``); each segment gets its own probe-passed sharded build, so
+    per-segment shard stacks keep a common treedef while segments of different
+    generations keep their own capacities.
+    """
+    if not gen.segments:
+        raise ValueError("cannot shard an empty GenerationalIndex")
+    compress = gen.compress if compress is None else compress
+    block_size = gen.block_size if block_size is None else block_size
+    shards = tuple(
+        build_sharded_index(segment_to_stats(ix.to_segment()),
+                            vocab_size=gen.vocab_size, mesh=mesh,
+                            axis_name=axis_name, compress=compress,
+                            block_size=block_size)
+        for ix in gen.segments)
+    return ShardedGenerationalIndex(shards=shards, generation=gen.generation,
+                                    mesh=mesh, axis_name=axis_name)
 
 
 def result_width(mode: str, k: int) -> int:
@@ -221,7 +276,39 @@ def _cached_server(sharded: ShardedNGramIndex, mode: str, k: int, capacity: int,
     return sharded._servers[key]
 
 
-def serve(sharded: ShardedNGramIndex, grams, lengths, *, mode: str = "lookup",
+def _serve_generational(sharded: ShardedGenerationalIndex, grams, lengths, *,
+                        mode: str, k: int, **kw) -> np.ndarray:
+    """Cross-segment fold of per-segment sharded answers (host side).
+
+    Point lookups sum cf over segments; continuation queries fetch each
+    segment's complete candidate set (the same certified ladder as the local
+    generational path) and fold exactly.  Each per-segment answer still rides
+    the full hash-routed all_to_all machinery of :func:`serve`.
+    """
+    from .query import generational_continuation_sets
+
+    if mode == "lookup":
+        acc = np.zeros((np.asarray(grams).shape[0],), np.int64)
+        for sh in sharded.shards:
+            acc += serve(sh, grams, lengths, mode="lookup", **kw) \
+                .astype(np.int64)
+        if acc.size and int(acc.max()) > np.iinfo(np.uint32).max:
+            raise ValueError(
+                f"summed cf {int(acc.max())} across live segments overflows "
+                "uint32; compact the index or raise tau")
+        return acc.astype(np.uint32)
+
+    def fetch(sh, m):
+        res = serve(sh, grams, lengths, mode="continuations", k=m, **kw)
+        return res[:, 0], res[:, 1], res[:, 2:2 + m], res[:, 2 + m:]
+
+    per, _ = generational_continuation_sets(sharded.shards, fetch, k=k)
+    nd, total, terms, counts = merge_continuation_results(per, k=k)
+    return np.concatenate([nd[:, None], total[:, None], terms, counts],
+                          axis=1).astype(np.uint32)
+
+
+def serve(sharded, grams, lengths, *, mode: str = "lookup",
           k: int = 8, capacity_factor: float = 2.0, use_kernels: bool = False,
           max_retries: int = 6) -> np.ndarray:
     """Answer one query batch on the mesh, retrying on shuffle overflow.
@@ -236,7 +323,16 @@ def serve(sharded: ShardedNGramIndex, grams, lengths, *, mode: str = "lookup",
     (:func:`empty_prefix_continuations`, cached on the index -- the answer is a
     pure function of (index, k)) and broadcast into their slots, so the sharded
     path accepts the same query mix as the single-device one.
+
+    ``sharded`` may also be a :class:`ShardedGenerationalIndex`: every live
+    segment is served through this same path and the answers fold on the host
+    (sum for lookups, exact candidate-set merge for continuations).
     """
+    if isinstance(sharded, ShardedGenerationalIndex):
+        return _serve_generational(sharded, grams, lengths, mode=mode, k=k,
+                                   capacity_factor=capacity_factor,
+                                   use_kernels=use_kernels,
+                                   max_retries=max_retries)
     n_parts = sharded.n_parts
     grams = np.asarray(grams)
     lengths = np.asarray(lengths)

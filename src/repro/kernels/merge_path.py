@@ -1,0 +1,128 @@
+"""Merge-path kernel: stable two-way merge of sorted packed-lane runs.
+
+The generational index (``repro.index.merge``) turns "refresh the index" from a
+full re-sort into a merge of already-sorted immutable segments.  XLA has no
+merge primitive -- the fallback re-sorts the concatenation (O((M+N) log(M+N))
+sort passes per lane) -- but two sorted runs admit the classic GPU *Merge Path*
+decomposition (Green et al.): output position d corresponds to one point on the
+monotone staircase path through the (A, B) comparison grid, and that point is
+findable by a log2(min(M, N))-step binary search along the diagonal i + j = d,
+independently per output element.  The kernel runs one such fixed-trip search
+for every output row of its block in lockstep (branchless, no divergence) and
+gathers the winning row -- gather-based, scatter-free, which is also the cheap
+direction on CPU.
+
+Tie-break is stable with A first: among equal keys every A row precedes every
+B row, so merging (older-segment, newer-segment) keeps duplicate grams adjacent
+and in generation order for the downstream run-fold.
+
+TPU mapping: output rows tile the grid; both input runs ride whole as block
+inputs (same VMEM-residency contract as ``bsearch``: an index segment is
+(1+L)*4 bytes/row -- shard over the mesh before a segment outgrows VMEM).  The
+per-step probes are VMEM dynamic takes along the row axis; lexicographic
+compares are uint32 VPU ops.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bsearch import search_steps
+
+
+def _lex_gt(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Row-wise lexicographic x > y over trailing lane axis -> [...] bool."""
+    eq = x == y
+    b = x.shape[:-1]
+    prefix_eq = jnp.concatenate(
+        [jnp.ones(b + (1,), jnp.bool_),
+         jnp.cumprod(eq[..., :-1].astype(jnp.int32), axis=-1).astype(bool)],
+        axis=-1)
+    return jnp.any(prefix_eq & (x > y), axis=-1)
+
+
+def _make_kernel(m: int, n: int, steps: int):
+    def kernel(a_ref, b_ref, av_ref, bv_ref, keys_ref, vals_ref):
+        a = a_ref[...]                               # [M, K]
+        b = b_ref[...]                               # [N, K]
+        blk = keys_ref.shape[0]
+        # global output positions of this block's rows
+        d = (jax.lax.broadcasted_iota(jnp.int32, (blk,), 0)
+             + pl.program_id(0) * blk)
+
+        # diagonal search: smallest i in [max(0, d-N), min(d, M)] such that
+        # A[i] > B[d-1-i] (out-of-range A -> +inf, out-of-range B -> -inf);
+        # monotone in i, so a fixed-trip bracket search finds it
+        lo = jnp.maximum(d - n, 0)
+        hi = jnp.minimum(d, m)
+
+        def body(_, state):
+            lo_c, hi_c = state
+            i = jax.lax.div(lo_c + hi_c, 2)
+            j = d - 1 - i
+            a_row = jnp.take(a, jnp.clip(i, 0, m - 1), axis=0)
+            b_row = jnp.take(b, jnp.clip(j, 0, n - 1), axis=0)
+            # predicate G(i): the (i+1)-th A row does NOT belong in the first d
+            g = (i >= m) | (j < 0) | _lex_gt(a_row, b_row)
+            open_ = lo_c < hi_c
+            lo_c = jnp.where(open_ & ~g, i + 1, lo_c)
+            hi_c = jnp.where(open_ & g, i, hi_c)
+            return lo_c, hi_c
+
+        i, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        j = d - i
+        a_row = jnp.take(a, jnp.clip(i, 0, m - 1), axis=0)
+        b_row = jnp.take(b, jnp.clip(j, 0, n - 1), axis=0)
+        # stable A-first: take A unless exhausted or B's row is strictly smaller
+        take_a = (i < m) & ((j >= n) | ~_lex_gt(a_row, b_row))
+        keys_ref[...] = jnp.where(take_a[:, None], a_row, b_row)
+        vals_ref[...] = jnp.where(take_a,
+                                  jnp.take(av_ref[...], jnp.clip(i, 0, m - 1)),
+                                  jnp.take(bv_ref[...], jnp.clip(j, 0, n - 1)))
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_path(a_keys: jax.Array, b_keys: jax.Array, a_vals: jax.Array,
+               b_vals: jax.Array, *, block: int = 1024,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Stable merge of two sorted runs -> (keys [M+N, K], vals [M+N]).
+
+    a_keys/b_keys : [M, K] / [N, K] uint32, rows sorted lexicographically
+    a_vals/b_vals : [M] / [N] payload rows riding along (counts)
+    Ties keep every A row before every B row (generation order).
+    """
+    m, k = a_keys.shape
+    n = b_keys.shape[0]
+    if m == 0:
+        return b_keys, b_vals
+    if n == 0:
+        return a_keys, a_vals
+    out = m + n
+    steps = search_steps(min(m, n) + 1)
+    nb = max(1, -(-out // block))
+
+    keys, vals = pl.pallas_call(
+        _make_kernel(m, n, steps),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block, k), a_keys.dtype),
+            jax.ShapeDtypeStruct((nb * block,), a_vals.dtype),
+        ],
+        interpret=interpret,
+    )(a_keys, b_keys, a_vals, b_vals)
+    return keys[:out], vals[:out]

@@ -11,6 +11,7 @@ from .block_decode import block_decode as _block_decode
 from .bsearch import bsearch as _bsearch
 from .hash_partition import hash_partition as _hash_partition
 from .lcp_boundary import lcp_boundary as _lcp_boundary
+from .merge_path import merge_path as _merge_path
 from .suffix_pack import suffix_pack as _suffix_pack
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -34,6 +35,11 @@ def suffix_pack(tokens, *, sigma: int, vocab_size: int, block: int = 1024):
 def hash_partition(keys, valid, *, n_parts: int, block: int = 4096):
     return _hash_partition(keys, valid, n_parts=n_parts, block=block,
                            interpret=INTERPRET)
+
+
+def merge_path(a_keys, b_keys, a_vals, b_vals, *, block: int = 1024):
+    return _merge_path(a_keys, b_keys, a_vals, b_vals, block=block,
+                       interpret=INTERPRET)
 
 
 def block_decode(lcps, payload, block_base, sec_starts, blk, q_terms, q_len, *,

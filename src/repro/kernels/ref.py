@@ -157,6 +157,33 @@ def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
             jnp.sum(is_eq.astype(jnp.int32), axis=1))
 
 
+def merge_path_ref(a_keys: jax.Array, b_keys: jax.Array, a_vals: jax.Array,
+                   b_vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(keys [M+N, K], vals [M+N]): stable two-way merge of sorted key matrices.
+
+    Rows compare lexicographically (uint32 lanes); on ties every A row precedes
+    every B row.  Semantics match ``repro.kernels.merge_path.merge_path`` (its
+    allclose target and the ``use_kernels=False`` merge route).  The ref takes
+    the rank-and-scatter route -- each A row's output slot is its index plus the
+    count of strictly-smaller B rows, each B row's its index plus the count of
+    less-or-equal A rows -- deliberately a different algorithm from the kernel's
+    diagonal (merge-path) search, so the differential test cross-checks two
+    derivations of the same permutation.
+    """
+    m, n = a_keys.shape[0], b_keys.shape[0]
+    zeros_m = jnp.zeros((m,), jnp.int32)
+    zeros_n = jnp.zeros((n,), jnp.int32)
+    pos_a = jnp.arange(m, dtype=jnp.int32) + bsearch_ref(
+        b_keys, a_keys, zeros_m, zeros_m + n, upper=False)
+    pos_b = jnp.arange(n, dtype=jnp.int32) + bsearch_ref(
+        a_keys, b_keys, zeros_n, zeros_n + m, upper=True)
+    keys = jnp.zeros((m + n, a_keys.shape[1]), a_keys.dtype)
+    keys = keys.at[pos_a].set(a_keys).at[pos_b].set(b_keys)
+    vals = jnp.zeros((m + n,), a_vals.dtype)
+    vals = vals.at[pos_a].set(a_vals).at[pos_b].set(b_vals)
+    return keys, vals
+
+
 def hash_partition_ref(keys: jax.Array, valid: jax.Array,
                        n_parts: int) -> tuple[jax.Array, jax.Array]:
     """(partition ids [N] with n_parts for invalid, histogram [n_parts])."""

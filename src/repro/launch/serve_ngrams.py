@@ -10,12 +10,21 @@ production frontend hands the device: collect queries until the batch fills (or
 a deadline passes), pad the tail, launch one jitted program.  Reports QPS and
 per-batch latency percentiles per batch size; ``--devices N`` serves the same
 stream through the sharded ``shard_map`` path on an N-way host mesh.
+
+``--streaming`` switches to the generational driver: the corpus arrives in
+document batches, each runs through the ordinary SUFFIX-sigma map/shuffle/sort
+phases into a fresh L0 segment of a :class:`~repro.index.merge.GenerationalIndex`
+(size-tiered merges instead of full rebuilds), and queries keep flowing between
+swaps through an LRU result cache plus double-buffered dispatch (submit batch
+i+1 before materializing batch i -- jax's async dispatch does the overlap, no
+``block_until_ready`` on the hot path).
 """
 from __future__ import annotations
 
 import argparse
 import os
 import time
+from collections import OrderedDict
 
 
 def _percentiles(lat_s: list[float]) -> str:
@@ -51,6 +60,234 @@ def make_query_stream(stats, *, n_queries: int, sigma: int, vocab_size: int,
     return grams, lengths
 
 
+class LRUQueryCache:
+    """Host-side LRU of hot query results, keyed by (kind, gram bytes).
+
+    Entries are tagged with the index ``generation`` they were computed
+    against; a lookup under a newer generation drops the whole cache (segment
+    swaps change answers wholesale, and a stale count is worse than a miss).
+    Accesses tagged with an *older* generation -- an in-flight double-buffered
+    batch collected after an ingest bumped the index -- are discarded, never
+    installed: they must not roll the cache back to serving stale counts.
+    """
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.generation = -1
+        self.hits = 0
+        self.misses = 0
+        self._d: OrderedDict = OrderedDict()
+
+    def _sync(self, generation: int) -> bool:
+        """Advance to ``generation`` if newer; False iff the caller is stale."""
+        if generation > self.generation:
+            self._d.clear()
+            self.generation = generation
+        return generation == self.generation
+
+    def get(self, key, generation: int):
+        if not self._sync(generation):
+            self.misses += 1               # stale reader: always a miss
+            return None
+        v = self._d.get(key)
+        if v is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return v
+
+    def put(self, key, generation: int, value) -> None:
+        if not self._sync(generation):
+            return                         # stale result: drop, don't install
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class DoubleBufferedDriver:
+    """Overlap host-side batching with device execution.
+
+    ``submit`` dispatches batch i+1 (``answer`` must return its result
+    *unmaterialized* -- device arrays or a record holding them) and only then
+    materializes batch i's via ``collect`` -- jax's async dispatch runs the new
+    batch while the host reads the old one, with no ``jax.block_until_ready``
+    anywhere on the hot path.  ``submit`` returns (previous batch's collected
+    result, its submit-time payload); ``drain`` flushes the last in-flight
+    batch.
+    """
+
+    def __init__(self, answer, collect=None):
+        self._answer = answer
+        self._collect = collect
+        self._pending = None
+
+    def _materialize(self, out):
+        if self._collect is not None:
+            return self._collect(out)
+        import numpy as np
+        return np.asarray(out)
+
+    def submit(self, *args, tag=None):
+        out = self._answer(*args)
+        prev, self._pending = self._pending, (out, tag)
+        if prev is None:
+            return None, None
+        return self._materialize(prev[0]), prev[1]
+
+    def drain(self):
+        if self._pending is None:
+            return None, None
+        (out, tag), self._pending = self._pending, None
+        return self._materialize(out), tag
+
+
+class StreamingNGramService:
+    """Generational index + query cache behind a batch lookup/completion API.
+
+    ``ingest`` streams new document tokens through the ordinary SUFFIX-sigma
+    job phases into a fresh L0 segment (``GenerationalIndex.ingest`` handles
+    the size-tiered merges); queries between swaps hit the LRU cache first and
+    only the residual miss rows go to the device, padded to a power-of-two
+    sub-batch so the compiled-program cache stays small.
+    """
+
+    def __init__(self, cfg, *, compress: bool = False,
+                 use_kernels: bool = False, cache_capacity: int = 65536,
+                 size_ratio: int = 4, route: str = "merge"):
+        from repro.index import GenerationalIndex
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.gen = GenerationalIndex(
+            sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
+            size_ratio=size_ratio, route=route, use_kernels=use_kernels)
+        self.cache = LRUQueryCache(cache_capacity)
+
+    def ingest(self, tokens) -> dict:
+        """Run the job phases over a token delta and swap the new L0 in."""
+        from repro.core import run_job
+        t0 = time.perf_counter()
+        stats = run_job(tokens, self.cfg)
+        t_job = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        report = self.gen.ingest(stats)
+        report.update(job_s=t_job, ingest_s=time.perf_counter() - t0,
+                      segments=self.gen.n_segments)
+        return report
+
+    def _submit_lookup(self, grams, lengths) -> dict:
+        """Cache consult + async device dispatch of the miss rows.
+
+        The returned record holds the *unmaterialized* device result; pairing
+        ``_submit_lookup`` of batch i+1 with ``_collect_lookup`` of batch i is
+        the double-buffered hot path (cache fill rides the collect side, one
+        batch behind the device)."""
+        import numpy as np
+        g = np.asarray(grams, np.int32)
+        ln = np.asarray(lengths, np.int32)
+        gen_id = self.gen.generation
+        out = np.zeros((g.shape[0],), np.uint32)
+        miss = []
+        keys = []
+        for i in range(g.shape[0]):
+            key = (int(ln[i]), g[i, :max(int(ln[i]), 0)].tobytes())
+            v = self.cache.get(key, gen_id)
+            if v is None:
+                miss.append(i)
+                keys.append(key)
+            else:
+                out[i] = v
+        dev, pad = None, 0
+        if miss:
+            from repro.index.query import lookup_deferred
+            m = len(miss)
+            pad = max(1 << (m - 1).bit_length(), 16)
+            mg = np.zeros((pad, g.shape[1]), np.int32)
+            mln = np.zeros((pad,), np.int32)
+            mg[:m] = g[miss]
+            mln[:m] = ln[miss]
+            # per-segment deferred dispatches: nothing is materialized here,
+            # even with several live generations
+            dev = lookup_deferred(self.gen, mg, mln,
+                                  use_kernels=self.use_kernels)
+        return {"out": out, "miss": miss, "keys": keys, "dev": dev,
+                "pad": pad, "gen": gen_id}
+
+    def _collect_lookup(self, rec: dict):
+        if rec["dev"] is not None:
+            from repro.index.query import collect_lookup
+            cf = collect_lookup(rec["dev"], rec["pad"])[:len(rec["miss"])]
+            rec["out"][rec["miss"]] = cf
+            for key, v in zip(rec["keys"], cf):
+                self.cache.put(key, rec["gen"], int(v))
+        return rec["out"]
+
+    def lookup(self, grams, lengths):
+        """Point counts [B] uint32; cache hits never touch the device."""
+        return self._collect_lookup(self._submit_lookup(grams, lengths))
+
+    def lookup_pipelined(self, batches) -> list:
+        """Drive (grams, lengths) batches double-buffered: batch i+1 is
+        dispatched before batch i's device result is materialized, so host
+        batching/cache work overlaps device execution with no
+        ``block_until_ready`` anywhere."""
+        drv = DoubleBufferedDriver(self._submit_lookup,
+                                   collect=self._collect_lookup)
+        results: list = []
+        for g, ln in batches:
+            res, _ = drv.submit(g, ln)
+            if res is not None:
+                results.append(res)
+        res, _ = drv.drain()
+        if res is not None:
+            results.append(res)
+        return results
+
+    def continuations(self, prefixes, p_len, *, k: int = 8):
+        """Top-k completion rows [B, 2+2k] uint32 (nd | total | terms | cfs)."""
+        import numpy as np
+        from repro.index import continuations as idx_cont
+        pg = np.asarray(prefixes, np.int32)
+        pl = np.asarray(p_len, np.int32)
+        gen_id = self.gen.generation
+        out = np.zeros((pg.shape[0], 2 + 2 * k), np.uint32)
+        miss = []
+        for i in range(pg.shape[0]):
+            key = ("c", k, int(pl[i]), pg[i, :max(int(pl[i]), 0)].tobytes())
+            v = self.cache.get(key, gen_id)
+            if v is None:
+                miss.append(i)
+            else:
+                out[i] = v
+        if miss:
+            m = len(miss)
+            pad = max(1 << (m - 1).bit_length(), 16)
+            mg = np.zeros((pad, pg.shape[1]), np.int32)
+            mln = np.zeros((pad,), np.int32)
+            mg[:m] = pg[miss]
+            mln[:m] = pl[miss]
+            nd, tot, terms, cfs = [np.asarray(x) for x in idx_cont(
+                self.gen, mg, mln, k=k, use_kernels=self.use_kernels)]
+            rows = np.concatenate([nd[:m, None], tot[:m, None], terms[:m],
+                                   cfs[:m]], axis=1).astype(np.uint32)
+            out[miss] = rows
+            for j, i in enumerate(miss):
+                key = ("c", k, int(pl[i]), pg[i, :max(int(pl[i]), 0)].tobytes())
+                self.cache.put(key, gen_id, rows[j])
+        return out
+
+
 def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
     """Feed the stream through ``answer`` in fixed micro-batches; (qps, lat[s])."""
     import numpy as np
@@ -71,6 +308,66 @@ def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
     return qps, lat
 
 
+def run_streaming(args) -> None:
+    """Generational serving loop: base build, then ingest/query interleave."""
+    import numpy as np
+    from repro.core.stats import NGramConfig
+    from repro.data import corpus as corpus_mod
+    from repro.index.merge import segment_to_stats
+
+    prof = corpus_mod.PROFILES[args.profile]
+    tokens = corpus_mod.zipf_corpus(args.tokens, prof, seed=0,
+                                    duplicate_frac=0.02)
+    cfg = NGramConfig(sigma=args.sigma, tau=args.tau,
+                      vocab_size=prof.vocab_size)
+    svc = StreamingNGramService(cfg, compress=args.compress,
+                                use_kernels=args.use_kernels,
+                                cache_capacity=args.cache_capacity)
+    nb = max(args.ingest_batches, 1)
+    base, rest = np.split(tokens, [int(len(tokens) * 0.6)])
+    deltas = np.array_split(rest, nb)
+    rep = svc.ingest(base)
+    print(f"base: {len(base)} tokens -> {rep['ingested_rows']} grams "
+          f"(job {rep['job_s']:.2f}s, freeze {rep['ingest_s']:.2f}s)")
+
+    batch = args.stream_batch
+    for step, delta in enumerate(deltas):
+        t0 = time.perf_counter()
+        rep = svc.ingest(delta)
+        t_ing = time.perf_counter() - t0
+        stats = segment_to_stats(svc.gen.segments[0].to_segment())
+        # fresh query stream per step (seed=step), split in two cold halves:
+        # one drives the pipelined path (throughput), one the per-batch sync
+        # path (latency percentiles) -- neither re-times rows the warm pass
+        # just cached
+        grams, lengths = make_query_stream(
+            stats, n_queries=args.queries // nb, sigma=args.sigma,
+            vocab_size=prof.vocab_size, miss_frac=args.miss_frac,
+            seed=step)
+        half = grams.shape[0] // 2
+        pipe_b = [(grams[i:i + batch], lengths[i:i + batch])
+                  for i in range(0, half, batch)]
+        sync_b = [(grams[i:i + batch], lengths[i:i + batch])
+                  for i in range(half, grams.shape[0], batch)]
+        svc.lookup(*pipe_b[0])                 # compile warm only
+        t0 = time.perf_counter()
+        svc.lookup_pipelined(pipe_b)
+        t_pipe = time.perf_counter() - t0
+        lat = []
+        for g, ln in sync_b:
+            t1 = time.perf_counter()
+            svc.lookup(g, ln)
+            lat.append(time.perf_counter() - t1)
+        n_pipe = sum(b[0].shape[0] for b in pipe_b)
+        print(f"ingest[{step}]: {len(delta):>7} tokens in {t_ing:.2f}s "
+              f"({len(delta) / t_ing:,.0f} tok/s; merges={rep['merges']} "
+              f"segments={rep['segments']}) | pipelined "
+              f"{n_pipe / t_pipe:>8,.0f} qps | sync {_percentiles(lat)} "
+              f"cache_hit={svc.cache.hit_rate:.0%}")
+    print(f"final: {svc.gen!r}, {svc.gen.nbytes / 2**20:.1f} MiB, "
+          f"cache {len(svc.cache)} entries hit_rate={svc.cache.hit_rate:.0%}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=200_000)
@@ -88,7 +385,18 @@ def main() -> None:
     ap.add_argument("--compress", action="store_true",
                     help="serve the front-coded + Elias-Fano layout "
                          "(repro.index.compress) instead of the flat lanes")
+    ap.add_argument("--streaming", action="store_true",
+                    help="generational driver: ingest the corpus in document "
+                         "batches (LSM merges, no rebuilds) with cached, "
+                         "double-buffered query serving between swaps")
+    ap.add_argument("--ingest-batches", type=int, default=4)
+    ap.add_argument("--stream-batch", type=int, default=256,
+                    help="query micro-batch size of the streaming loop")
+    ap.add_argument("--cache-capacity", type=int, default=65536)
     args = ap.parse_args()
+    if args.streaming:
+        run_streaming(args)
+        return
     if args.devices > 1:
         # --devices always wins: drop any pre-set device-count flag, keep the
         # rest of XLA_FLAGS, and append ours

@@ -338,6 +338,73 @@ def test_sharded_compressed_index_matches_oracle():
     assert "OK" in out
 
 
+@pytest.mark.slow
+def test_sharded_generational_matches_single_device():
+    """Acceptance: a GenerationalIndex grown through >=3 ingests (with a
+    compaction) serves bit-identically through the 8-way sharded path -- point
+    lookups summed across per-segment shard stacks, continuation candidate
+    sets folded on the host -- for both layouts."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core import run_job
+        from repro.core.stats import NGramConfig
+        from repro.index import (GenerationalIndex, build_index, continuations,
+                                 lookup, serve_queries, shard_generational,
+                                 stats_union)
+        from tests.test_compress import make_corpus
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        vocab, sigma, k = 40, 4, 8
+        cfg = NGramConfig(sigma=sigma, tau=1, vocab_size=vocab)
+        slices = [make_corpus(n, vocab, "zipf", 40 + i)
+                  for i, n in enumerate((5000, 1100, 1100, 1100))]
+        all_stats = [run_job(t, cfg) for t in slices]
+        for compress in (False, True):
+            gen = GenerationalIndex(sigma=sigma, vocab_size=vocab,
+                                    compress=compress)
+            merges = sum(gen.ingest(s)["merges"] for s in all_stats)
+            assert merges >= 1 and gen.n_segments >= 2, (merges, gen)
+            sh = shard_generational(gen, mesh=mesh)
+            assert sh.n_segments == gen.n_segments
+
+            union = stats_union(*all_stats)
+            exp = union.to_dict()
+            target = build_index(union, vocab_size=vocab)
+            gram_tuples = sorted(exp)
+            g = np.zeros((len(gram_tuples), sigma), np.int32)
+            ln = np.zeros(len(gram_tuples), np.int32)
+            for i, t in enumerate(gram_tuples):
+                g[i, :len(t)] = t; ln[i] = len(t)
+            got = serve_queries(sh, g, ln)
+            assert (got == np.asarray(lookup(target, g, ln))).all(), compress
+            assert (got == [exp[t] for t in gram_tuples]).all(), compress
+
+            rng = np.random.default_rng(0)
+            lm = rng.integers(1, sigma + 1, 2000).astype(np.int32)
+            gm = rng.integers(1, vocab + 1, (2000, sigma)).astype(np.int32)
+            gm *= np.arange(sigma)[None, :] < lm[:, None]
+            assert (serve_queries(sh, gm, lm)
+                    == np.asarray(lookup(target, gm, lm))).all(), compress
+
+            pool = [t[:-1] for t in gram_tuples if len(t) >= 2]
+            prefixes = [(), pool[0], ()] + \\
+                [pool[i] for i in rng.choice(len(pool), 12)]
+            pg = np.zeros((len(prefixes), sigma), np.int32)
+            pl = np.zeros(len(prefixes), np.int32)
+            for i, t in enumerate(prefixes):
+                pg[i, :len(t)] = t; pl[i] = len(t)
+            res = serve_queries(sh, pg, pl, mode="continuations", k=k)
+            nd, tot, terms, cfs = [np.asarray(x) for x in
+                                   continuations(target, pg, pl, k=k)]
+            assert (res[:, 0] == nd).all(), compress
+            assert (res[:, 1] == tot).all(), compress
+            assert (res[:, 2:2 + k] == terms).all(), compress
+            assert (res[:, 2 + k:] == cfs).all(), compress
+        print("OK", len(gram_tuples))
+    """)
+    assert "OK" in out
+
+
 def test_sigma_split_exact():
     """Two-phase sigma split (SSPerf H3) is exact vs the single job."""
     import numpy as np

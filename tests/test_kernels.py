@@ -101,12 +101,34 @@ def _case_block_decode(rng, scale):
             lambda: ref.block_decode_ref(*args, **kw))
 
 
+def _case_merge_path(rng, scale):
+    """Sorted runs with deliberate duplicates (within and across runs) so the
+    stable A-first tie-break is exercised, plus empty/singleton run corners."""
+    n_l = int(rng.integers(1, 4))
+    vmax = int(rng.choice([3, 20, 2**31]))
+    m = int(rng.integers(0, 150 * scale + 2))
+    n = int(rng.integers(0, 150 * scale + 2))
+    a = lex_sorted(rng, m, n_l, vmax=vmax).astype(np.uint32)
+    b = lex_sorted(rng, n, n_l, vmax=vmax).astype(np.uint32)
+    if m and n and rng.integers(0, 2):      # force cross-run duplicates
+        take = rng.integers(0, m, min(n, 8))
+        b[:len(take)] = a[take]
+        b = b[np.lexsort(b.T[::-1])]
+    av = rng.integers(0, 2**32, m).astype(np.uint32)
+    bv = rng.integers(0, 2**32, n).astype(np.uint32)
+    block = int(rng.choice([64, 256, 1024]))
+    args = (jnp.asarray(a), jnp.asarray(b), jnp.asarray(av), jnp.asarray(bv))
+    return (lambda: ops.merge_path(*args, block=block),
+            lambda: ref.merge_path_ref(*args))
+
+
 KERNEL_CASES = {
     "lcp_boundary": _case_lcp_boundary,
     "suffix_pack": _case_suffix_pack,
     "hash_partition": _case_hash_partition,
     "bsearch": _case_bsearch,
     "block_decode": _case_block_decode,
+    "merge_path": _case_merge_path,
 }
 
 

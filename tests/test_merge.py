@@ -1,0 +1,347 @@
+"""Differential suite for segment merge + the generational (LSM) index.
+
+The contract is the strongest one available: ``merge(build(A), build(B))`` must
+be *bit-identical* -- every pytree leaf -- to ``build(A ∪ B)`` (dedup-summed
+union), for both layouts and both merge routes, because ``index_from_segment``
+is shared and the continuation order is a pure function of the row set.  On
+top: the uint32 overflow guard trips loudly, the generational index answers
+queries over >=3 ingests (with compactions) exactly like a from-scratch build,
+and the streaming-serving pieces (LRU cache, double-buffered driver) behave.
+
+Corpus generation is hypothesis-driven where available and degrades to the
+same generator over fixed parametrized draws without it (repo convention).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+import jax
+
+from repro.core import oracle, run_job
+from repro.core.stats import NGramConfig, NGramStats
+from repro.index import (GenerationalIndex, build_compressed_index,
+                         build_index, continuations, generational_from_stats,
+                         lookup, merge_indexes, merge_segments,
+                         segment_to_stats, stats_union)
+from repro.index.build import IndexSegment, segment_from_stats
+from tests.test_compress import make_corpus
+
+
+def assert_trees_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def job_pair(vocab, dist, sigma, tau, seed, n=2500):
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=vocab)
+    sa = run_job(make_corpus(n, vocab, dist, seed), cfg)
+    sb = run_job(make_corpus(n, vocab, dist, seed + 1000), cfg)
+    return sa, sb
+
+
+def check_merge_parity(sa, sb, vocab, *, block=4):
+    union = stats_union(sa, sb)
+    # flat: both routes, ref and kernel merge-path
+    want = build_index(union, vocab_size=vocab)
+    for kw in (dict(route="merge"), dict(route="merge", use_kernels=True),
+               dict(route="sort")):
+        got = merge_indexes([build_index(sa, vocab_size=vocab),
+                             build_index(sb, vocab_size=vocab)], **kw)
+        assert_trees_equal(got, want)
+    # compressed layout, same bar
+    cwant = build_compressed_index(union, vocab_size=vocab, block_size=block)
+    cgot = merge_indexes(
+        [build_compressed_index(sa, vocab_size=vocab, block_size=block),
+         build_compressed_index(sb, vocab_size=vocab, block_size=block)])
+    assert_trees_equal(cgot, cwant)
+
+
+MERGE_DRAWS = [  # (vocab, dist, sigma, tau, seed)
+    (5, "uniform", 3, 1, 0),
+    (40, "zipf", 5, 2, 1),
+    (700, "uniform", 4, 1, 2),
+    (5000, "zipf", 4, 2, 3),
+]
+
+
+@pytest.mark.parametrize("vocab,dist,sigma,tau,seed", MERGE_DRAWS)
+def test_merge_parity_generated_corpora(vocab, dist, sigma, tau, seed):
+    sa, sb = job_pair(vocab, dist, sigma, tau, seed)
+    check_merge_parity(sa, sb, vocab)
+
+
+def test_kway_merge_and_edge_segments():
+    """3-way merge == union build; empty and singleton segments fold away."""
+    vocab = 30
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=vocab)
+    stats = [run_job(make_corpus(800, vocab, "zipf", s), cfg)
+             for s in range(3)]
+    empty = NGramStats(np.zeros((0, 3), np.int32), np.zeros(0, np.int32),
+                       np.zeros(0, np.int64))
+    ixs = [build_index(s, vocab_size=vocab) for s in stats]
+    ixs.append(build_index(empty, vocab_size=vocab))
+    want = build_index(stats_union(*stats), vocab_size=vocab)
+    for kw in (dict(route="merge"), dict(route="sort")):
+        assert_trees_equal(merge_indexes(ixs, **kw), want)
+
+
+def test_merge_validation_errors():
+    a = segment_from_stats(NGramStats(np.array([[1, 0]], np.int32),
+                                      np.array([1], np.int32),
+                                      np.array([3], np.int64)), vocab_size=9)
+    b = segment_from_stats(NGramStats(np.array([[1, 0, 0]], np.int32),
+                                      np.array([1], np.int32),
+                                      np.array([3], np.int64)), vocab_size=9)
+    with pytest.raises(ValueError):
+        merge_segments([])
+    with pytest.raises(ValueError):
+        merge_segments([a, b])             # sigma mismatch
+    with pytest.raises(ValueError):
+        merge_segments([a], route="bogus")
+    s = NGramStats(np.array([[1, 0]], np.int32), np.array([1], np.int32),
+                   np.array([3], np.int64))
+    with pytest.raises(ValueError):        # mixed layouts
+        merge_indexes([build_index(s, vocab_size=9),
+                       build_compressed_index(s, vocab_size=9)])
+
+
+def test_merged_count_overflow_guard_trips():
+    """Summed uint32 counts past 2^32 must refuse loudly, not wrap."""
+    big = 2**31 + 5                        # fits uint32 alone, wraps summed
+    mk = lambda: NGramStats(np.array([[7, 0, 0]], np.int32),
+                            np.array([1], np.int32),
+                            np.array([big], np.int64))
+    segs = [segment_from_stats(mk(), vocab_size=9) for _ in range(2)]
+    for kw in (dict(route="merge"), dict(route="sort")):
+        with pytest.raises(ValueError, match="overflow"):
+            merge_segments(segs, **kw)
+    # just-below-the-edge sums must still merge exactly
+    small = NGramStats(np.array([[7, 0, 0]], np.int32),
+                       np.array([1], np.int32), np.array([10], np.int64))
+    seg = merge_segments([segs[0], segment_from_stats(small, vocab_size=9)])
+    assert np.asarray(seg.counts)[0] == np.uint32(big + 10)
+
+
+def test_generational_query_overflow_guard_trips():
+    """Counts split across live segments must not silently wrap at query time
+    (the lookup-side mirror of the merge fold's guard)."""
+    big = 2**31 + 5
+    mk = lambda seed: NGramStats(np.array([[7, 0, 0]], np.int32),
+                                 np.array([1], np.int32),
+                                 np.array([big], np.int64))
+    gen = GenerationalIndex(sigma=3, vocab_size=9, size_ratio=1)
+    gen.levels = [build_index(mk(0), vocab_size=9),
+                  build_index(mk(1), vocab_size=9)]   # bypass compaction
+    g = np.array([[7, 0, 0]], np.int32)
+    ln = np.array([1], np.int32)
+    with pytest.raises(ValueError, match="overflow"):
+        lookup(gen, g, ln)
+    with pytest.raises(ValueError, match="overflow"):
+        continuations(gen, np.zeros((1, 3), np.int32),
+                      np.zeros(1, np.int32), k=2)
+
+
+def test_segment_round_trips():
+    """to_segment() of both layouts reproduces the built segment bit-exactly."""
+    toks = make_corpus(3000, 50, "zipf", 4)
+    stats = run_job(toks, NGramConfig(sigma=4, tau=2, vocab_size=50))
+    seg = segment_from_stats(stats, vocab_size=50)
+    idx = build_index(stats, vocab_size=50)
+    assert_trees_equal(idx.to_segment(), seg)
+    cidx = build_compressed_index(stats, vocab_size=50)
+    assert_trees_equal(cidx.to_segment(), seg)
+    # and stats survive the segment view (dict equality; row order may differ)
+    assert segment_to_stats(seg).to_dict() == stats.to_dict()
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(vocab=st.integers(2, 5000),
+           dist=st.sampled_from(["zipf", "uniform"]),
+           sigma=st.integers(1, 6), tau=st.integers(1, 3),
+           seed=st.integers(0, 2**16))
+    def test_merge_parity_hypothesis(vocab, dist, sigma, tau, seed):
+        sa, sb = job_pair(vocab, dist, sigma, tau, seed, n=1500)
+        check_merge_parity(sa, sb, vocab)
+
+
+# --------------------------------------------------------------------------- #
+# generational index
+# --------------------------------------------------------------------------- #
+
+def drive_generational(compress: bool):
+    """>=3 ingests with at least one compaction; parity vs from-scratch."""
+    vocab, sigma, tau = 40, 4, 1
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=vocab)
+    slices = [make_corpus(n, vocab, "zipf", 10 + i)
+              for i, n in enumerate((4000, 900, 900, 900))]
+    all_stats = [run_job(t, cfg) for t in slices]
+    gen = GenerationalIndex(sigma=sigma, vocab_size=vocab, compress=compress)
+    merges = 0
+    for s in all_stats:
+        merges += gen.ingest(s)["merges"]
+    assert merges >= 1                     # the policy actually compacted
+    assert gen.n_segments >= 2             # ...but not down to one artifact
+    union = stats_union(*all_stats)
+    build = build_compressed_index if compress else build_index
+    target = build(union, vocab_size=vocab)
+
+    exp = union.to_dict()
+    gram_tuples = sorted(exp)
+    g = np.zeros((len(gram_tuples), sigma), np.int32)
+    ln = np.zeros(len(gram_tuples), np.int32)
+    for i, t in enumerate(gram_tuples):
+        g[i, :len(t)] = t
+        ln[i] = len(t)
+    got = np.asarray(lookup(gen, g, ln))
+    np.testing.assert_array_equal(got, np.asarray(lookup(target, g, ln)))
+    np.testing.assert_array_equal(got, [exp[t] for t in gram_tuples])
+
+    rng = np.random.default_rng(0)
+    lm = rng.integers(1, sigma + 1, 1500).astype(np.int32)
+    gm = rng.integers(1, vocab + 1, (1500, sigma)).astype(np.int32)
+    gm *= np.arange(sigma)[None, :] < lm[:, None]
+    np.testing.assert_array_equal(np.asarray(lookup(gen, gm, lm)),
+                                  np.asarray(lookup(target, gm, lm)))
+
+    pool = [t[:-1] for t in gram_tuples if len(t) >= 2]
+    prefixes = [(), ()] + [pool[i] for i in rng.choice(len(pool), 25)] \
+        + [(vocab + 2,)]
+    pg = np.zeros((len(prefixes), sigma), np.int32)
+    pl = np.zeros(len(prefixes), np.int32)
+    for i, t in enumerate(prefixes):
+        pg[i, :len(t)] = t
+        pl[i] = len(t)
+    for uk in (False, True):
+        got_c = [np.asarray(x) for x in
+                 continuations(gen, pg, pl, k=6, use_kernels=uk)]
+        want_c = [np.asarray(x) for x in continuations(target, pg, pl, k=6)]
+        for a, b in zip(got_c, want_c):
+            np.testing.assert_array_equal(a, b)
+
+    # compact_all collapses to one segment with the same (bit-exact) artifact
+    gen.compact_all()
+    assert gen.n_segments == 1
+    assert_trees_equal(gen.segments[0], target)
+
+
+def test_generational_flat():
+    drive_generational(compress=False)
+
+
+def test_generational_compressed():
+    drive_generational(compress=True)
+
+
+def test_generational_bootstrap_and_empty():
+    empty = GenerationalIndex(sigma=3, vocab_size=9)
+    assert np.asarray(lookup(empty, np.zeros((2, 3), np.int32),
+                             np.ones(2, np.int32))).tolist() == [0, 0]
+    nd, tot, terms, cfs = continuations(empty, np.zeros((2, 3), np.int32),
+                                        np.zeros(2, np.int32), k=4)
+    assert np.asarray(nd).tolist() == [0, 0]
+    s = NGramStats(np.array([[5, 0, 0]], np.int32), np.array([1], np.int32),
+                   np.array([7], np.int64))
+    gen = generational_from_stats(s, vocab_size=9)
+    assert gen.n_segments == 1 and gen.generation == 1
+    with pytest.raises(ValueError):        # sigma mismatch on ingest
+        gen.ingest(NGramStats(np.zeros((0, 4), np.int32),
+                              np.zeros(0, np.int32), np.zeros(0, np.int64)))
+
+
+# --------------------------------------------------------------------------- #
+# streaming serving pieces (LRU cache, double buffering)
+# --------------------------------------------------------------------------- #
+
+def test_lru_cache_eviction_and_invalidation():
+    from repro.launch.serve_ngrams import LRUQueryCache
+    c = LRUQueryCache(capacity=2)
+    c.put("a", 1, 10)
+    c.put("b", 1, 20)
+    assert c.get("a", 1) == 10             # refreshes "a"
+    c.put("x", 1, 30)                      # evicts LRU "b"
+    assert c.get("b", 1) is None
+    assert c.get("a", 1) == 10 and c.get("x", 1) == 30
+    assert c.get("a", 2) is None           # generation swap drops everything
+    assert len(c) == 0
+    c.put("a", 2, 11)
+    assert c.get("a", 2) == 11
+    assert 0.0 < c.hit_rate < 1.0
+    # a stale (pre-swap) writer must neither install nor roll the cache back
+    c.put("old", 1, 99)
+    assert c.generation == 2 and c.get("a", 2) == 11
+    assert c.get("old", 2) is None
+    assert c.get("a", 1) is None           # stale reader: miss, no clear
+    assert c.get("a", 2) == 11
+
+
+def test_streaming_service_matches_oracle_and_caches():
+    from repro.launch.serve_ngrams import StreamingNGramService
+    vocab, sigma = 30, 3
+    cfg = NGramConfig(sigma=sigma, tau=1, vocab_size=vocab)
+    svc = StreamingNGramService(cfg, cache_capacity=4096)
+    slices = [make_corpus(700, vocab, "zipf", 30 + i) for i in range(3)]
+    for t in slices:
+        svc.ingest(t)
+    exp = stats_union(*[run_job(t, cfg) for t in slices]).to_dict()
+    gram_tuples = sorted(exp)
+    g = np.zeros((len(gram_tuples), sigma), np.int32)
+    ln = np.zeros(len(gram_tuples), np.int32)
+    for i, t in enumerate(gram_tuples):
+        g[i, :len(t)] = t
+        ln[i] = len(t)
+    got = svc.lookup(g, ln)
+    np.testing.assert_array_equal(got, [exp[t] for t in gram_tuples])
+    # a repeat is pure cache: hits grow by the batch, misses don't
+    h0, m0 = svc.cache.hits, svc.cache.misses
+    again = svc.lookup(g, ln)
+    np.testing.assert_array_equal(again, got)
+    assert svc.cache.hits == h0 + len(gram_tuples)
+    assert svc.cache.misses == m0
+    # pipelined (double-buffered) drive returns the same answers in order
+    batches = [(g[i:i + 64], ln[i:i + 64]) for i in range(0, len(gram_tuples), 64)]
+    outs = svc.lookup_pipelined(batches)
+    np.testing.assert_array_equal(np.concatenate(outs), got)
+    # ingest bumps the generation -> stale entries never served
+    svc.ingest(make_corpus(700, vocab, "zipf", 77))
+    fresh = svc.lookup(g, ln)
+    exp2 = stats_union(*[run_job(t, cfg) for t in slices +
+                         [make_corpus(700, vocab, "zipf", 77)]]).to_dict()
+    np.testing.assert_array_equal(fresh,
+                                  [exp2[t] for t in gram_tuples])
+    # top-k through the service agrees with the generational query path
+    pool = [t[:-1] for t in gram_tuples if len(t) >= 2][:10]
+    pg = np.zeros((len(pool), sigma), np.int32)
+    pl = np.zeros(len(pool), np.int32)
+    for i, t in enumerate(pool):
+        pg[i, :len(t)] = t
+        pl[i] = len(t)
+    rows = svc.continuations(pg, pl, k=4)
+    nd, tot, terms, cfs = [np.asarray(x)
+                           for x in continuations(svc.gen, pg, pl, k=4)]
+    np.testing.assert_array_equal(rows[:, 0], nd)
+    np.testing.assert_array_equal(rows[:, 2:6], terms)
+    np.testing.assert_array_equal(rows[:, 6:], cfs)
+
+
+def test_double_buffered_driver_orders_results():
+    from repro.launch.serve_ngrams import DoubleBufferedDriver
+    calls = []
+    drv = DoubleBufferedDriver(lambda x: (calls.append(x), x * 2)[1])
+    outs = []
+    for i in range(4):
+        res, tag = drv.submit(np.asarray([i]), tag=i)
+        if res is not None:
+            outs.append((int(res[0]), tag))
+    res, tag = drv.drain()
+    outs.append((int(res[0]), tag))
+    assert outs == [(0, 0), (2, 1), (4, 2), (6, 3)]
+    assert drv.drain() == (None, None)
