@@ -46,8 +46,18 @@ def bench_kernels() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--waves", action="store_true",
+                    help="only the wave-engine cells (wave count vs job "
+                         "throughput, interleaved medians -> BENCH_waves.json)")
     args = ap.parse_args()
     n = 20_000 if args.quick else 60_000
+
+    if args.waves:
+        from benchmarks import waves
+        print("name,us_per_call,derived")
+        for r in waves.run(n):
+            _csv(r["name"], r["us"], r["derived"])
+        return
 
     from benchmarks import paper_figures as pf
 

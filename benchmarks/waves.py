@@ -1,0 +1,83 @@
+"""Wave-engine benchmark: wave count vs job throughput.
+
+    PYTHONPATH=src python -m benchmarks.run --waves
+
+Measures the out-of-core tax: the same SUFFIX-sigma job over the same corpus
+at several wave sizes (1 wave == the monolithic shape), reps *interleaved*
+across all wave counts (the repo's interleaved-median protocol: host-load
+transients hit every cell equally) and reduced by medians.  Also records the
+streaming-ingest cell (waves -> GenerationalIndex).  Every run appends to
+``BENCH_waves.json`` so regressions are diffable in review.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+BENCH_JSON = "BENCH_waves.json"
+WAVE_COUNTS = (1, 2, 4, 8)
+
+
+def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
+    from repro.core import NGramConfig, run_job
+    from repro.data import corpus as corpus_mod
+    from repro.pipeline import WaveExecutor
+
+    prof = corpus_mod.NYT
+    tokens = corpus_mod.zipf_corpus(n_tokens, prof, seed=0, duplicate_frac=0.02)
+    n_tokens = len(tokens)              # zipf_corpus appends duplicated docs
+    cfg = NGramConfig(sigma=5, tau=4, vocab_size=prof.vocab_size)
+
+    cells: dict[object, callable] = {"mono": lambda: run_job(tokens, cfg)}
+    for nw in WAVE_COUNTS:
+        wave = -(-n_tokens // nw)
+        cells[nw] = (lambda w=wave: WaveExecutor(cfg, wave_tokens=w)
+                     .run(tokens))
+    lat: dict[object, list[float]] = {k: [] for k in cells}
+    for k, fn in cells.items():
+        fn()                                   # compile + cache warm
+    for _ in range(reps):                      # interleaved: one rep per cell
+        for k, fn in cells.items():
+            t0 = time.perf_counter()
+            fn()
+            lat[k].append(time.perf_counter() - t0)
+
+    rows = []
+    mono_us = float(np.median(lat["mono"]) * 1e6)
+    rows.append({"name": "waves_monolithic", "us": mono_us,
+                 "derived": f"tok_s={n_tokens / (mono_us / 1e6):.0f}"})
+    for nw in WAVE_COUNTS:
+        us = float(np.median(lat[nw]) * 1e6)
+        rows.append({
+            "name": f"waves_{nw}",
+            "us": us,
+            "derived": (f"tok_s={n_tokens / (us / 1e6):.0f};"
+                        f"vs_mono={us / mono_us:.2f}x"),
+        })
+
+    # streaming cell: waves straight into the generational index
+    cfg1 = NGramConfig(sigma=5, tau=1, vocab_size=prof.vocab_size)
+    wave = -(-n_tokens // WAVE_COUNTS[-1])
+    ex = WaveExecutor(cfg1, wave_tokens=wave)
+    ex.run_streaming(tokens[: 2 * wave])       # warm
+    t_s = []
+    for _ in range(max(reps - 1, 1)):
+        t0 = time.perf_counter()
+        gen, _ = ex.run_streaming(tokens)
+        t_s.append(time.perf_counter() - t0)
+    us = float(np.median(t_s) * 1e6)
+    rows.append({"name": f"waves_streaming_{WAVE_COUNTS[-1]}", "us": us,
+                 "derived": (f"tok_s={n_tokens / (us / 1e6):.0f};"
+                             f"segments={gen.n_segments}")})
+
+    try:
+        with open(BENCH_JSON) as f:
+            prev = json.load(f).get("runs", [])
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = []
+    prev.append({"n_tokens": n_tokens, "reps": reps, "rows": rows})
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"runs": prev}, f, indent=2)
+    return rows

@@ -35,4 +35,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 echo "examples smoke: streaming_ingest.py (60s budget)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 60 \
     python examples/streaming_ingest.py > /dev/null
+echo "examples smoke: out_of_core.py (corpus > device budget; 60s budget)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 60 \
+    python examples/out_of_core.py > /dev/null
 echo "examples smoke: OK"

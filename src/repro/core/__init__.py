@@ -14,6 +14,15 @@ METHODS = {
     "apriori_index": apriori_index.run,
 }
 
+# method name -> JobPlan builder (cfg -> JobPlan); the declarative form the
+# wave executor (repro.pipeline) interprets
+PLANS = {
+    "suffix_sigma": suffix_sigma.plan,
+    "naive": naive.plan,
+    "apriori_scan": apriori_scan.plan,
+    "apriori_index": apriori_index.plan,
+}
+
 
 def run_job(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
             **kw) -> NGramStats:
@@ -24,6 +33,6 @@ def run_job(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
     return fn(tokens, cfg, mesh=mesh, axis_name=axis_name, **kw)
 
 
-__all__ = ["NGramConfig", "NGramStats", "run_job", "METHODS", "oracle",
+__all__ = ["NGramConfig", "NGramStats", "run_job", "METHODS", "PLANS", "oracle",
            "suffix_sigma", "naive", "apriori_scan", "apriori_index",
            "extensions", "extensions_filter"]

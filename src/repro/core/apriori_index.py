@@ -25,51 +25,77 @@ import numpy as np
 
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle as shf
+from repro.pipeline import plan as plan_mod
 from .common import count_exact_grams, gram_hash, kgram_records
 from .stats import NGramConfig, NGramStats, add_counters
 
 
-def _stage(tokens, k, cfg: NGramConfig, occ_mask):
-    """One index iteration: count k-grams at positions allowed by ``occ_mask``.
+def _join_mask(cfg: NGramConfig, k: int, occ):
+    """Phase-2 posting-list join: a k-gram occurs at p iff frequent
+    (k-1)-grams occur at p and p+1; phase 1 (k <= K) has no precondition."""
+    if k <= min(cfg.apriori_index_k, cfg.sigma) or occ is None:
+        return None
+    nxt = jnp.concatenate([occ[1:], jnp.zeros((1,), bool)])
+    return occ & nxt
 
-    Returns (terms, flags, counts, totals_at_pos, n_emitted)."""
-    records, valid = kgram_records(tokens, k, cfg.sigma, cfg.vocab_size,
-                                   weight_mask=occ_mask, with_positions=True)
-    terms, flags, counts, totals_pos = count_exact_grams(
-        records, sigma=cfg.sigma, vocab_size=cfg.vocab_size, with_positions=True)
-    return terms, flags, counts, totals_pos, jnp.sum(valid)
+
+def _plan_emit(tok_ext, aux_ext, n_live, cfg: NGramConfig, carry, k):
+    """Round-k map emit: k-grams at positions allowed by the occurrence mask.
+
+    ``window_valid`` (the *unmasked* join-passing positions over the whole
+    extended window, halo included) rides along for the wave-mode carry.
+    """
+    mask = _join_mask(cfg, k, carry)
+    records, valid = kgram_records(tok_ext, k, cfg.sigma, cfg.vocab_size,
+                                   weight_mask=mask, with_positions=True)
+    pos_ok = jnp.arange(records.shape[0]) < n_live
+    live_valid = valid & pos_ok
+    # mask lanes + weight but KEEP the position meta lane: zeroed positions
+    # would collide every invalid row onto index 0 in the reducer's
+    # totals-at-pos scatter, whose duplicate-index winner is unspecified
+    records = jnp.concatenate(
+        [records[:, :-1] * live_valid[:, None].astype(records.dtype),
+         records[:, -1:]], axis=1)
+    return records, live_valid, {"window_valid": valid}
+
+
+def _update_carry(cfg: NGramConfig, tau_eff, k, tok_ext, stats_k,
+                  reduce_extras, emit_extras, carry):
+    """Occurrence mask of frequent k-grams for the next round's join.
+
+    ``tau_eff == 1`` is the wave regime: "frequent" means "occurs", which the
+    emit already knows for every window position including the halo --
+    counts-based occupancy would be blind to halo positions and prune real
+    occurrences at wave boundaries.  Otherwise the paper's rule: positions
+    whose gram's collection frequency reaches tau (the per-position run
+    totals shipped back through the sort permutation).
+    """
+    if tau_eff == 1:
+        return emit_extras["window_valid"]
+    return jnp.asarray(np.asarray(reduce_extras["totals_pos"]) >= tau_eff)
+
+
+def plan(cfg: NGramConfig) -> plan_mod.JobPlan:
+    """APRIORI-INDEX as a :class:`JobPlan`: sigma chained jobs, occurrence-mask
+    carry (the posting-list join), exact counting with position payloads."""
+    return plan_mod.JobPlan(
+        name="apriori_index",
+        map=plan_mod.MapStage(_plan_emit, n_meta=1),
+        shuffle=plan_mod.ShuffleStage("gram"),
+        sort=plan_mod.SortStage(),
+        reduce=plan_mod.ReduceStage("exact", with_positions=True),
+        rounds=cfg.sigma,
+        stop_on_empty=True,
+        update_carry=_update_carry,
+    )
 
 
 def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data") -> NGramStats:
     tokens = jnp.asarray(tokens, jnp.int32)
     if mesh is not None and mesh.size > 1:
         return _run_distributed(tokens, cfg, mesh, axis_name)
-
-    n = tokens.shape[0]
-    K = min(cfg.apriori_index_k, cfg.sigma)
-    rec_width = packing.record_bytes(cfg.sigma, cfg.vocab_size, n_meta=1)
-    counters: dict[str, float] = {"jobs": 0, "map_records": 0, "shuffle_records": 0,
-                                  "shuffle_bytes": 0, "overflow": 0}
-    out: NGramStats | None = None
-    occ = None  # occurrence mask of frequent (k-1)-grams
-    for k in range(1, cfg.sigma + 1):
-        if k <= K:
-            mask = None            # phase 1: direct indexing, no join precondition
-        else:                      # phase 2: posting-list join occ[p] & occ[p+1]
-            nxt = jnp.concatenate([occ[1:], jnp.zeros((1,), bool)])
-            mask = occ & nxt
-        terms, flags, counts, totals_pos, n_rec = _stage(tokens, k, cfg, mask)
-        add_counters(counters, jobs=1, map_records=int(n_rec),
-                     shuffle_records=int(n_rec), shuffle_bytes=int(n_rec) * rec_width)
-        st = NGramStats.from_dense(np.asarray(terms), np.asarray(flags),
-                                   np.asarray(counts), cfg.tau)
-        out = st if out is None else out.merged_with(st)
-        occ = np.asarray(totals_pos) >= cfg.tau
-        occ = jnp.asarray(occ)
-        if len(st) == 0 or k == cfg.sigma:
-            break
-    out.counters = counters
-    return out
+    from repro.pipeline.executor import run_plan
+    return run_plan(tokens, cfg, plan=plan(cfg))
 
 
 def _run_distributed(tokens, cfg: NGramConfig, mesh, axis_name) -> NGramStats:

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle as shf
+from repro.pipeline import plan as plan_mod
 from .common import count_exact_grams, gram_hash, kgram_records, member, membership_hashes
 from .stats import NGramConfig, NGramStats, add_counters
 from .suffix_sigma import suffix_windows
@@ -41,40 +42,62 @@ def _candidates(tokens: jax.Array, k: int, cfg: NGramConfig,
     return kgram_records(tokens, k, sigma, vocab, weight_mask=mask)
 
 
-def _count_stage(records, valid, cfg: NGramConfig):
-    terms, flags, counts = count_exact_grams(
-        records, sigma=cfg.sigma, vocab_size=cfg.vocab_size)
-    return terms, flags, counts
+def _plan_emit(tok_ext, aux_ext, n_live, cfg: NGramConfig, carry, k):
+    """Round-k map emit: candidate k-grams pruned by the (k-1) dictionary.
+
+    The pre-live-mask records/valid (whole window, halo included) ride along
+    in ``emit_extras`` for the wave-mode carry, which needs exactly them.
+    """
+    records, valid = _candidates(tok_ext, k, cfg, carry)
+    pos_ok = jnp.arange(records.shape[0]) < n_live
+    live_valid = valid & pos_ok
+    live_records = records * live_valid[:, None].astype(records.dtype)
+    return live_records, live_valid, {"window_records": records,
+                                      "window_valid": valid}
+
+
+def _update_carry(cfg: NGramConfig, tau_eff, k, tok_ext, stats_k,
+                  reduce_extras, emit_extras, carry):
+    """Next round's dictionary (the Hadoop distributed-cache analogue).
+
+    ``tau_eff == 1`` is the wave regime: every k-gram of the window (halo
+    included) is "frequent", and the dictionary must cover the halo or the
+    candidate test at wave-boundary positions would prune real occurrences --
+    so it is built from the emit's own window records (at tau=1 the candidate
+    mask admits every valid position, so they are exactly the window's
+    k-grams; no second emit).  Otherwise (the monolithic job) it is the
+    hashes of this round's frequent output, as in the paper.
+    """
+    if tau_eff == 1:
+        n_l = packing.n_lanes(cfg.sigma, cfg.vocab_size)
+        return membership_hashes(emit_extras["window_records"][:, :n_l],
+                                 emit_extras["window_valid"])
+    freq_lane = packing.pack_terms(jnp.asarray(stats_k.grams),
+                                   vocab_size=cfg.vocab_size)
+    return membership_hashes(freq_lane, jnp.asarray(stats_k.lengths == k))
+
+
+def plan(cfg: NGramConfig) -> plan_mod.JobPlan:
+    """APRIORI-SCAN as a :class:`JobPlan`: sigma chained jobs, candidate emit
+    pruned by the previous round's dictionary carry, whole-gram counting."""
+    return plan_mod.JobPlan(
+        name="apriori_scan",
+        map=plan_mod.MapStage(_plan_emit),
+        shuffle=plan_mod.ShuffleStage("gram"),
+        sort=plan_mod.SortStage(),
+        reduce=plan_mod.ReduceStage("exact"),
+        rounds=cfg.sigma,
+        stop_on_empty=True,
+        update_carry=_update_carry,
+    )
 
 
 def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data") -> NGramStats:
     tokens = jnp.asarray(tokens, jnp.int32)
     if mesh is not None and mesh.size > 1:
         return _run_distributed(tokens, cfg, mesh, axis_name)
-
-    n_l = packing.n_lanes(cfg.sigma, cfg.vocab_size)
-    rec_width = packing.record_bytes(cfg.sigma, cfg.vocab_size)
-    counters: dict[str, float] = {"jobs": 0, "map_records": 0, "shuffle_records": 0,
-                                  "shuffle_bytes": 0, "overflow": 0}
-    out: NGramStats | None = None
-    freq_hashes = None
-    for k in range(1, cfg.sigma + 1):
-        records, valid = _candidates(tokens, k, cfg, freq_hashes)
-        n_cand = int(jnp.sum(valid))
-        add_counters(counters, jobs=1, map_records=n_cand, shuffle_records=n_cand,
-                     shuffle_bytes=n_cand * rec_width)
-        terms, flags, counts = _count_stage(records, valid, cfg)
-        stage = NGramStats.from_dense(np.asarray(terms), np.asarray(flags),
-                                      np.asarray(counts), cfg.tau)
-        out = stage if out is None else out.merged_with(stage)
-        if len(stage) == 0:
-            break
-        # dictionary for the next job: hashes of this job's frequent k-grams
-        freq_lane = packing.pack_terms(jnp.asarray(stage.grams),
-                                       vocab_size=cfg.vocab_size)
-        freq_hashes = membership_hashes(freq_lane, jnp.asarray(stage.lengths == k))
-    out.counters = counters
-    return out
+    from repro.pipeline.executor import run_plan
+    return run_plan(tokens, cfg, plan=plan(cfg))
 
 
 def _run_distributed(tokens, cfg: NGramConfig, mesh, axis_name) -> NGramStats:

@@ -13,52 +13,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.mapreduce import pack as packing
-from repro.mapreduce import shuffle, sort
-
-
-def gram_hash(lanes: jax.Array) -> jax.Array:
-    """Order-sensitive fold hash of the packed lanes -> uint32 partition key."""
-    h = jnp.zeros(lanes.shape[:-1], jnp.uint32)
-    for i in range(lanes.shape[-1]):
-        h = shuffle.hash_u32(h ^ lanes[..., i] + jnp.uint32(0x9E3779B9))
-    return h
+from repro.mapreduce.shuffle import fold_hash as gram_hash  # noqa: F401  (one fold hash)
+from repro.pipeline import stages
 
 
 @partial(jax.jit, static_argnames=("sigma", "vocab_size", "with_positions"))
 def count_exact_grams(records: jax.Array, *, sigma: int, vocab_size: int,
                       with_positions: bool = False):
-    """Count identical grams in ``records`` = [N, n_lanes | weight | (pos)].
+    """Sort + count identical grams in ``records`` = [N, lanes | weight | (pos)].
 
-    Returns (terms [N, sigma], flags [N, sigma], counts [N, sigma]) shaped like the
-    SUFFIX-sigma reducer output so ``NGramStats.from_dense`` applies; flags mark the
-    first row of each run at the row's own gram length.  If ``with_positions``, also
-    returns per-original-position run totals [N] (scattered back through the sort
-    permutation) for the APRIORI-INDEX posting-list join.
+    The fused sort+reduce the distributed whole-gram paths call; the stage
+    bodies live in ``repro.pipeline.stages`` (shared with the wave executor).
     """
-    n, _ = records.shape
-    n_l = packing.n_lanes(sigma, vocab_size)
-    rec = sort.sort_records(records, n_keys=n_l)
-    lanes = rec[:, :n_l]
-    weight = rec[:, n_l].astype(jnp.int32)
-    terms = packing.unpack_terms(lanes, vocab_size=vocab_size, sigma=sigma)
-
-    first = jnp.any(lanes != jnp.roll(lanes, 1, axis=0), axis=1).at[0].set(True)
-    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
-    totals = jax.ops.segment_sum(weight, seg, num_segments=n)[seg]
-
-    length = jnp.sum(terms != 0, axis=1)                       # gram length per row
-    valid_row = (length > 0) & (weight >= 0)
-    pos_in_row = jnp.maximum(length - 1, 0)
-    row_flags = first & valid_row & (totals > 0)
-    flags = (jax.nn.one_hot(pos_in_row, sigma, dtype=jnp.int32)
-             * row_flags[:, None].astype(jnp.int32)).astype(bool)
-    counts = flags * totals[:, None]
-
-    if not with_positions:
-        return terms, flags, counts
-    orig_pos = rec[:, n_l + 1].astype(jnp.int32)
-    totals_at_pos = jnp.zeros((n,), jnp.int32).at[orig_pos].set(totals, mode="drop")
-    return terms, flags, counts, totals_at_pos
+    rec = stages.sort_stage(records,
+                            n_keys=packing.n_lanes(sigma, vocab_size))
+    return stages.reduce_exact(rec, sigma=sigma, vocab_size=vocab_size,
+                               with_positions=with_positions)
 
 
 def kgram_records(tokens: jax.Array, k: int, sigma: int, vocab_size: int,

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle as shf
+from repro.pipeline import plan as plan_mod
 from .common import count_exact_grams, gram_hash
 from .stats import NGramConfig, NGramStats
 from .suffix_sigma import suffix_windows
@@ -32,17 +33,26 @@ def _explode(tokens: jax.Array, sigma: int, vocab_size: int):
     return jnp.concatenate([lanes, w[:, None]], axis=1), valid.reshape(-1)
 
 
-def _single_device(tokens, cfg: NGramConfig):
-    records, valid = _explode(tokens, cfg.sigma, cfg.vocab_size)
-    map_records = int(jnp.sum(valid))
-    # bytes: each record carries its gram -- O(|s|) bytes per the paper; we charge the
-    # packed width actually shuffled.
-    rec_bytes = packing.record_bytes(cfg.sigma, cfg.vocab_size)
-    terms, flags, counts = count_exact_grams(
-        records, sigma=cfg.sigma, vocab_size=cfg.vocab_size)
-    counters = {"map_records": map_records, "shuffle_records": map_records,
-                "shuffle_bytes": map_records * rec_bytes, "jobs": 1, "overflow": 0}
-    return (np.asarray(terms), np.asarray(flags), np.asarray(counts)), counters
+def _plan_emit(tok_ext, aux_ext, n_live, cfg: NGramConfig, carry, k):
+    """Map emit: every (position, length<=sigma) n-gram of the window.  Row
+    ``i`` belongs to position ``i // sigma``; halo positions emit nothing."""
+    records, valid = _explode(tok_ext, cfg.sigma, cfg.vocab_size)
+    pos_ok = (jnp.arange(records.shape[0]) // cfg.sigma) < n_live
+    valid = valid & pos_ok
+    records = records * valid[:, None].astype(records.dtype)
+    return records, valid, {}
+
+
+def plan(cfg: NGramConfig) -> plan_mod.JobPlan:
+    """NAIVE as a :class:`JobPlan`: one job, exploded emit (the paper's
+    worst-case record volume), whole-gram hash partitioning, exact count."""
+    return plan_mod.JobPlan(
+        name="naive",
+        map=plan_mod.MapStage(_plan_emit),
+        shuffle=plan_mod.ShuffleStage("gram"),
+        sort=plan_mod.SortStage(),
+        reduce=plan_mod.ReduceStage("exact"),
+    )
 
 
 def _distributed(tokens_p, cfg: NGramConfig, mesh, axis_name, capacity):
@@ -81,8 +91,8 @@ def _distributed(tokens_p, cfg: NGramConfig, mesh, axis_name, capacity):
 def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data") -> NGramStats:
     tokens = jnp.asarray(tokens, jnp.int32)
     if mesh is None or mesh.size == 1:
-        (terms, flags, counts), counters = _single_device(tokens, cfg)
-        return NGramStats.from_dense(terms, flags, counts, cfg.tau, counters)
+        from repro.pipeline.executor import run_plan
+        return run_plan(tokens, cfg, plan=plan(cfg))
 
     n_parts = mesh.shape[axis_name]
     n = tokens.shape[0]

@@ -12,6 +12,10 @@ from typing import Any
 
 import numpy as np
 
+# Any vocab with >= 17 id bits packs one term per 32-bit lane; this is the
+# canonical "packing off" value ``NGramConfig.pack_vocab`` resolves to.
+UNPACKED_VOCAB = 1 << 30
+
 
 @dataclass(frozen=True)
 class NGramConfig:
@@ -25,7 +29,16 @@ class NGramConfig:
     # --- implementation knobs -------------------------------------------------
     capacity_factor: float = 1.25   # shuffle buffer head-room per (src, dst) pair
     combine: bool = True            # map-side pre-aggregation (Hadoop combiner)
+    combine_route: str = "sort"     # "sort" (run-merge) | "hash" (slot kernel)
     pack: bool = True               # bit-pack term lanes (SSV sequence encoding)
+    # Explicit override of the vocabulary the lane packer sees (>0 wins); 0
+    # (default) derives it per ``pack``: ``vocab_size`` when packing, else
+    # ``UNPACKED_VOCAB`` -- a vocab large enough that ``pack.terms_per_lane``
+    # is 1, i.e. one term per 32-bit sort lane (the SSV sequence-encoding
+    # ablation: more sort passes, more shuffled bytes).  Every phase reads the
+    # derived ``lane_vocab`` property, which stays consistent under
+    # ``dataclasses.replace`` (nothing is baked in at construction).
+    pack_vocab: int = 0
     split_docs: bool = True         # split documents at infrequent terms (SSV)
     apriori_index_k: int = 4        # K of APRIORI-INDEX (paper's calibrated value)
     n_buckets: int = 0              # >0: aggregate per-bucket time series (SSVI-B)
@@ -36,6 +49,22 @@ class NGramConfig:
             raise ValueError("sigma must be >= 1")
         if self.tau < 1:
             raise ValueError("tau must be >= 1")
+        if self.combine_route not in ("sort", "hash"):
+            raise ValueError(f"unknown combine_route {self.combine_route!r}")
+        if self.pack_vocab and not self.pack_vocab >= self.vocab_size:
+            # a packer vocab below vocab_size would overlap term bit fields
+            # and silently fabricate grams
+            raise ValueError(
+                f"pack_vocab {self.pack_vocab} must be 0 (derive) or >= "
+                f"vocab_size {self.vocab_size}")
+
+    @property
+    def lane_vocab(self) -> int:
+        """Effective vocabulary for lane packing (see ``pack_vocab``)."""
+        if self.pack_vocab:
+            return self.pack_vocab
+        return self.vocab_size if self.pack else max(self.vocab_size,
+                                                     UNPACKED_VOCAB)
 
 
 @dataclass

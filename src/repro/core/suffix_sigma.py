@@ -29,15 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.mapreduce import pack as packing
-from repro.mapreduce import segment, shuffle, sort
+from repro.mapreduce import shuffle
+from repro.pipeline import plan as plan_mod
+from repro.pipeline import stages
 from .stats import NGramConfig, NGramStats, add_counters
-
-
-
-def _vocab(cfg: NGramConfig) -> int:
-    """Effective vocab for lane packing: cfg.pack=False forces one term per lane
-    (the SSV sequence-encoding ablation -- more sort passes, more bytes)."""
-    return cfg.vocab_size if cfg.pack else max(cfg.vocab_size, 1 << 30)
 
 # --------------------------------------------------------------------------- map
 @partial(jax.jit, static_argnames=("sigma",))
@@ -66,85 +61,45 @@ def make_records(tokens: jax.Array, *, sigma: int, vocab_size: int,
     return jnp.concatenate(cols, axis=1), valid
 
 
-def combine_records(records: jax.Array, n_lanes: int, has_bucket: bool) -> jax.Array:
-    """Map-side combiner: merge records with identical keys, summing weights.
-
-    Keys = packed lanes (+ bucket lane if present, so series buckets stay separate).
-    Non-first rows of each run get weight 0 (they are dropped by the shuffle's
-    validity mask); shapes stay static.
-    """
-    w_col = n_lanes
-    n_keys = n_lanes + (1 if has_bucket else 0)
-    if has_bucket:  # move bucket next to lanes for sorting, weight last
-        rec = jnp.concatenate(
-            [records[:, :n_lanes], records[:, n_lanes + 1:], records[:, n_lanes:n_lanes + 1]],
-            axis=1)
-    else:
-        rec = records
-    rec = sort.sort_records(rec, n_keys=n_keys)
-    keys = rec[:, :n_keys]
-    first = jnp.any(keys != jnp.roll(keys, 1, axis=0), axis=1).at[0].set(True)
-    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
-    wsum = jax.ops.segment_sum(rec[:, -1], seg, num_segments=rec.shape[0])
-    new_w = jnp.where(first, wsum[seg], 0)
-    rec = rec.at[:, -1].set(new_w)
-    if has_bucket:  # restore layout lanes | weight | bucket
-        rec = jnp.concatenate(
-            [rec[:, :n_lanes], rec[:, -1:], rec[:, n_lanes:-1]], axis=1)
-    return rec
-
-
 # ------------------------------------------------------------------------ reduce
 @partial(jax.jit, static_argnames=("sigma", "vocab_size", "n_buckets", "use_kernels"))
 def reduce_block(records: jax.Array, *, sigma: int, vocab_size: int,
                  n_buckets: int = 0, use_kernels: bool = False):
-    """Sort + count one reducer block.
+    """Sort + count one reducer block (the fused form the distributed path
+    calls; stage bodies live in ``pipeline.stages``).
 
     records: [N, W] = lanes | weight | (bucket).  Returns
     (terms [N, sigma], flags [N, sigma], counts [N, sigma] or [N, sigma, B]).
     """
-    n_l = packing.n_lanes(sigma, vocab_size)
-    rec = sort.sort_records(records, n_keys=n_l)
-    terms = packing.unpack_terms(rec[:, :n_l], vocab_size=vocab_size, sigma=sigma)
-    weight = rec[:, n_l].astype(jnp.int32)
-    if use_kernels:
-        from repro.kernels import ops as kops
-        lcp, flags = kops.lcp_boundary(terms)
-    else:
-        lcp = segment.lcp_lengths(terms)
-        flags = segment.boundary_flags(terms, lcp)
-    valid = terms != 0
-    if n_buckets:
-        bucket = rec[:, n_l + 1].astype(jnp.int32)
-        wmat = jax.nn.one_hot(bucket, n_buckets, dtype=jnp.int32) * weight[:, None]
-        counts = segment.run_counts_matrix(flags, valid, wmat, max_segments=rec.shape[0])
-    else:
-        counts = segment.run_counts(flags, valid, weight, max_segments=rec.shape[0])
-    return terms, flags, counts
+    rec = stages.sort_stage(records, n_keys=packing.n_lanes(sigma, vocab_size))
+    return stages.reduce_suffix(rec, sigma=sigma, vocab_size=vocab_size,
+                                n_buckets=n_buckets, use_kernels=use_kernels)
 
 
-# ----------------------------------------------------------------- single device
-def _single_device(tokens: jax.Array, cfg: NGramConfig, bucket_ids):
-    records, valid = make_records(tokens, sigma=cfg.sigma, vocab_size=_vocab(cfg),
-                                  bucket_ids=bucket_ids)
-    n_l = packing.n_lanes(cfg.sigma, _vocab(cfg))
-    map_records = int(jnp.sum(valid))
-    if cfg.combine:
-        records = combine_records(records, n_l, has_bucket=bucket_ids is not None)
-    shuffled_records = int(jnp.sum(records[:, n_l] > 0))
-    terms, flags, counts = reduce_block(
-        records, sigma=cfg.sigma, vocab_size=_vocab(cfg),
-        n_buckets=cfg.n_buckets, use_kernels=cfg.use_kernels)
-    rec_bytes = packing.record_bytes(cfg.sigma, _vocab(cfg),
-                                     n_meta=1 if bucket_ids is not None else 0)
-    counters = {
-        "map_records": map_records,
-        "shuffle_records": shuffled_records,
-        "shuffle_bytes": shuffled_records * rec_bytes,
-        "jobs": 1,
-        "overflow": 0,
-    }
-    return (np.asarray(terms), np.asarray(flags), np.asarray(counts)), counters
+# --------------------------------------------------------------------- job plan
+def _plan_emit(tok_ext, aux_ext, n_live, cfg: NGramConfig, carry, k):
+    """Map emit over one (possibly halo-extended) token window."""
+    records, valid = make_records(tok_ext, sigma=cfg.sigma,
+                                  vocab_size=cfg.lane_vocab,
+                                  bucket_ids=aux_ext)
+    pos_ok = jnp.arange(records.shape[0]) < n_live
+    records = records * pos_ok[:, None].astype(records.dtype)
+    valid = valid & pos_ok
+    return records, valid, {}
+
+
+def plan(cfg: NGramConfig) -> plan_mod.JobPlan:
+    """SUFFIX-sigma as a :class:`JobPlan`: one job, suffix emit, optional
+    combiner, lead-term partitioning, LCP-run reducer."""
+    return plan_mod.JobPlan(
+        name="suffix_sigma",
+        map=plan_mod.MapStage(_plan_emit),
+        combine=plan_mod.CombineStage(cfg.combine_route) if cfg.combine else None,
+        shuffle=plan_mod.ShuffleStage("lead"),
+        sort=plan_mod.SortStage(),
+        reduce=plan_mod.ReduceStage("suffix"),
+        lane_vocab=cfg.lane_vocab,
+    )
 
 
 # ------------------------------------------------------------------- distributed
@@ -157,7 +112,7 @@ def build_distributed_job(cfg: NGramConfig, mesh, axis_name: str, capacity: int,
     the dry-run can lower/compile the job on the production mesh (configs/paper.py).
     """
     n_parts = mesh.shape[axis_name]
-    n_l = packing.n_lanes(cfg.sigma, _vocab(cfg))
+    n_l = packing.n_lanes(cfg.sigma, cfg.lane_vocab)
 
     def job(tok, bkt):
         tok = tok[0]  # [n_local]
@@ -175,22 +130,24 @@ def build_distributed_job(cfg: NGramConfig, mesh, axis_name: str, capacity: int,
         if bucket is not None and cfg.sigma > 1:
             bucket = jnp.concatenate([bucket, jnp.zeros((cfg.sigma - 1,), bucket.dtype)])
         records, valid = make_records(tok_ext, sigma=cfg.sigma,
-                                      vocab_size=_vocab(cfg), bucket_ids=bucket)
+                                      vocab_size=cfg.lane_vocab, bucket_ids=bucket)
         # halo positions belong to the neighbor: mask them out
         pos_ok = jnp.arange(records.shape[0]) < tok.shape[0]
         records = records * pos_ok[:, None].astype(records.dtype)
         valid = valid & pos_ok
         map_rec = jnp.sum(valid)
         if cfg.combine:
-            records = combine_records(records, n_l, has_bucket=has_bucket)
+            records = stages.combine(records, n_l, has_bucket,
+                                     route=cfg.combine_route,
+                                     use_kernels=cfg.use_kernels)
         w = records[:, n_l]
-        lead = packing.lead_term(records[:, 0], vocab_size=_vocab(cfg))
+        lead = packing.lead_term(records[:, 0], vocab_size=cfg.lane_vocab)
         local_rec, overflow = shuffle.shuffle(
             records, lead, w > 0, axis_name=axis_name, n_parts=n_parts,
             capacity=capacity)
         shuf_rec = jax.lax.psum(jnp.sum(local_rec[:, n_l] > 0), axis_name)
         terms, flags, counts = reduce_block(
-            local_rec, sigma=cfg.sigma, vocab_size=_vocab(cfg),
+            local_rec, sigma=cfg.sigma, vocab_size=cfg.lane_vocab,
             n_buckets=cfg.n_buckets, use_kernels=cfg.use_kernels)
         stats = jnp.stack([jax.lax.psum(map_rec, axis_name), shuf_rec, overflow])
         return terms[None], flags[None], counts[None], stats[None]
@@ -299,8 +256,8 @@ def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
     tokens = jnp.asarray(tokens, jnp.int32)
     bkt = None if bucket_ids is None else jnp.asarray(bucket_ids, jnp.uint32)
     if mesh is None or mesh.size == 1:
-        (terms, flags, counts), counters = _single_device(tokens, cfg, bkt)
-        return NGramStats.from_dense(terms, flags, counts, cfg.tau, counters)
+        from repro.pipeline.executor import run_plan
+        return run_plan(tokens, cfg, bucket_ids=bkt, plan=plan(cfg))
 
     n_parts = mesh.shape[axis_name]
     n = tokens.shape[0]
@@ -322,7 +279,7 @@ def run(tokens, cfg: NGramConfig, mesh=None, axis_name: str = "data",
     else:
         raise RuntimeError(f"shuffle overflow persisted at capacity {capacity}")
 
-    rec_bytes = packing.record_bytes(cfg.sigma, _vocab(cfg),
+    rec_bytes = packing.record_bytes(cfg.sigma, cfg.lane_vocab,
                                      n_meta=1 if bkt is not None else 0)
     counters = {
         "map_records": int(stats_np[0, 0]),

@@ -11,8 +11,11 @@ classic log-structured-merge discipline instead:
     jitted: pairwise merge-path (``kernels/merge_path.py`` Pallas kernel, or its
     jnp ref), or a one-shot re-sort fallback reusing ``mapreduce.sort``; run
     boundaries come from ``mapreduce.segment``'s lcp primitive either way.  The
-    count fold runs in int64 and refuses loudly if a merged cf overflows the
-    uint32 device lanes (mirroring the continuation-mass guard in ``build.py``).
+    dedup-summed count fold also runs on device, through the reducer's
+    segmented-sum path in two uint32 limbs (exact below ``_MAX_DEVICE_RUN``
+    duplicates per gram; longer runs replay on the host in int64), and refuses
+    loudly if a merged cf overflows the uint32 device lanes (mirroring the
+    continuation-mass guard in ``build.py``).
   * :func:`merge_indexes` -- segments in, finished artifact out:
     ``index_from_segment`` rebuilds fanout/continuation/cumsum structures from
     the merged rows *without re-running the job*, and re-compresses when the
@@ -30,8 +33,9 @@ classic log-structured-merge discipline instead:
 from __future__ import annotations
 
 import dataclasses
-from functools import reduce
+from functools import partial, reduce
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,7 +54,7 @@ AnyIndex = "NGramIndex | CompressedNGramIndex"
 
 
 def _merged_run(segs: list[IndexSegment], *, route: str,
-                use_kernels: bool) -> tuple[np.ndarray, np.ndarray]:
+                use_kernels: bool) -> tuple[jax.Array, jax.Array]:
     """One sorted run (duplicates kept, sentinels at the tail) over all rows."""
     if route == "sort":
         # fallback: re-sort the concatenation (mapreduce.sort, the job's own
@@ -70,7 +74,72 @@ def _merged_run(segs: list[IndexSegment], *, route: str,
             segs[1:], (segs[0].keys, segs[0].counts))
     else:
         raise ValueError(f"unknown merge route {route!r}")
-    return np.asarray(keys, np.uint32), np.asarray(counts, np.uint32)
+    return jnp.asarray(keys, jnp.uint32), jnp.asarray(counts, jnp.uint32)
+
+
+# Two-limb uint32 segment sums stay exact while every run is shorter than
+# this; a merge of k segments with distinct rows each has runs of length <= k,
+# so the device fold covers everything but adversarial duplicate floods.
+_MAX_DEVICE_RUN = 1 << 16
+
+
+@partial(jax.jit, static_argnames=("sigma",))
+def _fold_runs_device(keys: jax.Array, counts: jax.Array, *, sigma: int):
+    """Dedup-fold a sorted run on device: the reducer's segmented-sum path.
+
+    Device count lanes are uint32 and x64 may be off, so the fold runs in two
+    uint32 limbs (lo/hi 16 bits of each count, segment-summed separately and
+    recombined) -- exact while runs stay under ``_MAX_DEVICE_RUN`` rows, with
+    the recombine carry doubling as the loud cf-overflow guard.  Run starts
+    are compacted to the front with a stable argsort (order preserved), the
+    tail refilled with sentinels.  Returns
+    (keys [N, C], totals [N], n_runs, overflow?, max_run_len).
+    """
+    n, n_cols = keys.shape
+    lcp = mr_segment.lcp_lengths(keys.astype(jnp.int32))
+    new_run = lcp < n_cols                     # row 0 has lcp 0 -> always True
+    seg = jnp.maximum(jnp.cumsum(new_run.astype(jnp.int32)) - 1, 0)
+    run_len = jax.ops.segment_sum(jnp.ones((n,), jnp.uint32), seg,
+                                  num_segments=n)
+    slo = jax.ops.segment_sum(counts & jnp.uint32(0xFFFF), seg, num_segments=n)
+    shi = jax.ops.segment_sum(counts >> 16, seg, num_segments=n)
+    hi = shi + (slo >> 16)                     # carry; > 0xFFFF == cf overflow
+    totals = (hi << 16) | (slo & jnp.uint32(0xFFFF))
+    real = new_run & (keys[:, 0] <= jnp.uint32(sigma))  # sentinels sort last
+    order = jnp.argsort(~real, stable=True)    # real run starts first, in order
+    n_runs = jnp.sum(real.astype(jnp.int32))
+    in_range = jnp.arange(n) < n_runs
+    out_keys = jnp.where(in_range[:, None], keys[order], SENTINEL)
+    out_counts = jnp.where(in_range, totals[seg][order], 0)
+    overflow = jnp.any(in_range & ((hi[seg][order] >> 16) != 0))
+    return out_keys, out_counts, n_runs, overflow, jnp.max(run_len)
+
+
+def _fold_runs_host(keys: np.ndarray, counts: np.ndarray, *,
+                    sigma: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host int64 fold -- fallback for runs too long for the two-limb device
+    path, and the bearer of the detailed overflow diagnostic."""
+    lcp = np.asarray(mr_segment.lcp_lengths(
+        jnp.asarray(keys).astype(jnp.int32)))
+    new_run = lcp < keys.shape[1]
+    starts = np.flatnonzero(new_run)
+    cs = np.concatenate([[0], np.cumsum(counts, dtype=np.int64)])
+    ends = np.append(starts[1:], keys.shape[0])
+    totals = cs[ends] - cs[starts]                      # int64: exact fold
+    run_keys = keys[starts]
+    real = run_keys[:, 0] <= np.uint32(sigma)           # sentinel length sorts last
+    r_keys = run_keys[real]
+    r_tot = totals[real]
+    # mirror of build.py's continuation-mass guard: a silently wrapped cf would
+    # serve plausible-looking garbage, so refuse loudly instead (raise tau, or
+    # shard the corpus so per-shard counts stay in range)
+    if r_tot.size and int(r_tot.max()) > _U32_MAX:
+        bad = int(np.argmax(r_tot))
+        raise ValueError(
+            f"merged count {int(r_tot[bad])} of gram row {bad} overflows the "
+            "uint32 device count lane; raise tau or shard the corpus before "
+            "merging")
+    return r_keys, r_tot.astype(np.uint32)
 
 
 def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
@@ -93,36 +162,28 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
                 f"({sigma}, {vocab})")
     keys, counts = _merged_run(segs, route=route, use_kernels=use_kernels)
 
-    # run boundaries: a row starts a run iff it differs from its predecessor --
-    # mapreduce.segment's lcp primitive (lcp == n_cols <=> identical rows);
-    # uint32 -> int32 is a bit reinterpret, and lcp only compares equality
-    lcp = np.asarray(mr_segment.lcp_lengths(
-        jnp.asarray(keys).astype(jnp.int32)))
-    new_run = lcp < keys.shape[1]
-    starts = np.flatnonzero(new_run)
-    cs = np.concatenate([[0], np.cumsum(counts, dtype=np.int64)])
-    ends = np.append(starts[1:], keys.shape[0])
-    totals = cs[ends] - cs[starts]                      # int64: exact fold
-    run_keys = keys[starts]
-    real = run_keys[:, 0] <= np.uint32(sigma)           # sentinel length sorts last
-    r_keys = run_keys[real]
-    r_tot = totals[real]
-    # mirror of build.py's continuation-mass guard: a silently wrapped cf would
-    # serve plausible-looking garbage, so refuse loudly instead (raise tau, or
-    # shard the corpus so per-shard counts stay in range)
-    if r_tot.size and int(r_tot.max()) > _U32_MAX:
-        bad = int(np.argmax(r_tot))
-        raise ValueError(
-            f"merged count {int(r_tot[bad])} of gram row {bad} overflows the "
-            "uint32 device count lane; raise tau or shard the corpus before "
-            "merging")
+    # run boundaries (a row starts a run iff it differs from its predecessor,
+    # via mapreduce.segment's lcp primitive) and the dedup-summed totals all
+    # fold on device through the reducer's segmented-sum path; the host only
+    # learns (n_runs, overflow?, max_run) to size and validate the result
+    out_keys, out_counts, n_runs, overflow, max_run = _fold_runs_device(
+        keys, counts, sigma=sigma)
+    n_runs, overflow, max_run = int(n_runs), bool(overflow), int(max_run)
+    if overflow or max_run >= _MAX_DEVICE_RUN:
+        # rare: replay on host for the int64 fold / detailed diagnostic
+        r_keys, r_tot = _fold_runs_host(np.asarray(keys, np.uint32),
+                                        np.asarray(counts, np.uint32),
+                                        sigma=sigma)
+    else:
+        r_keys = np.asarray(out_keys[:n_runs], np.uint32)
+        r_tot = np.asarray(out_counts[:n_runs], np.uint32)
     r = int(r_keys.shape[0])
     size = pad_to if pad_to is not None else round_capacity(r)
     if size < r + 1:
         raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
     return IndexSegment(
         keys=jnp.asarray(pad_rows(r_keys, size, SENTINEL)),
-        counts=jnp.asarray(pad_rows(r_tot.astype(np.uint32), size, 0)),
+        counts=jnp.asarray(pad_rows(r_tot, size, 0)),
         sigma=sigma, vocab_size=vocab)
 
 

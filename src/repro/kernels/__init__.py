@@ -4,6 +4,7 @@ on CPU; see each module's docstring for the VMEM tiling rationale):
   lcp_boundary   -- reducer inner loop (LCP + per-length boundary flags)
   suffix_pack    -- map emit (windowed gather + bit pack, fused)
   hash_partition -- shuffle partitioner (hash + histogram, fused)
+  hash_combine   -- sort-free map-side combiner (block-local hash slots)
   bsearch        -- index serving inner loop (batched lexicographic bounds)
   block_decode   -- compressed-index in-block decode + rank
   merge_path     -- stable two-way merge of sorted segments (LSM compaction)
@@ -11,10 +12,11 @@ on CPU; see each module's docstring for the VMEM tiling rationale):
 from . import ops, ref
 from .block_decode import block_decode
 from .bsearch import bsearch
+from .hash_combine import hash_combine
 from .hash_partition import hash_partition
 from .lcp_boundary import lcp_boundary
 from .merge_path import merge_path
 from .suffix_pack import suffix_pack
 
 __all__ = ["ops", "ref", "lcp_boundary", "suffix_pack", "hash_partition",
-           "bsearch", "block_decode", "merge_path"]
+           "hash_combine", "bsearch", "block_decode", "merge_path"]

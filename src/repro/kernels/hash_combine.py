@@ -1,0 +1,102 @@
+"""Sort-free map-side combiner: block-local hash-slot duplicate collapse.
+
+The paper's combiner (and ``stages.combine_sort``) pre-aggregates map output
+by *sorting* it -- ``n_lanes`` full passes over the record buffer before the
+shuffle even starts.  Lemire & Kaser's one-pass hashing observation is that a
+combiner doesn't need an order, only coincidence: hash each record into a
+slot table and fold weights when the keys collide *equal*.  A Hadoop combiner
+is best-effort by contract (the reducer re-aggregates exactly), so a lossy
+slot table is sound: rows that lose their slot to a different key simply keep
+their weight and ride the shuffle uncombined.
+
+Kernel shape: one grid block of ``block`` records owns a ``2 * block``-slot
+table in VMEM.  Everything is branch-free VPU work over dense [B, S] / [B, B]
+one-hot planes (TPU has no fast scatter; coincidence detection as masked
+min-reductions is the native formulation):
+
+  slot      = fold_hash(keys) mod S           (the shuffle's own record hash)
+  winner[s] = min row index hashing to s      ([B, S] masked min)
+  rep[i]    = winner[slot[i]]                 ([B, S] masked min -- a gather)
+  match[i]  = keys[i] == keys[rep[i]]         (K passes over a [B, B] one-hot)
+  out[i]    = rep==i ? sum of matching weights : match ? 0 : w[i]
+
+Weight is conserved per key by construction; row order never changes, so the
+caller's record layout (weight lane in place) survives.  Combining is local
+to a block -- cross-block duplicates survive to the reducer, which is exactly
+the contract the sort combiner's buffer boundary has too.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(n_keys: int, block: int, n_slots: int):
+    def kernel(keys_ref, w_ref, out_ref):
+        keys = keys_ref[...].astype(jnp.uint32)        # [B, K]
+        w = w_ref[...].astype(jnp.uint32)              # [B]
+        # mapreduce.shuffle.fold_hash, inlined with kernel-local constants
+        # (module-level jnp scalars would be captured consts -- rejected)
+        h = jnp.zeros((block,), jnp.uint32)
+        for k in range(n_keys):
+            h = h ^ keys[:, k] + jnp.uint32(0x9E3779B9)
+            h = h * jnp.uint32(2654435761)
+            h = h ^ (h >> 15)
+            h = h * jnp.uint32(2246822519)
+            h = h ^ (h >> 13)
+        slot = (h % jnp.uint32(n_slots)).astype(jnp.int32)
+        # iota, not arange (arange would become a captured constant -- rejected)
+        ids = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+        slot_ids = jax.lax.broadcasted_iota(jnp.int32, (block, n_slots), 1)
+        hit = slot[:, None] == slot_ids                # [B, S]
+        # min row index per slot; empty slots hold B (harmless: nothing reads them)
+        winner = jnp.min(jnp.where(hit, ids[:, None], block), axis=0)   # [S]
+        # rep[i] = winner[slot[i]] as a masked min (gather-free)
+        rep = jnp.min(jnp.where(hit, winner[None, :], block), axis=1)   # [B]
+        # match[i] = keys[i] == keys[rep[i]]; K masked [B, B] passes keep VMEM
+        # at O(B^2), independent of the lane count
+        eq_rep = rep[:, None] == ids[None, :]          # [B, B] one-hot rows
+        match = jnp.ones((block,), jnp.bool_)
+        for k in range(n_keys):
+            rep_k = jnp.sum(jnp.where(eq_rep, keys[None, :, k],
+                                      jnp.uint32(0)), axis=1)
+            match = match & (rep_k == keys[:, k])
+        contrib = jnp.where(match, w, jnp.uint32(0))
+        totals = jnp.sum(jnp.where(eq_rep, contrib[:, None],
+                                   jnp.uint32(0)), axis=0)              # [B]
+        out_ref[...] = jnp.where(rep == ids, totals,
+                                 jnp.where(match, jnp.uint32(0), w))
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def hash_combine(keys: jax.Array, weights: jax.Array, *, block: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """Redistributed weights [N] uint32: per ``block`` of rows, rows whose key
+    equals their hash-slot winner's key donate their weight to the winner;
+    slot losers keep theirs.  Row order is unchanged; per-key weight totals
+    are exactly preserved."""
+    n, n_keys = keys.shape
+    nb = max(1, -(-n // block))
+    n_pad = nb * block
+    # pad rows sit at the block tail with zero weight: min-index winners mean
+    # they can never absorb a real row's weight
+    k = jnp.pad(keys.astype(jnp.uint32), ((0, n_pad - n), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.uint32), (0, n_pad - n))
+
+    out = pl.pallas_call(
+        _make_kernel(n_keys, block, 2 * block),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, n_keys), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+        interpret=interpret,
+    )(k, w)
+    return out[:n]

@@ -9,6 +9,7 @@ import jax
 
 from .block_decode import block_decode as _block_decode
 from .bsearch import bsearch as _bsearch
+from .hash_combine import hash_combine as _hash_combine
 from .hash_partition import hash_partition as _hash_partition
 from .lcp_boundary import lcp_boundary as _lcp_boundary
 from .merge_path import merge_path as _merge_path
@@ -35,6 +36,10 @@ def suffix_pack(tokens, *, sigma: int, vocab_size: int, block: int = 1024):
 def hash_partition(keys, valid, *, n_parts: int, block: int = 4096):
     return _hash_partition(keys, valid, n_parts=n_parts, block=block,
                            interpret=INTERPRET)
+
+
+def hash_combine(keys, weights, *, block: int = 256):
+    return _hash_combine(keys, weights, block=block, interpret=INTERPRET)
 
 
 def merge_path(a_keys, b_keys, a_vals, b_vals, *, block: int = 1024):

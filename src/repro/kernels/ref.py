@@ -184,6 +184,40 @@ def merge_path_ref(a_keys: jax.Array, b_keys: jax.Array, a_vals: jax.Array,
     return keys, vals
 
 
+def hash_combine_ref(keys: jax.Array, weights: jax.Array, *,
+                     block: int = 256) -> jax.Array:
+    """Redistributed weights [N] of the block-local hash-slot combiner.
+
+    Semantics match ``repro.kernels.hash_combine.hash_combine`` (its allclose
+    target and the ``use_kernels=False`` combine route).  Deliberately the
+    scatter/gather derivation -- ``.at[].min`` slot winners, row gathers,
+    ``segment_sum`` folds -- where the kernel uses dense one-hot planes, so
+    the differential test cross-checks two formulations of the same table.
+    """
+    from repro.mapreduce.shuffle import fold_hash
+
+    n, n_keys = keys.shape
+    nb = max(1, -(-n // block))
+    n_pad = nb * block
+    k = jnp.pad(keys.astype(jnp.uint32), ((0, n_pad - n), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.uint32), (0, n_pad - n))
+    n_slots = 2 * block
+    ids = jnp.arange(block, dtype=jnp.int32)
+
+    def one(kb, wb):
+        slot = (fold_hash(kb) % jnp.uint32(n_slots)).astype(jnp.int32)
+        winner = jnp.full((n_slots,), block, jnp.int32).at[slot].min(ids)
+        rep = winner[slot]
+        match = jnp.all(kb[rep] == kb, axis=1)
+        contrib = jnp.where(match, wb, jnp.uint32(0))
+        totals = jax.ops.segment_sum(contrib, rep, num_segments=block)
+        return jnp.where(rep == ids, totals,
+                         jnp.where(match, jnp.uint32(0), wb))
+
+    out = jax.vmap(one)(k.reshape(nb, block, n_keys), w.reshape(nb, block))
+    return out.reshape(-1)[:n]
+
+
 def hash_partition_ref(keys: jax.Array, valid: jax.Array,
                        n_parts: int) -> tuple[jax.Array, jax.Array]:
     """(partition ids [N] with n_parts for invalid, histogram [n_parts])."""

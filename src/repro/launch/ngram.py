@@ -30,6 +30,10 @@ def main() -> None:
     ap.add_argument("--series", action="store_true",
                     help="aggregate per-year n-gram time series (SSVI-B)")
     ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--wave-tokens", type=int, default=None,
+                    help="out-of-core: run the job in fixed-size token waves "
+                         "(repro.pipeline.WaveExecutor); output is "
+                         "bit-identical to the monolithic run")
     args = ap.parse_args()
 
     prof = corpus_mod.PROFILES[args.profile]
@@ -48,8 +52,15 @@ def main() -> None:
     cfg = NGramConfig(sigma=args.sigma, tau=args.tau, vocab_size=prof.vocab_size,
                       method=args.method, n_buckets=21 if args.series else 0)
     t0 = time.time()
-    kw = {"bucket_ids": years} if args.series else {}
-    stats = run_job(tokens, cfg, **kw)
+    if args.wave_tokens is not None:
+        from repro.pipeline import WaveExecutor
+        if args.series:
+            raise SystemExit("--wave-tokens does not support --series "
+                             "(bucketed counts need a single-wave job)")
+        stats = WaveExecutor(cfg, wave_tokens=args.wave_tokens).run(tokens)
+    else:
+        kw = {"bucket_ids": years} if args.series else {}
+        stats = run_job(tokens, cfg, **kw)
     dt = time.time() - t0
     if args.filter:
         stats = extensions_filter(stats, args.filter)

@@ -165,25 +165,40 @@ class StreamingNGramService:
 
     def __init__(self, cfg, *, compress: bool = False,
                  use_kernels: bool = False, cache_capacity: int = 65536,
-                 size_ratio: int = 4, route: str = "merge"):
+                 size_ratio: int = 4, route: str = "merge",
+                 wave_tokens: int | None = None):
         from repro.index import GenerationalIndex
         self.cfg = cfg
         self.use_kernels = use_kernels
+        self.wave_tokens = wave_tokens
         self.gen = GenerationalIndex(
             sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
             size_ratio=size_ratio, route=route, use_kernels=use_kernels)
         self.cache = LRUQueryCache(cache_capacity)
 
     def ingest(self, tokens) -> dict:
-        """Run the job phases over a token delta and swap the new L0 in."""
-        from repro.core import run_job
+        """Run the job phases over a token delta and swap the new L0 in.
+
+        With ``wave_tokens`` set, the delta streams through the wave engine
+        (``repro.pipeline.WaveExecutor``) instead of one monolithic job: the
+        device only ever holds one wave of job state, so a delta (or an
+        initial corpus) larger than device memory ingests end to end.  The
+        resulting stats are bit-identical either way.
+        """
         t0 = time.perf_counter()
-        stats = run_job(tokens, self.cfg)
+        if self.wave_tokens is not None:
+            from repro.pipeline import WaveExecutor
+            stats = WaveExecutor(self.cfg,
+                                 wave_tokens=self.wave_tokens).run(tokens)
+        else:
+            from repro.core import run_job
+            stats = run_job(tokens, self.cfg)
         t_job = time.perf_counter() - t0
         t0 = time.perf_counter()
         report = self.gen.ingest(stats)
         report.update(job_s=t_job, ingest_s=time.perf_counter() - t0,
-                      segments=self.gen.n_segments)
+                      segments=self.gen.n_segments,
+                      waves=stats.counters.get("waves", 1))
         return report
 
     def _submit_lookup(self, grams, lengths) -> dict:
@@ -322,7 +337,8 @@ def run_streaming(args) -> None:
                       vocab_size=prof.vocab_size)
     svc = StreamingNGramService(cfg, compress=args.compress,
                                 use_kernels=args.use_kernels,
-                                cache_capacity=args.cache_capacity)
+                                cache_capacity=args.cache_capacity,
+                                wave_tokens=args.wave_tokens)
     nb = max(args.ingest_batches, 1)
     base, rest = np.split(tokens, [int(len(tokens) * 0.6)])
     deltas = np.array_split(rest, nb)
@@ -360,8 +376,8 @@ def run_streaming(args) -> None:
             lat.append(time.perf_counter() - t1)
         n_pipe = sum(b[0].shape[0] for b in pipe_b)
         print(f"ingest[{step}]: {len(delta):>7} tokens in {t_ing:.2f}s "
-              f"({len(delta) / t_ing:,.0f} tok/s; merges={rep['merges']} "
-              f"segments={rep['segments']}) | pipelined "
+              f"({len(delta) / t_ing:,.0f} tok/s; waves={rep['waves']} "
+              f"merges={rep['merges']} segments={rep['segments']}) | pipelined "
               f"{n_pipe / t_pipe:>8,.0f} qps | sync {_percentiles(lat)} "
               f"cache_hit={svc.cache.hit_rate:.0%}")
     print(f"final: {svc.gen!r}, {svc.gen.nbytes / 2**20:.1f} MiB, "
@@ -390,6 +406,11 @@ def main() -> None:
                          "batches (LSM merges, no rebuilds) with cached, "
                          "double-buffered query serving between swaps")
     ap.add_argument("--ingest-batches", type=int, default=4)
+    ap.add_argument("--wave-tokens", type=int, default=None,
+                    help="stream each ingest through the out-of-core wave "
+                         "engine (repro.pipeline) in waves of this many "
+                         "tokens; bounds device memory by O(waves * sigma) "
+                         "independent of corpus size")
     ap.add_argument("--stream-batch", type=int, default=256,
                     help="query micro-batch size of the streaming loop")
     ap.add_argument("--cache-capacity", type=int, default=65536)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 KNUTH = jnp.uint32(2654435761)
+GOLDEN = jnp.uint32(0x9E3779B9)
 
 
 def hash_u32(x: jax.Array) -> jax.Array:
@@ -29,6 +30,34 @@ def hash_u32(x: jax.Array) -> jax.Array:
     h = h ^ (h >> 15)
     h = h * jnp.uint32(2246822519)
     return h ^ (h >> 13)
+
+
+def fold_hash(lanes: jax.Array) -> jax.Array:
+    """Order-sensitive fold hash of packed key lanes [..., L] -> uint32.
+
+    The one whole-record hash of the system: the NAIVE/APRIORI partition key,
+    the APRIORI membership-dictionary key, and the map-side hash combiner's
+    slot key all come from here, so two phases never disagree on which rows
+    are "the same gram"."""
+    h = jnp.zeros(lanes.shape[:-1], jnp.uint32)
+    for i in range(lanes.shape[-1]):
+        h = hash_u32(h ^ lanes[..., i] + GOLDEN)
+    return h
+
+
+def record_key(lanes: jax.Array, *, kind: str, vocab_size: int) -> jax.Array:
+    """Partition key of packed gram lanes [..., L] -- the one shuffle-key API.
+
+    ``kind="gram"`` hashes the whole record (any reducer may count any gram --
+    NAIVE/APRIORI); ``kind="lead"`` routes by the first term only (all evidence
+    of an n-gram shares a reducer -- SUFFIX-sigma, and the serving layer's
+    shard router)."""
+    if kind == "gram":
+        return fold_hash(lanes)
+    if kind == "lead":
+        from repro.mapreduce import pack as packing
+        return packing.lead_term(lanes[..., 0], vocab_size=vocab_size)
+    raise ValueError(f"unknown partition key kind {kind!r}")
 
 
 def partition_ids(keys: jax.Array, valid: jax.Array, n_parts: int) -> jax.Array:

@@ -1,0 +1,17 @@
+"""Unified wave-based job engine.
+
+``plan`` types a method as map/combine/shuffle/sort/reduce stage
+descriptions; ``stages`` holds the one shared implementation of each stage;
+``executor`` interprets a plan -- whole-corpus (the single-device jobs of
+``repro.core`` delegate here) or over fixed-size token waves that stream
+out-of-core corpora through the device and into the generational index.
+"""
+from . import plan, stages
+from .executor import WaveExecutor, run_plan
+from .plan import (CombineStage, JobPlan, MapStage, ReduceStage, ShuffleStage,
+                   SortStage, plan_for)
+from .stages import canonical_stats
+
+__all__ = ["plan", "stages", "WaveExecutor", "run_plan", "JobPlan",
+           "MapStage", "CombineStage", "ShuffleStage", "SortStage",
+           "ReduceStage", "plan_for", "canonical_stats"]

@@ -1,0 +1,266 @@
+"""Wave-based job execution: out-of-core n-gram jobs over a shared pipeline.
+
+The monolithic single-device jobs in ``repro.core`` hold the whole token
+array (and every intermediate record buffer) on the device at once, so corpus
+size is capped by HBM.  Hadoop never has that cap: it streams splits through
+map -> combine -> shuffle -> sort -> reduce.  :class:`WaveExecutor` restores
+the streaming shape on a single device:
+
+  * the corpus stays host-resident; fixed-size token *waves* (plus a
+    ``sigma - 1`` token halo from the next wave, exactly the ppermute halo of
+    the distributed jobs) move to the device one at a time, so the device
+    working set is O(wave * sigma), independent of corpus size;
+  * each wave runs the method's :class:`~repro.pipeline.plan.JobPlan` through
+    one jitted stage pipeline (combine -> sort -> reduce, record buffers
+    donated), compiled once and reused by every wave;
+  * per-wave partials are produced at ``tau = 1`` -- a gram below tau in every
+    wave can still be frequent globally, so nothing may be dropped early --
+    and folded through the *segment merge* path (``index/merge.py``): the
+    accumulator is a sorted :class:`~repro.index.build.IndexSegment`, never a
+    host dict, so the final output is bit-identical to the monolithic job
+    (canonical order; the global tau filter runs once at the end).
+
+``run_streaming`` closes the loop with serving: each wave's partial goes
+straight into :class:`~repro.index.merge.GenerationalIndex` ingest, so a
+corpus that never fits on the device streams end to end into a queryable,
+compacting index.
+
+``run_plan`` is the one-wave degenerate case the ``repro.core`` methods now
+delegate their single-device path to: whole corpus, legacy tau-per-round
+semantics (APRIORI pruning at full strength), same counters as the old
+monolithic code -- just one shared implementation of the stage plumbing.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce import shuffle as mr_shuffle
+from repro.pipeline import stages
+from repro.pipeline.plan import JobPlan, plan_for
+
+_SKEW_BUCKETS = 64   # nominal reducer count for the shuffle-skew counter
+
+_STAGE_CORE = None   # jitted lazily: donation depends on the backend, and
+                     # resolving the backend at import time would freeze it
+                     # before callers can set XLA_FLAGS / platform config
+
+
+def _stage_core(records, **kw):
+    global _STAGE_CORE
+    if _STAGE_CORE is None:
+        # buffer donation is a no-op (with a warning) on CPU; donate only
+        # where it helps
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        _STAGE_CORE = partial(
+            jax.jit, donate_argnums=donate,
+            static_argnames=("n_lanes", "has_bucket", "combine_route",
+                             "use_kernels", "sigma", "lane_vocab",
+                             "shuffle_key", "reduce_kind", "with_positions",
+                             "n_buckets"))(_stage_core_impl)
+    return _STAGE_CORE(records, **kw)
+
+
+def _stage_core_impl(records, *, n_lanes: int, has_bucket: bool,
+                     combine_route: str | None, use_kernels: bool, sigma: int,
+                     lane_vocab: int, shuffle_key: str, reduce_kind: str,
+                     with_positions: bool, n_buckets: int):
+    """combine -> shuffle-key -> sort -> reduce over one wave's records.
+
+    The single jitted program every wave reuses; ``records`` is donated, so
+    the map buffer's memory is recycled for the sort.  Returns (dense reducer
+    outputs, post-combine live-record count, partition histogram over
+    ``_SKEW_BUCKETS`` nominal reducers -- the realized shuffle skew).
+    """
+    if combine_route is not None:
+        records = stages.combine(records, n_lanes, has_bucket,
+                                 route=combine_route, use_kernels=use_kernels)
+    live = records[:, n_lanes] > 0
+    shuffled = jnp.sum(live)
+    key = stages.partition_keys(records, n_lanes, kind=shuffle_key,
+                                vocab_size=lane_vocab)
+    # the real partitioner's bucketing (hash_u32 % P, invalid -> P), so the
+    # skew counter measures realized reducer load, not raw-key spread
+    bucket = mr_shuffle.partition_ids(key, live, _SKEW_BUCKETS)
+    hist = jnp.bincount(bucket, length=_SKEW_BUCKETS + 1)[:_SKEW_BUCKETS]
+    rec = stages.sort_stage(records, n_keys=n_lanes)
+    if reduce_kind == "suffix":
+        dense = stages.reduce_suffix(rec, sigma=sigma, vocab_size=lane_vocab,
+                                     n_buckets=n_buckets,
+                                     use_kernels=use_kernels)
+    else:
+        dense = stages.reduce_exact(rec, sigma=sigma, vocab_size=lane_vocab,
+                                    with_positions=with_positions)
+    return dense, shuffled, hist
+
+
+def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
+                tau_eff: int, counters: dict):
+    """All of a plan's rounds over one token window -> merged ``NGramStats``."""
+    from repro.core.stats import NGramStats, add_counters
+
+    lane_vocab = plan.effective_lane_vocab(cfg)
+    n_l = packing.n_lanes(cfg.sigma, lane_vocab)
+    has_bucket = aux_ext is not None
+    n_meta = plan.map.n_meta + (1 if has_bucket else 0)
+    rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab, n_meta=n_meta)
+    combine_route = plan.combine.route if plan.combine is not None else None
+
+    out = None
+    carry = None
+    for k in range(1, plan.rounds + 1):
+        records, valid, emit_extras = plan.map.emit(
+            tok_ext, aux_ext, n_live, cfg, carry, k)
+        map_rec = int(jnp.sum(valid))
+        dense, shuffled, hist = _stage_core(
+            records, n_lanes=n_l, has_bucket=has_bucket,
+            combine_route=combine_route, use_kernels=cfg.use_kernels,
+            sigma=cfg.sigma, lane_vocab=lane_vocab,
+            shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
+            with_positions=plan.reduce.with_positions,
+            n_buckets=cfg.n_buckets)
+        terms, flags, counts = (np.asarray(x) for x in dense[:3])
+        stats_k = NGramStats.from_dense(terms, flags, counts, tau_eff)
+        reduce_extras = ({"totals_pos": dense[3]}
+                         if plan.reduce.with_positions else {})
+        shuffled = int(shuffled)
+        hist = np.asarray(hist)
+        add_counters(counters, jobs=1, map_records=map_rec,
+                     shuffle_records=shuffled,
+                     shuffle_bytes=shuffled * rec_bytes)
+        if shuffled:
+            skew = float(hist.max() * _SKEW_BUCKETS / max(hist.sum(), 1))
+            counters["shuffle_skew"] = max(counters.get("shuffle_skew", 0.0),
+                                           skew)
+        out = stats_k if out is None else out.merged_with(stats_k)
+        if plan.stop_on_empty and len(stats_k) == 0:
+            break
+        if k < plan.rounds and plan.update_carry is not None:
+            carry = plan.update_carry(cfg, tau_eff, k, tok_ext, stats_k,
+                                      reduce_extras, emit_extras, carry)
+    out.counters = counters
+    return out
+
+
+def run_plan(tokens, cfg, bucket_ids=None, plan: JobPlan | None = None):
+    """One-wave (whole-corpus) plan execution -- the single-device job.
+
+    Semantics and counters match the old per-method monolithic code (tau and
+    APRIORI pruning apply per round); output rows are in canonical segment
+    order (``stages.canonical_stats``), which is what the wave executor is
+    bit-compared against.
+    """
+    plan = plan or plan_for(cfg)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    aux = None if bucket_ids is None else jnp.asarray(bucket_ids, jnp.uint32)
+    counters = {"overflow": 0}
+    out = _run_rounds(tokens, aux, int(tokens.shape[0]), cfg, plan,
+                      cfg.tau, counters)
+    return stages.canonical_stats(out)
+
+
+class WaveExecutor:
+    """Run a :class:`JobPlan` over fixed-size token waves (out-of-core).
+
+    ``wave_tokens`` bounds the device-resident working set; ``None`` (or a
+    wave at least the corpus size) degenerates to one wave.  Waves execute at
+    ``tau = 1`` and fold into one sorted segment via ``index/merge.py``
+    (``merge_route``: ``"sort"`` = one fused re-sort per fold, the fastest
+    eager route on CPU; ``"merge"`` = pairwise merge-path); :meth:`run`
+    applies the global tau once at the end, so for any wave size the output
+    is bit-identical to the monolithic job.
+
+    Memory model: device footprint is O(wave * sigma) records per stage; the
+    running segment lives wherever ``index/merge.py`` keeps it and holds the
+    *exact* (tau=1) gram set seen so far -- the unavoidable state of any exact
+    out-of-core counter.  Restrictions: bucketed time series (``n_buckets``)
+    need cross-wave bucket columns the segment fold does not carry, so waves
+    require ``n_buckets == 0``.
+    """
+
+    def __init__(self, cfg, *, wave_tokens: int | None = None,
+                 plan: JobPlan | None = None, merge_route: str = "sort"):
+        if wave_tokens is not None and wave_tokens < 1:
+            raise ValueError("wave_tokens must be >= 1")
+        if cfg.n_buckets:
+            raise ValueError("wave execution does not support n_buckets "
+                             "(bucketed series need the bucket-carrying "
+                             "single job -- run_job / run_plan)")
+        self.cfg = cfg
+        self.wave_tokens = wave_tokens
+        self.plan = plan or plan_for(cfg)
+        self.merge_route = merge_route
+
+    # --- wave iteration ------------------------------------------------------ #
+
+    def _windows(self, tokens: np.ndarray):
+        """Yield (tok_ext [wave + sigma - 1], n_live) fixed-shape windows."""
+        n = int(tokens.shape[0])
+        wave = self.wave_tokens if self.wave_tokens is not None else n
+        wave = max(1, min(wave, n) if n else 1)
+        n_waves = max(1, -(-n // wave))
+        halo = self.cfg.sigma - 1
+        padded = np.zeros((n_waves * wave + halo,), np.int32)
+        padded[:n] = np.asarray(tokens, np.int32)
+        for w in range(n_waves):
+            yield jnp.asarray(padded[w * wave: (w + 1) * wave + halo]), wave
+
+    def iter_wave_stats(self, tokens):
+        """Per-wave exact partials (``tau = 1``) -- the streaming delta feed."""
+        tokens = np.asarray(tokens, np.int32)
+        for tok_ext, n_live in self._windows(tokens):
+            counters: dict = {}
+            yield _run_rounds(tok_ext, None, n_live, self.cfg, self.plan,
+                              1, counters)
+
+    # --- whole-job execution ------------------------------------------------- #
+
+    def run(self, tokens):
+        """Execute the job over waves -> ``NGramStats`` (canonical order),
+        bit-identical to the monolithic single-job run."""
+        from repro.core.stats import NGramStats
+        from repro.index.build import segment_from_stats
+        from repro.index.merge import merge_segments, segment_to_stats
+
+        tokens = np.asarray(tokens, np.int32)
+        counters = {"overflow": 0, "waves": 0}
+        acc = None
+        for tok_ext, n_live in self._windows(tokens):
+            counters["waves"] += 1
+            wave_stats = _run_rounds(tok_ext, None, n_live, self.cfg,
+                                     self.plan, 1, counters)
+            seg = segment_from_stats(wave_stats,
+                                     vocab_size=self.cfg.vocab_size)
+            acc = seg if acc is None else merge_segments(
+                [acc, seg], route=self.merge_route,
+                use_kernels=self.cfg.use_kernels)
+        merged = segment_to_stats(acc)
+        keep = merged.counts >= self.cfg.tau
+        return NGramStats(merged.grams[keep], merged.lengths[keep],
+                          merged.counts[keep], counters)
+
+    def run_streaming(self, tokens, *, gen=None, compress: bool = False,
+                      **gen_kw):
+        """Stream waves straight into a :class:`GenerationalIndex`.
+
+        Each wave's exact partial (``tau = 1``; nothing may be dropped early)
+        is frozen and ingested as a fresh L0 segment -- point/top-k answers
+        over the resulting index match a from-scratch build over the full
+        corpus at ``tau = 1`` exactly, while the device only ever holds one
+        wave of job state plus the serving artifacts.  Returns
+        ``(index, reports)`` with one ingest report per wave.
+        """
+        from repro.index.merge import GenerationalIndex
+        if gen is None:
+            gen = GenerationalIndex(sigma=self.cfg.sigma,
+                                    vocab_size=self.cfg.vocab_size,
+                                    compress=compress,
+                                    use_kernels=self.cfg.use_kernels, **gen_kw)
+        reports = []
+        for wave_stats in self.iter_wave_stats(tokens):
+            reports.append(gen.ingest(wave_stats))
+        return gen, reports

@@ -1,0 +1,95 @@
+"""Typed job plans: an n-gram method as data over the shared stages.
+
+A :class:`JobPlan` is the declarative form of one of the paper's algorithms:
+how the map phase emits records from a token window, whether a map-side
+combiner runs, what the shuffle partitions by, how many sort lanes the sort
+phase keys on, and which reducer interprets the sorted runs.  Multi-job
+methods (APRIORI-SCAN/-INDEX run one MapReduce job per gram length) express
+the chaining as ``rounds`` plus a ``carry`` -- the state one job hands the
+next (the frequent-gram dictionary, the posting-list occurrence mask).
+
+The executor (``repro.pipeline.executor``) interprets a plan either over the
+whole corpus at once (exactly the old monolithic single-device jobs) or over
+fixed-size token *waves* for corpora that don't fit on the device.
+
+Carry semantics under waves: when ``tau_eff == 1`` (the wave regime -- a gram
+below tau in every wave can still be frequent globally, so per-wave partials
+must keep everything) the carries must be computed from the *emit-side*
+evidence over the whole extended window including the halo, never from the
+counted (live-position-only) output: a frequent-gram dictionary or occurrence
+mask that is blind to the halo would prune real occurrences at wave
+boundaries.  ``update_carry`` receives both and picks per ``tau_eff``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.core.stats import NGramConfig
+
+# map emit: (tok_ext, aux_ext, n_live, cfg, carry, k) ->
+#   (records [N, W] uint32, valid [N] bool, emit_extras dict)
+# Only positions < n_live may carry weight (halo positions are the next
+# wave's); emit_extras carries halo-aware masks for the wave-mode carries.
+EmitFn = Callable[..., tuple]
+
+# carry update: (cfg, tau_eff, k, tok_ext, stats_k, reduce_extras,
+#                emit_extras, carry) -> new carry
+CarryFn = Callable[..., Any]
+
+
+@dataclass(frozen=True)
+class MapStage:
+    emit: EmitFn
+    n_meta: int = 0          # meta lanes after the weight lane (positions, ...)
+
+
+@dataclass(frozen=True)
+class CombineStage:
+    route: str = "sort"      # "sort" | "hash" (kernels/hash_combine.py)
+
+
+@dataclass(frozen=True)
+class ShuffleStage:
+    key: str = "gram"        # "gram" (whole-record hash) | "lead" (first term)
+
+
+@dataclass(frozen=True)
+class SortStage:
+    pass                     # keys = the packed gram lanes (n_lanes of the plan)
+
+
+@dataclass(frozen=True)
+class ReduceStage:
+    kind: str = "exact"      # "exact" (whole-gram) | "suffix" (every prefix)
+    with_positions: bool = False
+
+
+@dataclass(frozen=True)
+class JobPlan:
+    name: str
+    map: MapStage
+    shuffle: ShuffleStage
+    sort: SortStage
+    reduce: ReduceStage
+    combine: CombineStage | None = None
+    rounds: int = 1                       # jobs chained (sigma for APRIORI-*)
+    stop_on_empty: bool = False           # terminate when a round emits nothing
+    update_carry: CarryFn | None = None   # None: stateless rounds
+    lane_vocab: int = 0                   # packer vocab (0: cfg.vocab_size)
+
+    def effective_lane_vocab(self, cfg: NGramConfig) -> int:
+        return self.lane_vocab or cfg.vocab_size
+
+
+def plan_for(cfg: NGramConfig) -> JobPlan:
+    """The registered :class:`JobPlan` of ``cfg.method``."""
+    from repro.core import PLANS
+    try:
+        build = PLANS[cfg.method]
+    except KeyError:
+        raise ValueError(
+            f"no JobPlan registered for method {cfg.method!r}; "
+            f"options: {sorted(PLANS)}")
+    return build(cfg)

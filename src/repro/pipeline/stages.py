@@ -1,0 +1,203 @@
+"""Shared stage implementations of the map/combine/shuffle/sort/reduce pipeline.
+
+Before this module each method in ``repro.core`` carried its own copy of the
+post-map plumbing: SUFFIX-sigma had a sort-based combiner and an LCP reducer,
+the whole-gram methods (NAIVE, APRIORI-*) had their own fused sort+count, and
+each hashed partition keys its own way.  The method-specific part of an
+algorithm is its *map emit* (and how rounds chain); everything after the emit
+is the same MapReduce machinery, so it lives here once:
+
+  combine -- map-side pre-aggregation (the Hadoop combiner).  Two routes:
+             ``"sort"`` (sort + run-merge, exact within the buffer) and
+             ``"hash"`` (the sort-free hash-slot pass of
+             ``kernels/hash_combine.py`` -- Lemire & Kaser's one-pass hashing;
+             best-effort per block, exact in total weight).
+  shuffle -- partition-key computation (``mapreduce.shuffle.record_key``).
+  sort    -- multi-key lexicographic sort of the packed lanes.
+  reduce  -- ``reduce_suffix`` (LCP runs: every prefix of every suffix --
+             Algorithm 4) or ``reduce_exact`` (whole-gram runs with optional
+             position payloads -- Algorithms 1-3).
+
+All functions take and return static-shape arrays, so a jitted composition
+(one wave of :class:`~repro.pipeline.executor.WaveExecutor`, or a whole
+single-device job) compiles once per record shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce import pack as packing
+from repro.mapreduce import segment, shuffle, sort
+
+
+# ------------------------------------------------------------------- combine
+def combine_sort(records: jax.Array, n_lanes: int, has_bucket: bool) -> jax.Array:
+    """Sort-based map-side combiner: merge records with identical keys.
+
+    Keys = packed lanes (+ bucket lane if present, so series buckets stay
+    separate).  Non-first rows of each run get weight 0 (dropped by the
+    shuffle's validity mask); shapes stay static.
+    """
+    n_keys = n_lanes + (1 if has_bucket else 0)
+    if has_bucket:  # move bucket next to lanes for sorting, weight last
+        rec = jnp.concatenate(
+            [records[:, :n_lanes], records[:, n_lanes + 1:],
+             records[:, n_lanes:n_lanes + 1]], axis=1)
+    else:
+        rec = records
+    rec = sort.sort_records(rec, n_keys=n_keys)
+    keys = rec[:, :n_keys]
+    first = jnp.any(keys != jnp.roll(keys, 1, axis=0), axis=1).at[0].set(True)
+    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
+    wsum = jax.ops.segment_sum(rec[:, -1], seg, num_segments=rec.shape[0])
+    new_w = jnp.where(first, wsum[seg], 0)
+    rec = rec.at[:, -1].set(new_w)
+    if has_bucket:  # restore layout lanes | weight | bucket
+        rec = jnp.concatenate(
+            [rec[:, :n_lanes], rec[:, -1:], rec[:, n_lanes:-1]], axis=1)
+    return rec
+
+
+def combine_hash(records: jax.Array, n_lanes: int, has_bucket: bool, *,
+                 use_kernels: bool = False, block: int = 256) -> jax.Array:
+    """Sort-free hash-slot combiner: collapse duplicate keys without a sort.
+
+    Per block of ``block`` records, rows hash into slots; all rows whose key
+    equals their slot winner's key donate their weight to the winner.  Rows
+    that lose a slot to a different key keep their own weight (a Hadoop
+    combiner is best-effort -- the reducer re-aggregates exactly), so the
+    (key -> total weight) map is preserved and row order never changes.
+    """
+    n_keys = n_lanes + (1 if has_bucket else 0)
+    if has_bucket:
+        keys = jnp.concatenate(
+            [records[:, :n_lanes], records[:, n_lanes + 1:n_lanes + 2]], axis=1)
+    else:
+        keys = records[:, :n_lanes]
+    weights = records[:, n_lanes]
+    if use_kernels:
+        from repro.kernels import ops as kops
+        new_w = kops.hash_combine(keys[:, :n_keys], weights, block=block)
+    else:
+        from repro.kernels import ref as kref
+        new_w = kref.hash_combine_ref(keys[:, :n_keys], weights, block=block)
+    return records.at[:, n_lanes].set(new_w)
+
+
+def combine(records: jax.Array, n_lanes: int, has_bucket: bool, *,
+            route: str = "sort", use_kernels: bool = False) -> jax.Array:
+    if route == "sort":
+        return combine_sort(records, n_lanes, has_bucket)
+    if route == "hash":
+        return combine_hash(records, n_lanes, has_bucket,
+                            use_kernels=use_kernels)
+    raise ValueError(f"unknown combine route {route!r}")
+
+
+# ------------------------------------------------------------------- shuffle
+def partition_keys(records: jax.Array, n_lanes: int, *, kind: str,
+                   vocab_size: int) -> jax.Array:
+    """Per-record shuffle key (uint32) from the packed gram lanes."""
+    return shuffle.record_key(records[:, :n_lanes], kind=kind,
+                              vocab_size=vocab_size)
+
+
+# -------------------------------------------------------------- sort + reduce
+def sort_stage(records: jax.Array, *, n_keys: int) -> jax.Array:
+    """The MapReduce sort phase: lexicographic on the first ``n_keys`` lanes."""
+    return sort.sort_records(records, n_keys=n_keys)
+
+
+def reduce_suffix(rec: jax.Array, *, sigma: int, vocab_size: int,
+                  n_buckets: int = 0, use_kernels: bool = False):
+    """LCP-run reducer over a *sorted* record block (SUFFIX-sigma).
+
+    rec: [N, W] sorted = lanes | weight | (bucket).  Returns
+    (terms [N, sigma], flags [N, sigma], counts [N, sigma] or [N, sigma, B]).
+    """
+    n_l = packing.n_lanes(sigma, vocab_size)
+    terms = packing.unpack_terms(rec[:, :n_l], vocab_size=vocab_size, sigma=sigma)
+    weight = rec[:, n_l].astype(jnp.int32)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        lcp, flags = kops.lcp_boundary(terms)
+    else:
+        lcp = segment.lcp_lengths(terms)
+        flags = segment.boundary_flags(terms, lcp)
+    valid = terms != 0
+    if n_buckets:
+        bucket = rec[:, n_l + 1].astype(jnp.int32)
+        wmat = jax.nn.one_hot(bucket, n_buckets, dtype=jnp.int32) * weight[:, None]
+        counts = segment.run_counts_matrix(flags, valid, wmat,
+                                           max_segments=rec.shape[0])
+    else:
+        counts = segment.run_counts(flags, valid, weight,
+                                    max_segments=rec.shape[0])
+    return terms, flags, counts
+
+
+def reduce_exact(rec: jax.Array, *, sigma: int, vocab_size: int,
+                 with_positions: bool = False):
+    """Whole-gram reducer over a *sorted* record block (NAIVE / APRIORI-*).
+
+    rec: [N, W] sorted = lanes | weight | (pos).  Returns (terms, flags,
+    counts) shaped like :func:`reduce_suffix` so ``NGramStats.from_dense``
+    applies; flags mark the first row of each run at the row's own gram
+    length.  If ``with_positions``, also returns per-original-position run
+    totals [N] (scattered back through the sort permutation) for the
+    APRIORI-INDEX posting-list join.
+    """
+    n = rec.shape[0]
+    n_l = packing.n_lanes(sigma, vocab_size)
+    lanes = rec[:, :n_l]
+    weight = rec[:, n_l].astype(jnp.int32)
+    terms = packing.unpack_terms(lanes, vocab_size=vocab_size, sigma=sigma)
+
+    first = jnp.any(lanes != jnp.roll(lanes, 1, axis=0), axis=1).at[0].set(True)
+    seg = jnp.maximum(jnp.cumsum(first.astype(jnp.int32)) - 1, 0)
+    totals = jax.ops.segment_sum(weight, seg, num_segments=n)[seg]
+
+    length = jnp.sum(terms != 0, axis=1)                       # gram length per row
+    valid_row = (length > 0) & (weight >= 0)
+    pos_in_row = jnp.maximum(length - 1, 0)
+    row_flags = first & valid_row & (totals > 0)
+    flags = (jax.nn.one_hot(pos_in_row, sigma, dtype=jnp.int32)
+             * row_flags[:, None].astype(jnp.int32)).astype(bool)
+    counts = flags * totals[:, None]
+
+    if not with_positions:
+        return terms, flags, counts
+    orig_pos = rec[:, n_l + 1].astype(jnp.int32)
+    totals_at_pos = jnp.zeros((n,), jnp.int32).at[orig_pos].set(totals, mode="drop")
+    return terms, flags, counts, totals_at_pos
+
+
+# ----------------------------------------------------------- canonical output
+def canonical_stats(stats):
+    """Canonical row order + dedup of a job output: sort by (length, terms
+    lexicographic) and sum counts of identical grams -- exactly the order an
+    :class:`~repro.index.build.IndexSegment` stores (length | packed lanes
+    ascending), so a wave run folded through the segment-merge path and a
+    monolithic run land on bit-identical arrays.  Host-side int64, so no
+    uint32 round trip; series ([R, B]) counts are carried whole.
+    """
+    from repro.core.stats import NGramStats
+    grams = np.asarray(stats.grams, np.int32)
+    lengths = np.asarray(stats.lengths, np.int32)
+    counts = np.asarray(stats.counts)
+    r, sigma = grams.shape
+    if r == 0:
+        return NGramStats(grams, lengths,
+                          counts.astype(np.int64), dict(stats.counters))
+    # np.lexsort: last key is primary -> (length, g[:,0], ..., g[:,sigma-1])
+    order = np.lexsort(tuple(grams[:, i] for i in range(sigma - 1, -1, -1))
+                       + (lengths,))
+    g_s, l_s, c_s = grams[order], lengths[order], counts[order]
+    prev_diff = np.any(g_s != np.roll(g_s, 1, axis=0), axis=1) | \
+        (l_s != np.roll(l_s, 1))
+    prev_diff[0] = True
+    starts = np.flatnonzero(prev_diff)
+    summed = np.add.reduceat(c_s.astype(np.int64), starts, axis=0)
+    return NGramStats(g_s[starts], l_s[starts], summed, dict(stats.counters))

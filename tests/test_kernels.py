@@ -122,10 +122,25 @@ def _case_merge_path(rng, scale):
             lambda: ref.merge_path_ref(*args))
 
 
+def _case_hash_combine(rng, scale):
+    """Duplicate-heavy keys (small value range) so slots actually collide
+    both equal (combines) and unequal (slot losers keep their weight), plus
+    ragged tails that exercise the pad-rows-can't-absorb-weight invariant."""
+    n = int(rng.integers(1, 300 * scale + 2))
+    n_keys = int(rng.integers(1, 6))
+    vmax = int(rng.choice([2, 5, 50, 2**31]))
+    keys = jnp.asarray(rng.integers(0, vmax, (n, n_keys)).astype(np.uint32))
+    weights = jnp.asarray(rng.integers(0, 4, n).astype(np.uint32))
+    block = int(rng.choice([32, 64, 256]))
+    return (lambda: ops.hash_combine(keys, weights, block=block),
+            lambda: ref.hash_combine_ref(keys, weights, block=block))
+
+
 KERNEL_CASES = {
     "lcp_boundary": _case_lcp_boundary,
     "suffix_pack": _case_suffix_pack,
     "hash_partition": _case_hash_partition,
+    "hash_combine": _case_hash_combine,
     "bsearch": _case_bsearch,
     "block_decode": _case_block_decode,
     "merge_path": _case_merge_path,
@@ -221,6 +236,24 @@ def test_block_decode_ref_against_host_decode():
         key = tuple(np.concatenate([[ql[i]], qt[i]]))
         assert int(lt[i]) == sum(1 for r in rows if tuple(r) < key)
         assert int(eq[i]) == sum(1 for r in rows if tuple(r) == key)
+
+
+def test_hash_combine_ref_conserves_weight_per_key():
+    """The combiner oracle itself vs a host Counter: per-key weight totals
+    must be untouched, and rep rows of combined runs must carry the sum."""
+    from collections import Counter
+    rng = np.random.default_rng(7)
+    n = 700
+    keys = rng.integers(0, 4, (n, 2)).astype(np.uint32)
+    w = rng.integers(0, 5, n).astype(np.uint32)
+    out = np.asarray(ref.hash_combine_ref(jnp.asarray(keys), jnp.asarray(w),
+                                          block=64))
+    want, got = Counter(), Counter()
+    for i in range(n):
+        want[tuple(keys[i])] += int(w[i])
+        got[tuple(keys[i])] += int(out[i])
+    assert want == got
+    assert int((out != w).sum()) > 0        # it actually combined something
 
 
 def test_kernel_backed_reducer_end_to_end():

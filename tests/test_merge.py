@@ -130,6 +130,22 @@ def test_merged_count_overflow_guard_trips():
     assert np.asarray(seg.counts)[0] == np.uint32(big + 10)
 
 
+def test_device_fold_host_fallback_parity(monkeypatch):
+    """Runs longer than the two-limb device budget must replay on the host
+    with identical output: force the fallback by shrinking the threshold and
+    compare whole segments against the device fold."""
+    from repro.index import merge as merge_mod
+
+    sa, sb = job_pair(40, "zipf", 4, 2, seed=3, n=1500)
+    segs = [segment_from_stats(s, vocab_size=40) for s in (sa, sb)]
+    want = merge_segments(segs)                        # device fold
+    monkeypatch.setattr(merge_mod, "_MAX_DEVICE_RUN", 1)
+    got = merge_segments(segs)                         # host replay
+    np.testing.assert_array_equal(np.asarray(got.keys), np.asarray(want.keys))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(want.counts))
+
+
 def test_generational_query_overflow_guard_trips():
     """Counts split across live segments must not silently wrap at query time
     (the lookup-side mirror of the merge fold's guard)."""

@@ -1,0 +1,258 @@
+"""Wave-vs-monolithic parity for the unified job engine (repro.pipeline).
+
+The contract is the acceptance bar of the engine: for every method and every
+wave size, ``WaveExecutor.run`` must be **bit-identical** (grams / lengths /
+counts leaf-exact) to the monolithic single-job run -- per-wave partials are
+kept at tau=1 and folded through the segment-merge path, so nothing may be
+lost or reordered at wave boundaries (the halo + emit-side-carry machinery
+under test).  On top: ``run_streaming`` over waves must answer point and
+top-k queries exactly like a from-scratch generational build over the full
+corpus, the hash-slot combiner route must not change any job output, and the
+engine's restrictions (bucketed series) must refuse loudly.
+
+Corpus generation is hypothesis-driven where available and degrades to the
+same generator over fixed parametrized draws without it (repo convention).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core import METHODS, NGramConfig, oracle, run_job
+from repro.pipeline import WaveExecutor, canonical_stats, plan_for
+from tests.test_compress import make_corpus
+
+
+def assert_stats_equal(got, want):
+    np.testing.assert_array_equal(np.asarray(got.grams), np.asarray(want.grams))
+    np.testing.assert_array_equal(np.asarray(got.lengths),
+                                  np.asarray(want.lengths))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(want.counts))
+
+
+def check_wave_parity(toks, cfg, wave):
+    mono = run_job(toks, cfg)
+    got = WaveExecutor(cfg, wave_tokens=wave).run(toks)
+    assert_stats_equal(got, mono)
+    # and the engine really ran out-of-core when asked to
+    if wave is not None and wave < len(toks):
+        assert got.counters["waves"] == -(-len(toks) // wave)
+    return got
+
+
+def doc_wave(toks) -> int:
+    """A wave of roughly one document (the PAD-separated unit)."""
+    bounds = np.flatnonzero(np.asarray(toks) == 0)
+    if bounds.size == 0:
+        return max(1, len(toks) // 4)
+    return max(1, int(np.median(np.diff(np.concatenate([[0], bounds])))))
+
+
+# ------------------------------------------------------ parametrized parity
+@pytest.mark.parametrize("method", sorted(METHODS))
+@pytest.mark.parametrize("wave", ["corpus", "doc", 17])
+def test_wave_parity(method, wave):
+    rng = np.random.default_rng(hash(method) % 2**31)
+    toks = make_corpus(400, 23, "zipf", seed=7)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=23, method=method,
+                      apriori_index_k=2)
+    w = {"corpus": len(toks) + 5, "doc": doc_wave(toks)}.get(wave, wave)
+    check_wave_parity(toks, cfg, w)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_wave_parity_single_token_waves(method):
+    """wave=1: every token is its own wave -- maximal boundary stress."""
+    toks = make_corpus(60, 9, "uniform", seed=3)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=9, method=method,
+                      apriori_index_k=1)
+    got = check_wave_parity(toks, cfg, 1)
+    assert got.to_dict() == oracle.ngram_counts(toks, 3, 2)
+
+
+def test_wave_parity_sigma_exceeds_wave():
+    """Halo longer than the wave itself (sigma - 1 > wave) must still be
+    exact -- suffixes span several wave boundaries."""
+    toks = make_corpus(120, 7, "zipf", seed=11)
+    cfg = NGramConfig(sigma=6, tau=1, vocab_size=7)
+    check_wave_parity(toks, cfg, 3)
+
+
+# ----------------------------------------------------- randomized corpora
+def _parity_draw(method, vocab, dist, sigma, tau, wave_frac, seed):
+    toks = make_corpus(350, vocab, dist, seed)
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=vocab, method=method,
+                      combine=bool(seed % 2), apriori_index_k=1 + seed % 3)
+    wave = max(1, int(len(toks) * wave_frac))
+    check_wave_parity(toks, cfg, wave)
+
+
+FALLBACK_DRAWS = [
+    ("suffix_sigma", 50, "zipf", 5, 1, 0.31, 0),
+    ("naive", 11, "uniform", 3, 2, 0.09, 1),
+    ("apriori_scan", 200, "zipf", 4, 3, 0.5, 2),
+    ("apriori_index", 30, "uniform", 5, 2, 0.13, 3),
+]
+
+
+@pytest.mark.parametrize("draw", FALLBACK_DRAWS,
+                         ids=[d[0] for d in FALLBACK_DRAWS])
+def test_wave_parity_fixed_draws(draw):
+    _parity_draw(*draw)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(method=st.sampled_from(sorted(METHODS)),
+           vocab=st.integers(5, 500),
+           dist=st.sampled_from(["zipf", "uniform"]),
+           sigma=st.integers(1, 6), tau=st.integers(1, 4),
+           wave_frac=st.floats(0.02, 1.2), seed=st.integers(0, 2**20))
+    def test_wave_parity_hypothesis(method, vocab, dist, sigma, tau,
+                                    wave_frac, seed):
+        _parity_draw(method, vocab, dist, sigma, tau, wave_frac, seed)
+
+
+# ------------------------------------------------------- streaming serving
+def test_streaming_ingest_equals_batch_build():
+    """Waves -> GenerationalIndex must answer point + top-k queries exactly
+    like a from-scratch generational build over the whole corpus."""
+    from repro.index import continuations, generational_from_stats, lookup
+
+    rng = np.random.default_rng(5)
+    toks = make_corpus(3000, 40, "zipf", seed=5)
+    cfg = NGramConfig(sigma=4, tau=1, vocab_size=40)
+    gen, reports = WaveExecutor(cfg, wave_tokens=512).run_streaming(toks)
+    assert len(reports) == -(-len(toks) // 512)
+    assert gen.generation == len(reports)
+
+    stats = run_job(toks, cfg)
+    want = generational_from_stats(stats, vocab_size=40)
+
+    q = 96
+    grams = np.zeros((q, 4), np.int32)
+    lengths = np.zeros((q,), np.int32)
+    rows = rng.choice(len(stats), q - 16)
+    grams[: q - 16] = stats.grams[rows]
+    lengths[: q - 16] = stats.lengths[rows]
+    grams[q - 16:] = rng.integers(1, 46, (16, 4))      # misses / OOV
+    lengths[q - 16:] = rng.integers(1, 5, 16)
+
+    np.testing.assert_array_equal(np.asarray(lookup(gen, grams, lengths)),
+                                  np.asarray(lookup(want, grams, lengths)))
+    p_len = np.maximum(lengths - 1, 0)
+    got_c = continuations(gen, grams, p_len, k=6)
+    want_c = continuations(want, grams, p_len, k=6)
+    for g, w in zip(got_c, want_c):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_streaming_service_wave_ingest_matches_monolithic():
+    """serve_ngrams' service with wave_tokens set serves identical counts."""
+    from repro.launch.serve_ngrams import StreamingNGramService
+
+    toks = make_corpus(1200, 25, "zipf", seed=9)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=25)
+    a = StreamingNGramService(cfg, cache_capacity=64)
+    b = StreamingNGramService(cfg, cache_capacity=64, wave_tokens=200)
+    ra = a.ingest(toks)
+    rb = b.ingest(toks)
+    assert ra["ingested_rows"] == rb["ingested_rows"]
+    assert rb["waves"] == -(-len(toks) // 200) and ra["waves"] == 1
+    stats = run_job(toks, cfg)
+    g = np.asarray(stats.grams)[:64]
+    ln = np.asarray(stats.lengths)[:64]
+    np.testing.assert_array_equal(a.lookup(g, ln), b.lookup(g, ln))
+
+
+# --------------------------------------------------------- engine contract
+def test_run_job_output_is_canonical():
+    """Single-device jobs now emit canonical (segment-ordered, deduped) rows;
+    canonical_stats must be a fixed point of their output."""
+    toks = make_corpus(500, 15, "zipf", seed=1)
+    for method in METHODS:
+        stats = run_job(toks, NGramConfig(sigma=3, tau=2, vocab_size=15,
+                                          method=method))
+        assert_stats_equal(canonical_stats(stats), stats)
+
+
+def test_hash_combine_route_preserves_output():
+    """The sort-free combiner may only *redistribute* weights -- job output
+    (and the oracle) must be untouched, kernel and jnp routes alike."""
+    toks = make_corpus(600, 18, "zipf", seed=2)
+    want = oracle.ngram_counts(toks, 4, 2)
+    for use_kernels in (False, True):
+        cfg = NGramConfig(sigma=4, tau=2, vocab_size=18,
+                          combine_route="hash", use_kernels=use_kernels)
+        assert run_job(toks, cfg).to_dict() == want
+        got = WaveExecutor(cfg, wave_tokens=150).run(toks)
+        assert got.to_dict() == want
+
+
+def test_hash_combine_actually_combines():
+    """On a duplicate-heavy stream the hash route must shrink the shuffle
+    (the whole point of a combiner), not just pass records through."""
+    toks = np.asarray([1, 2, 3] * 200, np.int32)
+    on = run_job(toks, NGramConfig(sigma=3, tau=1, vocab_size=3,
+                                   combine_route="hash"))
+    off = run_job(toks, NGramConfig(sigma=3, tau=1, vocab_size=3,
+                                    combine=False))
+    assert on.counters["shuffle_records"] < off.counters["shuffle_records"]
+    assert on.to_dict() == off.to_dict()
+
+
+def test_plan_registry_covers_methods():
+    for method in METHODS:
+        plan = plan_for(NGramConfig(sigma=3, tau=1, vocab_size=9,
+                                    method=method))
+        assert plan.name == method
+    with pytest.raises(ValueError):
+        plan_for(NGramConfig(sigma=3, tau=1, vocab_size=9, method="nope"))
+
+
+def test_wave_rejects_buckets():
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=9, n_buckets=4)
+    with pytest.raises(ValueError, match="n_buckets"):
+        WaveExecutor(cfg, wave_tokens=8)
+    with pytest.raises(ValueError, match="n_buckets"):
+        WaveExecutor(cfg)               # one-wave mode can't carry buckets either
+
+
+@pytest.mark.slow
+def test_wave_parity_acceptance_scale():
+    """Acceptance-sized corpus (>=30k tokens, zipf skew, 6 waves): the
+    bit-identity contract and the streaming path at a size where padding /
+    capacity-rounding bugs would actually bite."""
+    from repro.index import generational_from_stats, lookup
+
+    toks = make_corpus(30_000, 2_000, "zipf", seed=13)
+    cfg = NGramConfig(sigma=5, tau=4, vocab_size=2_000)
+    wave = -(-len(toks) // 6)
+    got = check_wave_parity(toks, cfg, wave)
+    assert got.counters["waves"] == 6
+
+    cfg1 = NGramConfig(sigma=5, tau=1, vocab_size=2_000)
+    gen, _ = WaveExecutor(cfg1, wave_tokens=wave).run_streaming(toks)
+    want = generational_from_stats(run_job(toks, cfg1), vocab_size=2_000)
+    stats = run_job(toks, cfg1)
+    rng = np.random.default_rng(13)
+    rows = rng.choice(len(stats), 256)
+    g = np.asarray(stats.grams)[rows]
+    ln = np.asarray(stats.lengths)[rows]
+    np.testing.assert_array_equal(np.asarray(lookup(gen, g, ln)),
+                                  np.asarray(lookup(want, g, ln)))
+
+
+def test_suffix_map_record_invariant_across_waves():
+    """SSIV: one record per token occurrence, wave-split or not."""
+    toks = make_corpus(500, 20, "uniform", seed=8)
+    n_tok = int((np.asarray(toks) != 0).sum())
+    cfg = NGramConfig(sigma=4, tau=1, vocab_size=20, combine=False)
+    got = WaveExecutor(cfg, wave_tokens=97).run(toks)
+    assert got.counters["map_records"] == n_tok
+    assert got.counters["shuffle_records"] == n_tok
