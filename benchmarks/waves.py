@@ -1,23 +1,76 @@
-"""Wave-engine benchmark: wave count vs job throughput.
+"""Wave-engine benchmark: wave count vs job throughput, fold policy, mesh waves.
 
     PYTHONPATH=src python -m benchmarks.run --waves
 
 Measures the out-of-core tax: the same SUFFIX-sigma job over the same corpus
 at several wave sizes (1 wave == the monolithic shape), reps *interleaved*
 across all wave counts (the repo's interleaved-median protocol: host-load
-transients hit every cell equally) and reduced by medians.  Also records the
-streaming-ingest cell (waves -> GenerationalIndex).  Every run appends to
-``BENCH_waves.json`` so regressions are diffable in review.
+transients hit every cell equally) and reduced by medians.  On top of the
+wave-count sweep:
+
+  * **accumulator cells** -- the same job at ``ACC_WAVES`` waves under both
+    fold policies (``pairwise`` = every wave into one running segment,
+    ``tiered`` = the LSM rung stack), recording wall time *and* the measured
+    merge work (``fold_rows``: segment rows fed through ``merge_segments``);
+  * **streaming cell** -- waves straight into the generational index;
+  * **distributed cell** -- the same job with every wave sharded over an
+    8-way host mesh, run in a subprocess (the device-count XLA flag must
+    precede backend init).
+
+Every run appends to ``BENCH_waves.json`` so regressions are diffable in
+review.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 BENCH_JSON = "BENCH_waves.json"
 WAVE_COUNTS = (1, 2, 4, 8)
+ACC_WAVES = 16          # >= 16 waves: where the tiered fold-work win shows
+MESH_DEVICES = 8
+
+_MESH_CELL = """
+import json, time
+import numpy as np, jax
+from repro.core import NGramConfig
+from repro.data import corpus as corpus_mod
+from repro.pipeline import WaveExecutor
+mesh = jax.make_mesh(({devices},), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+prof = corpus_mod.NYT
+tokens = corpus_mod.zipf_corpus({n_tokens}, prof, seed=0, duplicate_frac=0.02)
+cfg = NGramConfig(sigma=5, tau=4, vocab_size=prof.vocab_size)
+wave = -(-len(tokens) // {n_waves})
+ex = WaveExecutor(cfg, wave_tokens=wave, mesh=mesh)
+ex.run(tokens)                                   # compile + cache warm
+ts = []
+for _ in range({reps}):
+    t0 = time.perf_counter(); ex.run(tokens); ts.append(time.perf_counter() - t0)
+print(json.dumps({{"us": float(np.median(ts) * 1e6), "n_tokens": len(tokens)}}))
+"""
+
+
+def _mesh_cell(n_tokens: int, reps: int) -> dict | None:
+    """Time distributed waves in a subprocess (forced host device count)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={MESH_DEVICES}"
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    code = _MESH_CELL.format(devices=MESH_DEVICES, n_tokens=n_tokens,
+                             n_waves=MESH_DEVICES, reps=reps)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    if r.returncode != 0:
+        print(f"mesh wave cell failed (skipped):\n{r.stderr[-2000:]}",
+              file=sys.stderr)
+        return None
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
@@ -35,13 +88,20 @@ def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
         wave = -(-n_tokens // nw)
         cells[nw] = (lambda w=wave: WaveExecutor(cfg, wave_tokens=w)
                      .run(tokens))
+    # fold-policy cells: same job, ACC_WAVES waves, both accumulators
+    acc_wave = -(-n_tokens // ACC_WAVES)
+    for strat in ("pairwise", "tiered"):
+        cells[f"acc_{strat}"] = (
+            lambda s=strat: WaveExecutor(cfg, wave_tokens=acc_wave,
+                                         accumulator=s).run(tokens))
     lat: dict[object, list[float]] = {k: [] for k in cells}
+    last: dict[object, object] = {}
     for k, fn in cells.items():
-        fn()                                   # compile + cache warm
+        last[k] = fn()                         # compile + cache warm
     for _ in range(reps):                      # interleaved: one rep per cell
         for k, fn in cells.items():
             t0 = time.perf_counter()
-            fn()
+            last[k] = fn()
             lat[k].append(time.perf_counter() - t0)
 
     rows = []
@@ -56,6 +116,21 @@ def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
             "derived": (f"tok_s={n_tokens / (us / 1e6):.0f};"
                         f"vs_mono={us / mono_us:.2f}x"),
         })
+    for strat in ("pairwise", "tiered"):
+        key = f"acc_{strat}"
+        us = float(np.median(lat[key]) * 1e6)
+        fold = int(last[key].counters["fold_rows"])
+        rows.append({
+            "name": f"waves_acc_{strat}_{ACC_WAVES}",
+            "us": us,
+            "derived": (f"fold_rows={fold};"
+                        f"tok_s={n_tokens / (us / 1e6):.0f}"),
+        })
+    fp = int(last["acc_pairwise"].counters["fold_rows"])
+    ft = int(last["acc_tiered"].counters["fold_rows"])
+    rows.append({"name": f"waves_fold_work_win_{ACC_WAVES}",
+                 "us": 0.0,
+                 "derived": f"pairwise/tiered={fp / max(ft, 1):.2f}x"})
 
     # streaming cell: waves straight into the generational index
     cfg1 = NGramConfig(sigma=5, tau=1, vocab_size=prof.vocab_size)
@@ -71,6 +146,17 @@ def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
     rows.append({"name": f"waves_streaming_{WAVE_COUNTS[-1]}", "us": us,
                  "derived": (f"tok_s={n_tokens / (us / 1e6):.0f};"
                              f"segments={gen.n_segments}")})
+
+    # distributed cell: every wave sharded over the host mesh (subprocess)
+    mesh = _mesh_cell(n_tokens, max(reps - 1, 1))
+    if mesh is not None:
+        us = mesh["us"]
+        rows.append({
+            "name": f"waves_mesh{MESH_DEVICES}_{MESH_DEVICES}",
+            "us": us,
+            "derived": (f"tok_s={mesh['n_tokens'] / (us / 1e6):.0f};"
+                        f"vs_mono={us / mono_us:.2f}x"),
+        })
 
     try:
         with open(BENCH_JSON) as f:

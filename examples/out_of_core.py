@@ -45,6 +45,13 @@ def main() -> None:
           f"of <= {DEVICE_BUDGET_TOKENS} -> {len(stats)} frequent grams "
           f"in {dt:.1f}s ({c['map_records']:.0f} map records)")
 
+    # the wave fold is size-tiered (LSM rungs, like the serving index), so
+    # merge work amortizes to O(total log waves) instead of re-merging the
+    # whole running segment every wave; benchmarks/waves.py measures the
+    # pairwise-vs-tiered gap at 16+ waves
+    print(f"segment fold work (tiered accumulator): "
+          f"{int(c['fold_rows'])} rows through merge_segments")
+
     # exactness receipt: the monolithic job (which *can* still run at this
     # size on CPU) produces bit-identical output
     mono = run_job(tokens, cfg)

@@ -5,6 +5,11 @@
 #   scripts/ci.sh            # full tier-1 suite (+ coverage gate if available)
 #   scripts/ci.sh --fast     # quick tier: skips the slow corpus/property tiers
 #
+# The full tier includes the slow-marked 8-way mesh regressions
+# (tests/test_distributed.py -- sharded serving, generational shards, and the
+# distributed-wave parity test test_mesh_waves_match_single_device_and_monolithic);
+# --fast skips them along with the other slow corpus/property tiers.
+#
 # Both tiers finish with an examples smoke step: the streaming-ingest demo
 # must run end to end (job -> generational ingest -> cached queries) in
 # under 60s on CPU.

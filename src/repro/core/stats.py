@@ -20,7 +20,17 @@ UNPACKED_VOCAB = 1 << 30
 @dataclass(frozen=True)
 class NGramConfig:
     """Problem statement of the paper (SSIII): report every n-gram s with
-    cf(s) >= tau and |s| <= sigma."""
+    cf(s) >= tau and |s| <= sigma.
+
+    Token-id convention (reserved id 0): term ids are ``1..vocab_size``;
+    **id 0 is the PAD / document separator** and is never counted as a term
+    -- every phase (window masking, lane packing, record validity) treats a
+    zero as "no token here".  A tokenizer that emits 0 for a real word must
+    remap to ``1..vocab_size`` first, or its counts are silently wrong.
+    :meth:`validate_tokens` enforces the representable range loudly: an id
+    above ``vocab_size`` would overflow its bit-packed lane field and
+    fabricate grams, an id below 0 would alias through the uint32 casts.
+    """
 
     sigma: int
     tau: int
@@ -65,6 +75,27 @@ class NGramConfig:
             return self.pack_vocab
         return self.vocab_size if self.pack else max(self.vocab_size,
                                                      UNPACKED_VOCAB)
+
+    def validate_tokens(self, tokens) -> None:
+        """Refuse a corpus that violates the reserved-id-0 convention's range.
+
+        Token ids must lie in ``[0, vocab_size]`` -- 0 is the PAD / document
+        separator (see the class docstring), ``1..vocab_size`` are terms.
+        Out-of-range ids would not fail downstream: an id past ``vocab_size``
+        overflows its packed lane bit field and *fabricates* grams, a
+        negative id wraps through the uint32 casts -- both silently
+        miscount, so the wave executor checks here instead.
+        """
+        t = np.asarray(tokens)
+        if t.size == 0:
+            return
+        lo, hi = int(t.min()), int(t.max())
+        if lo < 0 or hi > self.vocab_size:
+            raise ValueError(
+                f"token ids must lie in [0, {self.vocab_size}] (0 is the "
+                "reserved PAD/document separator and is never counted as a "
+                f"term; remap a tokenizer that uses 0 for a real word); got "
+                f"ids in [{lo}, {hi}]")
 
 
 @dataclass

@@ -16,8 +16,10 @@ from .build import (IndexSegment, NGramIndex, build_index, index_from_segment,
                     segment_from_stats)
 from .compress import (CompressedNGramIndex, EliasFano, build_compressed_index,
                        compress_index)
-from .merge import (GenerationalIndex, generational_from_stats, merge_indexes,
-                    merge_segments, segment_to_stats, stats_union)
+from .merge import (GenerationalIndex, PairwiseSegmentAccumulator,
+                    TieredSegmentAccumulator, generational_from_stats,
+                    merge_indexes, merge_segments, segment_to_stats,
+                    stats_union)
 from .query import continuations, lookup
 from .serve import (ShardedGenerationalIndex, ShardedNGramIndex,
                     build_sharded_index, empty_prefix_continuations,
@@ -29,8 +31,10 @@ __all__ = ["build", "compress", "merge", "query", "serve",
            "segment_from_stats",
            "CompressedNGramIndex", "EliasFano", "build_compressed_index",
            "compress_index",
-           "GenerationalIndex", "generational_from_stats", "merge_indexes",
-           "merge_segments", "segment_to_stats", "stats_union",
+           "GenerationalIndex", "TieredSegmentAccumulator",
+           "PairwiseSegmentAccumulator", "generational_from_stats",
+           "merge_indexes", "merge_segments", "segment_to_stats",
+           "stats_union",
            "lookup", "continuations",
            "ShardedGenerationalIndex", "ShardedNGramIndex",
            "build_sharded_index", "empty_prefix_continuations", "make_server",

@@ -295,6 +295,93 @@ def merge_continuation_results(per_seg, *, k: int):
     return nd, total.astype(np.uint32), topk_t, topk_c
 
 
+class TieredSegmentAccumulator:
+    """Size-tiered fold of a stream of sorted segments (the wave accumulator).
+
+    The wave engine's naive fold -- ``acc = merge_segments([acc, seg])`` per
+    wave -- re-merges the whole running segment every wave: O(waves x total)
+    rows through the merge path.  This accumulator applies the same LSM
+    discipline as :class:`GenerationalIndex` to raw segments: ``push`` stacks
+    the new segment as the newest rung and merges only while the newest rung
+    has grown to within ``size_ratio`` of its elder, so equal-sized waves
+    amortize to O(total log waves) merge rows; ``result`` folds the surviving
+    rungs once.  Because dedup-summed segment merges are associative and the
+    output order is a pure function of the row set, the final segment is
+    bit-identical to the pairwise fold's.
+
+    ``fold_rows`` counts every input row fed through :func:`merge_segments`
+    -- the measured merge work the benchmarks compare across strategies.
+    """
+
+    def __init__(self, *, size_ratio: int = DEFAULT_SIZE_RATIO,
+                 route: str = "sort", use_kernels: bool = False):
+        if size_ratio < 1:
+            raise ValueError("size_ratio must be >= 1")
+        self.size_ratio = size_ratio
+        self.route = route
+        self.use_kernels = use_kernels
+        self.rungs: list[tuple[IndexSegment, int]] = []   # newest first
+        self.fold_rows = 0
+
+    def _merge_front(self, n: int) -> None:
+        segs = [s for s, _ in reversed(self.rungs[:n])]   # elder first
+        self.fold_rows += sum(r for _, r in self.rungs[:n])
+        merged = merge_segments(segs, route=self.route,
+                                use_kernels=self.use_kernels)
+        self.rungs[:n] = [(merged, merged.n_rows)]
+
+    def push(self, seg: IndexSegment, *, n_rows: int | None = None) -> None:
+        """Stack one segment, then compact rungs under the size-ratio policy.
+
+        ``n_rows`` (when the caller already knows it, e.g. from the stats the
+        segment was frozen from) skips the segment's own host-side row count.
+        """
+        self.rungs.insert(0, (seg, seg.n_rows if n_rows is None else n_rows))
+        while (len(self.rungs) >= 2 and
+               self.rungs[0][1] * self.size_ratio >= self.rungs[1][1]):
+            self._merge_front(2)
+
+    def result(self) -> IndexSegment:
+        """Fold the remaining rungs into the one final sorted segment."""
+        if not self.rungs:
+            raise ValueError("no segments accumulated")
+        if len(self.rungs) > 1:
+            self._merge_front(len(self.rungs))
+        return self.rungs[0][0]
+
+
+class PairwiseSegmentAccumulator:
+    """The legacy fold-every-wave-into-one-segment baseline (O(waves x total)).
+
+    Same interface and bit-identical result as
+    :class:`TieredSegmentAccumulator`; kept for the benchmark comparison and
+    as the degenerate-memory option (exactly one live segment at all times).
+    """
+
+    def __init__(self, *, route: str = "sort", use_kernels: bool = False,
+                 **_ignored):
+        self.route = route
+        self.use_kernels = use_kernels
+        self._seg: IndexSegment | None = None
+        self._rows = 0
+        self.fold_rows = 0
+
+    def push(self, seg: IndexSegment, *, n_rows: int | None = None) -> None:
+        rows = seg.n_rows if n_rows is None else n_rows
+        if self._seg is None:
+            self._seg, self._rows = seg, rows
+            return
+        self.fold_rows += self._rows + rows
+        self._seg = merge_segments([self._seg, seg], route=self.route,
+                                   use_kernels=self.use_kernels)
+        self._rows = self._seg.n_rows
+
+    def result(self) -> IndexSegment:
+        if self._seg is None:
+            raise ValueError("no segments accumulated")
+        return self._seg
+
+
 class GenerationalIndex:
     """L0..Ln immutable sorted segments + size-ratio compaction (an LSM tree).
 
@@ -357,13 +444,21 @@ class GenerationalIndex:
 
     def ingest(self, stats: NGramStats) -> dict:
         """Freeze a job delta into L0, then compact.  Returns a report dict
-        (rows ingested, merges performed, live segment row counts)."""
+        (rows ingested, merges performed, live segment row counts).
+
+        An *empty* delta (e.g. an all-PAD wave of the streaming ingest path)
+        bumps the generation -- readers must still observe the swap -- but
+        inserts no segment: an all-sentinel L0 would cost every future query
+        a full per-segment dispatch for nothing.
+        """
         if int(stats.grams.shape[1]) != self.sigma:
             raise ValueError(
                 f"delta sigma {int(stats.grams.shape[1])} != index sigma "
                 f"{self.sigma}")
-        self.levels.insert(0, self._freeze(stats))
-        merges = self._compact()
+        merges = 0
+        if len(stats):
+            self.levels.insert(0, self._freeze(stats))
+            merges = self._compact()
         self.generation += 1
         return {"ingested_rows": len(stats), "merges": merges,
                 "segment_rows": [ix.n_rows for ix in self.levels]}

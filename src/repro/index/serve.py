@@ -145,18 +145,24 @@ def shard_generational(gen: GenerationalIndex, *, mesh, axis_name: str = "data",
     Layout defaults follow the generational index's own (``compress`` /
     ``block_size``); each segment gets its own probe-passed sharded build, so
     per-segment shard stacks keep a common treedef while segments of different
-    generations keep their own capacities.
+    generations keep their own capacities.  Empty segments (a generation
+    bootstrapped from an empty job, or indexes built before
+    ``GenerationalIndex.ingest`` started dropping empty deltas) are skipped
+    when a non-empty one exists: an all-sentinel shard stack would cost every
+    query batch a full hash-routed round trip to add zeros.
     """
     if not gen.segments:
         raise ValueError("cannot shard an empty GenerationalIndex")
     compress = gen.compress if compress is None else compress
     block_size = gen.block_size if block_size is None else block_size
+    segments = [ix for ix in gen.segments if ix.n_rows] or \
+        list(gen.segments[:1])
     shards = tuple(
         build_sharded_index(segment_to_stats(ix.to_segment()),
                             vocab_size=gen.vocab_size, mesh=mesh,
                             axis_name=axis_name, compress=compress,
                             block_size=block_size)
-        for ix in gen.segments)
+        for ix in segments)
     return ShardedGenerationalIndex(shards=shards, generation=gen.generation,
                                     mesh=mesh, axis_name=axis_name)
 

@@ -15,6 +15,26 @@ def make_production_mesh(*, multi_pod: bool = False):
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def pin_host_device_count(n: int) -> None:
+    """Force the host platform to expose ``n`` devices (the launchers'
+    ``--devices`` flag).  Rewrites XLA_FLAGS -- any pre-set device-count flag
+    is dropped, the rest is kept -- and must run before the first jax backend
+    initialization (importing this module is safe; creating an array is not).
+    """
+    import os
+    import re
+    prev = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                  os.environ.get("XLA_FLAGS", ""))
+    flag = f"--xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = f"{prev.strip()} {flag}".strip()
+
+
+def make_data_mesh(n: int):
+    """1-D ``n``-way data mesh -- the shape every ``--devices N`` driver uses."""
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
 def make_host_mesh(model: int = 1):
     """Whatever this host actually has (tests / examples): 1-D data mesh or a
     (data, model) grid when enough local devices exist."""

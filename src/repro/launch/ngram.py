@@ -5,15 +5,15 @@
 
 Runs the selected method on a synthetic corpus with the paper's measurement
 counters (wallclock / records / bytes), optionally with maximality/closedness
-post-filtering and time-series aggregation.
+post-filtering and time-series aggregation.  ``--wave-tokens`` streams the
+job out of core through the wave engine; ``--devices N`` runs it distributed
+on an N-way host mesh -- combined, every wave's stage pipeline shards over
+the mesh (the distributed-waves path).
 """
 from __future__ import annotations
 
 import argparse
 import time
-
-from repro.core import NGramConfig, extensions_filter, run_job
-from repro.data import corpus as corpus_mod
 
 
 def main() -> None:
@@ -34,7 +34,26 @@ def main() -> None:
                     help="out-of-core: run the job in fixed-size token waves "
                          "(repro.pipeline.WaveExecutor); output is "
                          "bit-identical to the monolithic run")
+    ap.add_argument("--accumulator", default="tiered",
+                    choices=["tiered", "pairwise"],
+                    help="wave-partial fold policy: size-tiered LSM rungs "
+                         "(amortized O(total log waves) merge work) or the "
+                         "pairwise one-segment baseline")
+    ap.add_argument("--devices", type=int, default=0,
+                    help=">1: run distributed on an N-way host mesh (sets "
+                         "XLA_FLAGS; with --wave-tokens, shards every wave)")
     args = ap.parse_args()
+    if args.devices > 1:
+        from repro.launch.mesh import pin_host_device_count
+        pin_host_device_count(args.devices)   # before the first backend init
+
+    from repro.core import NGramConfig, extensions_filter, run_job
+    from repro.data import corpus as corpus_mod
+
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.devices)
 
     prof = corpus_mod.PROFILES[args.profile]
     if args.series:
@@ -57,10 +76,12 @@ def main() -> None:
         if args.series:
             raise SystemExit("--wave-tokens does not support --series "
                              "(bucketed counts need a single-wave job)")
-        stats = WaveExecutor(cfg, wave_tokens=args.wave_tokens).run(tokens)
+        stats = WaveExecutor(cfg, wave_tokens=args.wave_tokens,
+                             accumulator=args.accumulator,
+                             mesh=mesh).run(tokens)
     else:
         kw = {"bucket_ids": years} if args.series else {}
-        stats = run_job(tokens, cfg, **kw)
+        stats = run_job(tokens, cfg, mesh=mesh, **kw)
     dt = time.time() - t0
     if args.filter:
         stats = extensions_filter(stats, args.filter)

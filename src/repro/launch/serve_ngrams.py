@@ -22,7 +22,6 @@ i+1 before materializing batch i -- jax's async dispatch does the overlap, no
 from __future__ import annotations
 
 import argparse
-import os
 import time
 from collections import OrderedDict
 
@@ -116,41 +115,16 @@ class LRUQueryCache:
         return self.hits / n if n else 0.0
 
 
-class DoubleBufferedDriver:
-    """Overlap host-side batching with device execution.
-
-    ``submit`` dispatches batch i+1 (``answer`` must return its result
-    *unmaterialized* -- device arrays or a record holding them) and only then
-    materializes batch i's via ``collect`` -- jax's async dispatch runs the new
-    batch while the host reads the old one, with no ``jax.block_until_ready``
-    anywhere on the hot path.  ``submit`` returns (previous batch's collected
-    result, its submit-time payload); ``drain`` flushes the last in-flight
-    batch.
-    """
-
-    def __init__(self, answer, collect=None):
-        self._answer = answer
-        self._collect = collect
-        self._pending = None
-
-    def _materialize(self, out):
-        if self._collect is not None:
-            return self._collect(out)
-        import numpy as np
-        return np.asarray(out)
-
-    def submit(self, *args, tag=None):
-        out = self._answer(*args)
-        prev, self._pending = self._pending, (out, tag)
-        if prev is None:
-            return None, None
-        return self._materialize(prev[0]), prev[1]
-
-    def drain(self):
-        if self._pending is None:
-            return None, None
-        (out, tag), self._pending = self._pending, None
-        return self._materialize(out), tag
+def __getattr__(name):
+    # The submit/collect overlap driver now lives with the wave engine (its
+    # other consumer: double-buffered wave ingest).  The re-export for
+    # existing users is lazy (PEP 562): importing repro.pipeline at module
+    # scope would pull in jnp constants and initialize the jax backend before
+    # main() can set the --devices XLA flag.
+    if name == "DoubleBufferedDriver":
+        from repro.pipeline.executor import DoubleBufferedDriver
+        return DoubleBufferedDriver
+    raise AttributeError(name)
 
 
 class StreamingNGramService:
@@ -166,15 +140,19 @@ class StreamingNGramService:
     def __init__(self, cfg, *, compress: bool = False,
                  use_kernels: bool = False, cache_capacity: int = 65536,
                  size_ratio: int = 4, route: str = "merge",
-                 wave_tokens: int | None = None):
+                 wave_tokens: int | None = None, mesh=None,
+                 axis_name: str = "data"):
         from repro.index import GenerationalIndex
         self.cfg = cfg
         self.use_kernels = use_kernels
         self.wave_tokens = wave_tokens
+        self.mesh = mesh
+        self.axis_name = axis_name
         self.gen = GenerationalIndex(
             sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
             size_ratio=size_ratio, route=route, use_kernels=use_kernels)
         self.cache = LRUQueryCache(cache_capacity)
+        self._wave_ex = None
 
     def ingest(self, tokens) -> dict:
         """Run the job phases over a token delta and swap the new L0 in.
@@ -182,17 +160,24 @@ class StreamingNGramService:
         With ``wave_tokens`` set, the delta streams through the wave engine
         (``repro.pipeline.WaveExecutor``) instead of one monolithic job: the
         device only ever holds one wave of job state, so a delta (or an
-        initial corpus) larger than device memory ingests end to end.  The
-        resulting stats are bit-identical either way.
+        initial corpus) larger than device memory ingests end to end.  A
+        ``mesh`` shards the work over its devices -- each wave's stage
+        pipeline when waves are on, the ordinary distributed job otherwise.
+        The resulting stats are bit-identical every way.
         """
         t0 = time.perf_counter()
         if self.wave_tokens is not None:
-            from repro.pipeline import WaveExecutor
-            stats = WaveExecutor(self.cfg,
-                                 wave_tokens=self.wave_tokens).run(tokens)
+            if self._wave_ex is None:   # reuse: compiled programs carry over
+                from repro.pipeline import WaveExecutor
+                self._wave_ex = WaveExecutor(self.cfg,
+                                             wave_tokens=self.wave_tokens,
+                                             mesh=self.mesh,
+                                             axis_name=self.axis_name)
+            stats = self._wave_ex.run(tokens)
         else:
             from repro.core import run_job
-            stats = run_job(tokens, self.cfg)
+            stats = run_job(tokens, self.cfg, mesh=self.mesh,
+                            axis_name=self.axis_name)
         t_job = time.perf_counter() - t0
         t0 = time.perf_counter()
         report = self.gen.ingest(stats)
@@ -257,6 +242,7 @@ class StreamingNGramService:
         dispatched before batch i's device result is materialized, so host
         batching/cache work overlaps device execution with no
         ``block_until_ready`` anywhere."""
+        from repro.pipeline.executor import DoubleBufferedDriver
         drv = DoubleBufferedDriver(self._submit_lookup,
                                    collect=self._collect_lookup)
         results: list = []
@@ -324,12 +310,21 @@ def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
 
 
 def run_streaming(args) -> None:
-    """Generational serving loop: base build, then ingest/query interleave."""
+    """Generational serving loop: base build, then ingest/query interleave.
+
+    ``--devices N`` (with ``--wave-tokens``) runs every ingest wave's stage
+    pipeline sharded over an N-way host mesh -- the distributed-waves path;
+    queries stay on the generational single-device fold.
+    """
     import numpy as np
     from repro.core.stats import NGramConfig
     from repro.data import corpus as corpus_mod
     from repro.index.merge import segment_to_stats
 
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.devices)
     prof = corpus_mod.PROFILES[args.profile]
     tokens = corpus_mod.zipf_corpus(args.tokens, prof, seed=0,
                                     duplicate_frac=0.02)
@@ -338,7 +333,7 @@ def run_streaming(args) -> None:
     svc = StreamingNGramService(cfg, compress=args.compress,
                                 use_kernels=args.use_kernels,
                                 cache_capacity=args.cache_capacity,
-                                wave_tokens=args.wave_tokens)
+                                wave_tokens=args.wave_tokens, mesh=mesh)
     nb = max(args.ingest_batches, 1)
     base, rest = np.split(tokens, [int(len(tokens) * 0.6)])
     deltas = np.array_split(rest, nb)
@@ -415,19 +410,15 @@ def main() -> None:
                     help="query micro-batch size of the streaming loop")
     ap.add_argument("--cache-capacity", type=int, default=65536)
     args = ap.parse_args()
+    if args.devices > 1:
+        # --devices always wins; must run before the first jax backend init,
+        # so it precedes both serving modes
+        from repro.launch.mesh import pin_host_device_count
+        pin_host_device_count(args.devices)
     if args.streaming:
         run_streaming(args)
         return
-    if args.devices > 1:
-        # --devices always wins: drop any pre-set device-count flag, keep the
-        # rest of XLA_FLAGS, and append ours
-        import re
-        prev = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
-                      os.environ.get("XLA_FLAGS", ""))
-        flag = f"--xla_force_host_platform_device_count={args.devices}"
-        os.environ["XLA_FLAGS"] = f"{prev.strip()} {flag}".strip()
 
-    import jax
     import numpy as np
     from repro import index as index_mod
     from repro.core import run_job
@@ -443,8 +434,8 @@ def main() -> None:
     t_job = time.time() - t0
     t0 = time.time()
     if args.devices > 1:
-        mesh = jax.make_mesh((args.devices,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.devices)
         sharded = index_mod.build_sharded_index(stats, vocab_size=prof.vocab_size,
                                                 mesh=mesh,
                                                 compress=args.compress)

@@ -7,11 +7,13 @@ descriptions; ``stages`` holds the one shared implementation of each stage;
 out-of-core corpora through the device and into the generational index.
 """
 from . import plan, stages
-from .executor import WaveExecutor, run_plan
+from .executor import (DoubleBufferedDriver, WaveExecutor, reset_stage_cache,
+                       run_plan)
 from .plan import (CombineStage, JobPlan, MapStage, ReduceStage, ShuffleStage,
                    SortStage, plan_for)
 from .stages import canonical_stats
 
 __all__ = ["plan", "stages", "WaveExecutor", "run_plan", "JobPlan",
            "MapStage", "CombineStage", "ShuffleStage", "SortStage",
-           "ReduceStage", "plan_for", "canonical_stats"]
+           "ReduceStage", "plan_for", "canonical_stats",
+           "DoubleBufferedDriver", "reset_stage_cache"]

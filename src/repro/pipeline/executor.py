@@ -3,8 +3,8 @@
 The monolithic single-device jobs in ``repro.core`` hold the whole token
 array (and every intermediate record buffer) on the device at once, so corpus
 size is capped by HBM.  Hadoop never has that cap: it streams splits through
-map -> combine -> shuffle -> sort -> reduce.  :class:`WaveExecutor` restores
-the streaming shape on a single device:
+map -> combine -> shuffle -> sort -> reduce *across machines*.
+:class:`WaveExecutor` restores the streaming shape:
 
   * the corpus stays host-resident; fixed-size token *waves* (plus a
     ``sigma - 1`` token halo from the next wave, exactly the ppermute halo of
@@ -13,12 +13,28 @@ the streaming shape on a single device:
   * each wave runs the method's :class:`~repro.pipeline.plan.JobPlan` through
     one jitted stage pipeline (combine -> sort -> reduce, record buffers
     donated), compiled once and reused by every wave;
+  * wave dispatch is **double-buffered** (:class:`DoubleBufferedDriver`): wave
+    ``i + 1``'s h2d copy and stage program are submitted before wave ``i``'s
+    results are materialized, so jax's async dispatch overlaps device work
+    with the host-side fold.  No per-wave host syncs ride the hot path --
+    counters stay device scalars until collect time;
   * per-wave partials are produced at ``tau = 1`` -- a gram below tau in every
     wave can still be frequent globally, so nothing may be dropped early --
-    and folded through the *segment merge* path (``index/merge.py``): the
-    accumulator is a sorted :class:`~repro.index.build.IndexSegment`, never a
-    host dict, so the final output is bit-identical to the monolithic job
-    (canonical order; the global tau filter runs once at the end).
+    and folded through the *segment merge* path (``index/merge.py``).  The
+    fold is **size-tiered** (:class:`~repro.index.merge.TieredSegmentAccumulator`,
+    the LSM discipline of ``GenerationalIndex``): amortized O(total log waves)
+    merge work instead of the O(waves * total) of folding every wave into one
+    running segment.  Either accumulator yields the same sorted segment, so
+    the final output stays bit-identical to the monolithic job (canonical
+    order; the global tau filter runs once at the end);
+  * with a ``mesh``, every wave is **distributed**: the wave's extended
+    window shards contiguously over the mesh axis and runs through a
+    ``shard_map`` stage program that reuses the per-method jobs' own plumbing
+    -- the ppermute sigma-1 halo between neighbor shards and the
+    hash-partitioned ``all_to_all`` shuffle (``mapreduce.shuffle``) with
+    counted-overflow capacity retries.  Per-wave *sharded* partials fold
+    through the same segment path, so the distributed wave run is
+    bit-identical to the monolithic single-device job too.
 
 ``run_streaming`` closes the loop with serving: each wave's partial goes
 straight into :class:`~repro.index.merge.GenerationalIndex` ingest, so a
@@ -45,24 +61,33 @@ from repro.pipeline.plan import JobPlan, plan_for
 
 _SKEW_BUCKETS = 64   # nominal reducer count for the shuffle-skew counter
 
-_STAGE_CORE = None   # jitted lazily: donation depends on the backend, and
-                     # resolving the backend at import time would freeze it
-                     # before callers can set XLA_FLAGS / platform config
+# jitted stage programs keyed by backend: buffer donation is decided per
+# backend (a no-op with a warning on CPU), and the backend can change between
+# calls (tests flip platforms, a driver may move from CPU warmup to TPU), so
+# the decision must never be frozen at first call
+_STAGE_CORE: dict[str, object] = {}
+
+
+def reset_stage_cache() -> None:
+    """Drop the jitted stage programs (tests / backend reconfiguration)."""
+    _STAGE_CORE.clear()
 
 
 def _stage_core(records, **kw):
-    global _STAGE_CORE
-    if _STAGE_CORE is None:
+    backend = jax.default_backend()
+    fn = _STAGE_CORE.get(backend)
+    if fn is None:
         # buffer donation is a no-op (with a warning) on CPU; donate only
         # where it helps
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        _STAGE_CORE = partial(
+        donate = (0,) if backend != "cpu" else ()
+        fn = partial(
             jax.jit, donate_argnums=donate,
             static_argnames=("n_lanes", "has_bucket", "combine_route",
                              "use_kernels", "sigma", "lane_vocab",
                              "shuffle_key", "reduce_kind", "with_positions",
                              "n_buckets"))(_stage_core_impl)
-    return _STAGE_CORE(records, **kw)
+        _STAGE_CORE[backend] = fn
+    return fn(records, **kw)
 
 
 def _stage_core_impl(records, *, n_lanes: int, has_bucket: bool,
@@ -100,7 +125,13 @@ def _stage_core_impl(records, *, n_lanes: int, has_bucket: bool,
 
 def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
                 tau_eff: int, counters: dict):
-    """All of a plan's rounds over one token window -> merged ``NGramStats``."""
+    """All of a plan's rounds over one token window -> merged ``NGramStats``.
+
+    The *synchronous* interpreter ``run_plan`` uses: per-round host
+    materialization (tau-filtered carries, ``stop_on_empty``), legacy
+    monolithic counter semantics.  The wave hot path uses the async
+    ``WaveExecutor._submit_wave`` / ``_collect_wave`` pair instead.
+    """
     from repro.core.stats import NGramStats, add_counters
 
     lane_vocab = plan.effective_lane_vocab(cfg)
@@ -163,42 +194,120 @@ def run_plan(tokens, cfg, bucket_ids=None, plan: JobPlan | None = None):
     return stages.canonical_stats(out)
 
 
+class DoubleBufferedDriver:
+    """Overlap host-side work with device execution.
+
+    ``submit`` dispatches batch i+1 (``answer`` must return its result
+    *unmaterialized* -- device arrays or a record holding them) and only then
+    materializes batch i's via ``collect`` -- jax's async dispatch runs the new
+    batch while the host reads the old one, with no ``jax.block_until_ready``
+    anywhere on the hot path.  ``submit`` returns (previous batch's collected
+    result, its submit-time payload); ``drain`` flushes the last in-flight
+    batch.
+
+    Shared by the serving loop (``launch/serve_ngrams.py``, where it overlaps
+    query batching with device lookups) and the wave engine's ingest loop
+    (where it overlaps wave i+1's h2d/compute with wave i's host-side fold).
+    """
+
+    def __init__(self, answer, collect=None):
+        self._answer = answer
+        self._collect = collect
+        self._pending = None
+
+    def _materialize(self, out):
+        if self._collect is not None:
+            return self._collect(out)
+        return np.asarray(out)
+
+    def submit(self, *args, tag=None):
+        out = self._answer(*args)
+        prev, self._pending = self._pending, (out, tag)
+        if prev is None:
+            return None, None
+        return self._materialize(prev[0]), prev[1]
+
+    def drain(self):
+        if self._pending is None:
+            return None, None
+        (out, tag), self._pending = self._pending, None
+        return self._materialize(out), tag
+
+
+def _merge_wave_counters(dst: dict, src: dict) -> None:
+    """Fold one wave's counters into the run totals (sums; skew is a max)."""
+    for key, v in src.items():
+        if key == "shuffle_skew":
+            dst[key] = max(dst.get(key, 0.0), v)
+        else:
+            dst[key] = dst.get(key, 0) + v
+
+
 class WaveExecutor:
     """Run a :class:`JobPlan` over fixed-size token waves (out-of-core).
 
     ``wave_tokens`` bounds the device-resident working set; ``None`` (or a
     wave at least the corpus size) degenerates to one wave.  Waves execute at
-    ``tau = 1`` and fold into one sorted segment via ``index/merge.py``
-    (``merge_route``: ``"sort"`` = one fused re-sort per fold, the fastest
-    eager route on CPU; ``"merge"`` = pairwise merge-path); :meth:`run`
-    applies the global tau once at the end, so for any wave size the output
-    is bit-identical to the monolithic job.
+    ``tau = 1`` and fold through ``index/merge.py`` segments under the
+    ``accumulator`` policy (``"tiered"`` = size-tiered LSM rung stack,
+    amortized O(total log waves) merge work; ``"pairwise"`` = the legacy
+    fold-every-wave-into-one-segment baseline, O(waves x total));
+    ``merge_route``: ``"sort"`` = one fused re-sort per fold, the fastest
+    eager route on CPU; ``"merge"`` = pairwise merge-path.  :meth:`run`
+    applies the global tau once at the end, so for any wave size (and either
+    accumulator) the output is bit-identical to the monolithic job.
 
-    Memory model: device footprint is O(wave * sigma) records per stage; the
-    running segment lives wherever ``index/merge.py`` keeps it and holds the
-    *exact* (tau=1) gram set seen so far -- the unavoidable state of any exact
-    out-of-core counter.  Restrictions: bucketed time series (``n_buckets``)
-    need cross-wave bucket columns the segment fold does not carry, so waves
+    With a ``mesh`` (size > 1), each wave's stage pipeline shards over
+    ``axis_name``: contiguous token slices per shard, the distributed jobs'
+    own ppermute sigma-1 halo between neighbors, and the hash-partitioned
+    ``all_to_all`` shuffle with counted-overflow capacity retries.  Per-wave
+    sharded partials still fold through the segment path, so the distributed
+    run stays bit-identical to the single-device one.
+
+    Memory model: device footprint is O(wave * sigma) records per stage (per
+    shard when distributed); the running segments live wherever
+    ``index/merge.py`` keeps them and together hold the *exact* (tau=1) gram
+    set seen so far -- the unavoidable state of any exact out-of-core
+    counter.  Restrictions: bucketed time series (``n_buckets``) need
+    cross-wave bucket columns the segment fold does not carry, so waves
     require ``n_buckets == 0``.
     """
 
     def __init__(self, cfg, *, wave_tokens: int | None = None,
-                 plan: JobPlan | None = None, merge_route: str = "sort"):
+                 plan: JobPlan | None = None, merge_route: str = "sort",
+                 accumulator: str = "tiered", mesh=None,
+                 axis_name: str = "data"):
         if wave_tokens is not None and wave_tokens < 1:
             raise ValueError("wave_tokens must be >= 1")
         if cfg.n_buckets:
             raise ValueError("wave execution does not support n_buckets "
                              "(bucketed series need the bucket-carrying "
                              "single job -- run_job / run_plan)")
+        if accumulator not in ("tiered", "pairwise"):
+            raise ValueError(f"unknown accumulator {accumulator!r} "
+                             "(options: 'tiered', 'pairwise')")
         self.cfg = cfg
         self.wave_tokens = wave_tokens
         self.plan = plan or plan_for(cfg)
         self.merge_route = merge_route
+        self.accumulator = accumulator
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self._mesh_programs: dict = {}   # (k, capacity, has_carry, n_local)
+        self._emit_rows_cache: dict = {}
 
     # --- wave iteration ------------------------------------------------------ #
 
     def _windows(self, tokens: np.ndarray):
-        """Yield (tok_ext [wave + sigma - 1], n_live) fixed-shape windows."""
+        """Yield (tok_ext [wave + sigma - 1], n_live) fixed-shape windows.
+
+        ``n_live`` is the *true* number of corpus tokens in the wave -- the
+        final wave of a corpus that is not a multiple of ``wave_tokens`` gets
+        a partial count, so the emit's live mask (positions ``< n_live``)
+        excludes the zero-padded tail outright instead of leaning on the
+        reserved-PAD convention (``NGramConfig.validate_tokens``) to mask
+        phantom tail grams.
+        """
         n = int(tokens.shape[0])
         wave = self.wave_tokens if self.wave_tokens is not None else n
         wave = max(1, min(wave, n) if n else 1)
@@ -207,38 +316,293 @@ class WaveExecutor:
         padded = np.zeros((n_waves * wave + halo,), np.int32)
         padded[:n] = np.asarray(tokens, np.int32)
         for w in range(n_waves):
-            yield jnp.asarray(padded[w * wave: (w + 1) * wave + halo]), wave
+            n_live = max(0, min(wave, n - w * wave))
+            yield jnp.asarray(padded[w * wave: (w + 1) * wave + halo]), n_live
+
+    # --- single-device async wave dispatch ----------------------------------- #
+
+    def _submit_wave(self, tok_ext, n_live: int) -> dict:
+        """Dispatch one wave's rounds; nothing is materialized here.
+
+        The wave regime always runs at ``tau_eff = 1``, where carries are a
+        pure traceable function of the emit-side evidence (the contract
+        ``plan.py`` documents), so no round needs a host-synced ``stats_k``
+        and the whole wave -- counters included -- stays in flight until
+        :meth:`_collect_wave`.  ``stop_on_empty`` is skipped: an exhausted
+        round chain emits empty partials that fold to nothing.
+        """
+        cfg, plan = self.cfg, self.plan
+        lane_vocab = plan.effective_lane_vocab(cfg)
+        n_l = packing.n_lanes(cfg.sigma, lane_vocab)
+        combine_route = plan.combine.route if plan.combine is not None else None
+        carry = None
+        rounds = []
+        for k in range(1, plan.rounds + 1):
+            records, valid, emit_extras = plan.map.emit(
+                tok_ext, None, n_live, cfg, carry, k)
+            map_rec = jnp.sum(valid)          # device scalar: deferred
+            dense, shuffled, hist = _stage_core(
+                records, n_lanes=n_l, has_bucket=False,
+                combine_route=combine_route, use_kernels=cfg.use_kernels,
+                sigma=cfg.sigma, lane_vocab=lane_vocab,
+                shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
+                with_positions=plan.reduce.with_positions,
+                n_buckets=cfg.n_buckets)
+            rounds.append((dense[:3], map_rec, shuffled, hist))
+            if k < plan.rounds and plan.update_carry is not None:
+                carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
+                                          emit_extras, carry)
+        rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
+                                         n_meta=plan.map.n_meta)
+        return {"rounds": rounds, "rec_bytes": rec_bytes}
+
+    def _collect_wave(self, pend: dict):
+        """Materialize a submitted wave -> exact ``NGramStats`` partial."""
+        from repro.core.stats import NGramStats, add_counters
+
+        counters: dict = {}
+        out = None
+        for dense, map_rec, shuffled, hist in pend["rounds"]:
+            terms, flags, counts = (np.asarray(x) for x in dense)
+            stats_k = NGramStats.from_dense(terms, flags, counts, 1)
+            shuffled = int(shuffled)
+            hist = np.asarray(hist)
+            add_counters(counters, jobs=1, map_records=int(map_rec),
+                         shuffle_records=shuffled,
+                         shuffle_bytes=shuffled * pend["rec_bytes"])
+            if shuffled:
+                skew = float(hist.max() * _SKEW_BUCKETS / max(hist.sum(), 1))
+                counters["shuffle_skew"] = max(
+                    counters.get("shuffle_skew", 0.0), skew)
+            out = stats_k if out is None else out.merged_with(stats_k)
+        out.counters = counters
+        return out
+
+    # --- distributed (mesh) wave dispatch ------------------------------------ #
+
+    def _emit_rows(self, win_len: int, k: int) -> int:
+        """Map-emit record rows for a ``win_len``-token window (shape probe)."""
+        key = (win_len, k)
+        rows = self._emit_rows_cache.get(key)
+        if rows is None:
+            shape = jax.eval_shape(
+                lambda t: self.plan.map.emit(t, None, 0, self.cfg, None, k)[0],
+                jax.ShapeDtypeStruct((win_len,), jnp.int32))
+            rows = self._emit_rows_cache[key] = int(shape.shape[0])
+        return rows
+
+    def _mesh_program(self, k: int, capacity: int, has_carry: bool,
+                      n_local: int):
+        key = (k, capacity, has_carry, n_local)
+        fn = self._mesh_programs.get(key)
+        if fn is None:
+            fn = self._mesh_programs[key] = self._build_mesh_round(
+                k, capacity, has_carry, n_local)
+        return fn
+
+    def _build_mesh_round(self, k: int, capacity: int, has_carry: bool,
+                          n_local: int):
+        """One round's sharded stage program: the jobs' plumbing, reused.
+
+        Each shard owns a contiguous ``n_local``-token slice of the wave's
+        extended window, pulls its sigma-1 halo from the right neighbor via
+        ppermute (the last shard's halo is zeros -- the window already ends
+        in the wave-level halo, and nothing live reads past it), emits with a
+        shard-local live count, pre-aggregates, and exchanges records through
+        the hash-partitioned ``all_to_all`` shuffle so every gram's evidence
+        lands on one reducer shard.  Carries stay shard-local: at
+        ``tau_eff = 1`` a carry is a pure function of the shard's own
+        extended window (see ``plan.py``), which covers every position the
+        shard's live emits can consult.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        cfg, plan = self.cfg, self.plan
+        mesh, axis_name = self.mesh, self.axis_name
+        n_parts = mesh.shape[axis_name]
+        lane_vocab = plan.effective_lane_vocab(cfg)
+        n_l = packing.n_lanes(cfg.sigma, lane_vocab)
+        halo = cfg.sigma - 1
+        has_carry_out = plan.update_carry is not None and k < plan.rounds
+
+        def job(tok, n_live, *maybe_carry):
+            tok = tok[0]                                     # [n_local]
+            if halo:
+                perm = [(i, (i - 1) % n_parts) for i in range(n_parts)]
+                h = jax.lax.ppermute(tok[:halo], axis_name, perm)
+                is_last = jax.lax.axis_index(axis_name) == n_parts - 1
+                h = jnp.where(is_last, jnp.zeros_like(h), h)
+                tok_ext = jnp.concatenate([tok, h])
+            else:
+                tok_ext = tok
+            shard = jax.lax.axis_index(axis_name)
+            n_live_local = jnp.clip(n_live - shard * n_local, 0, n_local)
+            carry = maybe_carry[0][0] if has_carry else None
+            records, valid, emit_extras = plan.map.emit(
+                tok_ext, None, n_live_local, cfg, carry, k)
+            map_rec = jnp.sum(valid.astype(jnp.int32))
+            if plan.combine is not None:
+                records = stages.combine(records, n_l, False,
+                                         route=plan.combine.route,
+                                         use_kernels=cfg.use_kernels)
+            live = records[:, n_l] > 0
+            key = stages.partition_keys(records, n_l, kind=plan.shuffle.key,
+                                        vocab_size=lane_vocab)
+            skew = mr_shuffle.partition_ids(key, live, _SKEW_BUCKETS)
+            hist = jax.lax.psum(
+                jnp.bincount(skew, length=_SKEW_BUCKETS + 1)[:_SKEW_BUCKETS],
+                axis_name)
+            local, overflow = mr_shuffle.shuffle(
+                records, key, live, axis_name=axis_name, n_parts=n_parts,
+                capacity=capacity)
+            shuf = jax.lax.psum(jnp.sum(local[:, n_l] > 0), axis_name)
+            rec = stages.sort_stage(local, n_keys=n_l)
+            if plan.reduce.kind == "suffix":
+                terms, flags, counts = stages.reduce_suffix(
+                    rec, sigma=cfg.sigma, vocab_size=lane_vocab, n_buckets=0,
+                    use_kernels=cfg.use_kernels)
+            else:
+                # position payloads are only consumed by tau>1 carries, which
+                # the wave regime never takes -- skip the scatter
+                terms, flags, counts = stages.reduce_exact(
+                    rec, sigma=cfg.sigma, vocab_size=lane_vocab,
+                    with_positions=False)
+            if has_carry_out:
+                carry_out = plan.update_carry(cfg, 1, k, tok_ext, None, {},
+                                              emit_extras, carry)
+            else:
+                carry_out = jnp.zeros((1,), jnp.uint32)
+            cnt = jnp.stack([jax.lax.psum(map_rec, axis_name), shuf, overflow])
+            return (terms[None], flags[None], counts[None], carry_out[None],
+                    cnt[None], hist[None])
+
+        in_specs = [P(axis_name, None), P()]
+        if has_carry:
+            in_specs.append(P(axis_name, None))
+        return jax.jit(jax.shard_map(job, mesh=mesh, in_specs=tuple(in_specs),
+                                     out_specs=(P(axis_name),) * 6,
+                                     check_vma=False))
+
+    def _iter_wave_stats_mesh(self, tokens: np.ndarray):
+        """Per-wave exact partials with every wave sharded over the mesh."""
+        from repro.core.stats import NGramStats, add_counters
+
+        cfg, plan = self.cfg, self.plan
+        n_parts = self.mesh.shape[self.axis_name]
+        lane_vocab = plan.effective_lane_vocab(cfg)
+        rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
+                                         n_meta=plan.map.n_meta)
+        for tok_ext, n_live in self._windows(tokens):
+            win_len = int(tok_ext.shape[0])
+            # the one-hop ppermute halo pulls sigma-1 tokens from the right
+            # neighbor, so a shard's slice must be at least that long --
+            # tiny waves leave trailing shards all-pad (no live positions)
+            n_local = max(-(-win_len // n_parts), cfg.sigma - 1, 1)
+            tok_p = np.zeros((n_parts * n_local,), np.int32)
+            tok_p[:win_len] = np.asarray(tok_ext)
+            tok_p = jnp.asarray(tok_p.reshape(n_parts, n_local))
+            n_live_dev = jnp.int32(n_live)
+            counters: dict = {}
+            out = None
+            carry = None
+            for k in range(1, plan.rounds + 1):
+                rows = self._emit_rows(n_local + cfg.sigma - 1, k)
+                capacity = max(8, int(cfg.capacity_factor * rows / n_parts) + 1)
+                for attempt in range(6):   # overflow -> double capacity, rerun
+                    fn = self._mesh_program(k, capacity, carry is not None,
+                                            n_local)
+                    args = (tok_p, n_live_dev) + (
+                        (carry,) if carry is not None else ())
+                    terms, flags, counts, carry_out, cnt, hist = fn(*args)
+                    cnt_np = np.asarray(cnt)
+                    if int(cnt_np[0, 2]) == 0:
+                        break
+                    capacity *= 2
+                else:
+                    raise RuntimeError(
+                        f"wave shuffle overflow persisted at capacity "
+                        f"{capacity} (round {k})")
+                if attempt:   # capacity-doubling reruns, visible like the jobs'
+                    add_counters(counters, retries=attempt)
+                shuf = int(cnt_np[0, 1])
+                hist_np = np.asarray(hist)[0]
+                add_counters(counters, jobs=1, map_records=int(cnt_np[0, 0]),
+                             shuffle_records=shuf,
+                             shuffle_bytes=shuf * rec_bytes)
+                if shuf:
+                    skew = float(hist_np.max() * _SKEW_BUCKETS
+                                 / max(hist_np.sum(), 1))
+                    counters["shuffle_skew"] = max(
+                        counters.get("shuffle_skew", 0.0), skew)
+                terms, flags, counts = (np.asarray(terms), np.asarray(flags),
+                                        np.asarray(counts))
+                stats_k = None
+                for p in range(n_parts):
+                    part = NGramStats.from_dense(terms[p], flags[p],
+                                                 counts[p], 1)
+                    stats_k = part if stats_k is None else \
+                        stats_k.merged_with(part)
+                out = stats_k if out is None else out.merged_with(stats_k)
+                if plan.stop_on_empty and len(stats_k) == 0:
+                    break
+                if k < plan.rounds and plan.update_carry is not None:
+                    carry = carry_out
+            out.counters = counters
+            yield out
+
+    # --- public iteration ----------------------------------------------------- #
 
     def iter_wave_stats(self, tokens):
-        """Per-wave exact partials (``tau = 1``) -- the streaming delta feed."""
+        """Per-wave exact partials (``tau = 1``) -- the streaming delta feed.
+
+        Single-device waves are double-buffered: wave ``i + 1`` is dispatched
+        before wave ``i`` is materialized, so the consumer's host-side work
+        (segment folds, generational ingest) overlaps device execution.  With
+        a mesh, each wave runs sharded (overflow retries force a per-wave
+        sync, so mesh waves dispatch synchronously).
+        """
         tokens = np.asarray(tokens, np.int32)
+        self.cfg.validate_tokens(tokens)
+        if self.mesh is not None and self.mesh.size > 1:
+            yield from self._iter_wave_stats_mesh(tokens)
+            return
+        drv = DoubleBufferedDriver(self._submit_wave,
+                                   collect=self._collect_wave)
         for tok_ext, n_live in self._windows(tokens):
-            counters: dict = {}
-            yield _run_rounds(tok_ext, None, n_live, self.cfg, self.plan,
-                              1, counters)
+            res, _ = drv.submit(tok_ext, n_live)
+            if res is not None:
+                yield res
+        res, _ = drv.drain()
+        if res is not None:
+            yield res
 
     # --- whole-job execution ------------------------------------------------- #
 
     def run(self, tokens):
         """Execute the job over waves -> ``NGramStats`` (canonical order),
-        bit-identical to the monolithic single-job run."""
+        bit-identical to the monolithic single-job run.  ``fold_rows`` in the
+        counters is the total segment rows fed through ``merge_segments`` --
+        the accumulator's measured merge work."""
         from repro.core.stats import NGramStats
         from repro.index.build import segment_from_stats
-        from repro.index.merge import merge_segments, segment_to_stats
+        from repro.index.merge import (PairwiseSegmentAccumulator,
+                                       TieredSegmentAccumulator,
+                                       segment_to_stats)
 
         tokens = np.asarray(tokens, np.int32)
         counters = {"overflow": 0, "waves": 0}
-        acc = None
-        for tok_ext, n_live in self._windows(tokens):
+        acc_cls = (TieredSegmentAccumulator if self.accumulator == "tiered"
+                   else PairwiseSegmentAccumulator)
+        acc = acc_cls(route=self.merge_route,
+                      use_kernels=self.cfg.use_kernels)
+        for wave_stats in self.iter_wave_stats(tokens):
             counters["waves"] += 1
-            wave_stats = _run_rounds(tok_ext, None, n_live, self.cfg,
-                                     self.plan, 1, counters)
+            _merge_wave_counters(counters, wave_stats.counters)
             seg = segment_from_stats(wave_stats,
                                      vocab_size=self.cfg.vocab_size)
-            acc = seg if acc is None else merge_segments(
-                [acc, seg], route=self.merge_route,
-                use_kernels=self.cfg.use_kernels)
-        merged = segment_to_stats(acc)
+            acc.push(seg, n_rows=len(wave_stats))
+        merged = segment_to_stats(acc.result())
+        counters["fold_rows"] = acc.fold_rows
         keep = merged.counts >= self.cfg.tau
         return NGramStats(merged.grams[keep], merged.lengths[keep],
                           merged.counts[keep], counters)
@@ -251,8 +615,10 @@ class WaveExecutor:
         is frozen and ingested as a fresh L0 segment -- point/top-k answers
         over the resulting index match a from-scratch build over the full
         corpus at ``tau = 1`` exactly, while the device only ever holds one
-        wave of job state plus the serving artifacts.  Returns
-        ``(index, reports)`` with one ingest report per wave.
+        wave of job state plus the serving artifacts.  The wave feed is
+        double-buffered, so wave ``i + 1``'s device work overlaps wave
+        ``i``'s ingest/compaction.  Returns ``(index, reports)`` with one
+        ingest report per wave.
         """
         from repro.index.merge import GenerationalIndex
         if gen is None:

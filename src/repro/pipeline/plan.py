@@ -19,6 +19,17 @@ evidence over the whole extended window including the halo, never from the
 counted (live-position-only) output: a frequent-gram dictionary or occurrence
 mask that is blind to the halo would prune real occurrences at wave
 boundaries.  ``update_carry`` receives both and picks per ``tau_eff``.
+
+Traceability contract (async + distributed waves): under ``tau_eff == 1``,
+``update_carry`` must be a pure jnp-traceable function of
+``(cfg, k, tok_ext, emit_extras, carry)`` only -- ``stats_k`` may be ``None``
+and ``reduce_extras`` ``{}``.  The wave executor calls it inside the round's
+in-flight dispatch (no host-synced stats exist yet) and, under a mesh,
+inside the ``shard_map``-traced round program, where each shard computes its
+carry from its *own* extended window.  Shard-locality holds because a live
+position's candidate test only ever consults window positions within
+``sigma - 1`` tokens of the shard's slice -- exactly the ppermute halo the
+sharded window carries.
 """
 from __future__ import annotations
 

@@ -21,6 +21,15 @@ is the same MapReduce machinery, so it lives here once:
 All functions take and return static-shape arrays, so a jitted composition
 (one wave of :class:`~repro.pipeline.executor.WaveExecutor`, or a whole
 single-device job) compiles once per record shape.
+
+Reserved-id-0 convention: the validity masks here (``valid = terms != 0`` in
+the reducers, weight-lane zeroing in the combiners) all read token id 0 as
+"no token" -- the PAD / document-separator convention
+:class:`~repro.core.stats.NGramConfig` documents and
+``NGramConfig.validate_tokens`` range-checks.  Wave tail masking does NOT
+lean on it: the executor passes each wave's true live count, so the
+zero-padded tail past a partial final wave is excluded by position, and the
+zero checks only ever encode real document boundaries.
 """
 from __future__ import annotations
 

@@ -83,6 +83,158 @@ def test_wave_parity_sigma_exceeds_wave():
     check_wave_parity(toks, cfg, 3)
 
 
+@pytest.mark.parametrize("tail", [1, 2, 16])
+def test_wave_parity_corpus_not_multiple_of_wave(tail):
+    """The final partial wave carries a true live count (not the full wave):
+    a corpus of k*wave + tail tokens must stay bit-identical, down to a
+    single-token final wave."""
+    wave = 64
+    toks = np.asarray(make_corpus(400, 19, "zipf", seed=21))[: 5 * wave + tail]
+    assert len(toks) % wave == tail
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=19)
+    got = check_wave_parity(toks, cfg, wave)
+    assert got.counters["waves"] == 6
+
+
+def test_wave_halo_spans_corpus_tail():
+    """A halo reaching past the end of the corpus (the final wave's halo is
+    all padding) must neither truncate nor fabricate tail grams."""
+    wave = 7
+    toks = np.asarray(make_corpus(200, 11, "zipf", seed=23))
+    toks = toks[: (len(toks) // wave) * wave + 1]   # 1 live token + 4-pad halo
+    cfg = NGramConfig(sigma=5, tau=1, vocab_size=11)
+    got = check_wave_parity(toks, cfg, wave)
+    assert got.to_dict() == oracle.ngram_counts(toks, 5, 1)
+
+
+def test_wave_empty_corpus():
+    """Zero tokens: one empty wave, empty output, and a queryable (empty)
+    streaming index -- no crashes anywhere on the path."""
+    from repro.index import lookup
+
+    empty = np.zeros((0,), np.int32)
+    for method in ("suffix_sigma", "naive"):
+        cfg = NGramConfig(sigma=3, tau=1, vocab_size=9, method=method)
+        got = WaveExecutor(cfg, wave_tokens=8).run(empty)
+        assert len(got) == 0
+        assert got.counters["waves"] == 1
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=9)
+    gen, reports = WaveExecutor(cfg, wave_tokens=8).run_streaming(empty)
+    assert len(reports) == 1 and gen.generation == 1
+    assert gen.n_segments == 0      # empty deltas must not pile up segments
+    g = np.asarray([[1, 2, 0]], np.int32)
+    assert np.asarray(lookup(gen, g, np.asarray([2], np.int32)))[0] == 0
+
+
+# ------------------------------------------------------------ wave accumulator
+def test_accumulator_parity_and_fold_work_win():
+    """Both fold policies are bit-identical to the monolithic job; the tiered
+    rung stack does measurably less merge work at >= 16 waves."""
+    toks = make_corpus(2500, 50, "zipf", seed=31)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=50)
+    wave = -(-len(toks) // 16)
+    mono = run_job(toks, cfg)
+    tiered = WaveExecutor(cfg, wave_tokens=wave).run(toks)
+    pairwise = WaveExecutor(cfg, wave_tokens=wave,
+                            accumulator="pairwise").run(toks)
+    assert_stats_equal(tiered, mono)
+    assert_stats_equal(pairwise, mono)
+    assert tiered.counters["fold_rows"] < pairwise.counters["fold_rows"]
+
+
+def test_accumulator_rejects_unknown_policy():
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=9)
+    with pytest.raises(ValueError, match="accumulator"):
+        WaveExecutor(cfg, wave_tokens=8, accumulator="nope")
+
+
+def test_segment_accumulators_match_merge_oracle():
+    """Unit level: pushing per-wave segments through either accumulator gives
+    the segment a one-shot merge of everything would."""
+    from repro.index import (PairwiseSegmentAccumulator,
+                             TieredSegmentAccumulator, merge_segments,
+                             segment_from_stats, segment_to_stats)
+
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=15)
+    segs = []
+    for seed in range(6):
+        stats = run_job(make_corpus(150, 15, "zipf", seed=seed), cfg)
+        segs.append(segment_from_stats(stats, vocab_size=15))
+    want = segment_to_stats(merge_segments(segs, route="sort"))
+    for acc in (TieredSegmentAccumulator(route="sort", size_ratio=2),
+                PairwiseSegmentAccumulator(route="sort")):
+        for s in segs:
+            acc.push(s)
+        got = segment_to_stats(acc.result())
+        assert_stats_equal(got, want)
+        assert acc.fold_rows > 0
+    with pytest.raises(ValueError):
+        TieredSegmentAccumulator().result()
+
+
+# -------------------------------------------------------- reserved-id-0 guard
+def test_validate_tokens_rejects_out_of_range_ids():
+    """Ids past vocab_size would overflow their packed lane field and
+    fabricate grams; negative ids alias through the uint32 casts.  Both must
+    fail loudly at the wave-engine door (PAD id 0 stays legal)."""
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=9)
+    cfg.validate_tokens(np.asarray([0, 1, 9, 0, 3]))        # in range: fine
+    with pytest.raises(ValueError, match="reserved PAD"):
+        cfg.validate_tokens(np.asarray([1, 10, 2]))
+    with pytest.raises(ValueError, match="reserved PAD"):
+        cfg.validate_tokens(np.asarray([-1, 2, 3]))
+    ex = WaveExecutor(cfg, wave_tokens=4)
+    with pytest.raises(ValueError, match="token ids"):
+        ex.run(np.asarray([1, 2, 10]))
+    with pytest.raises(ValueError, match="token ids"):
+        ex.run_streaming(np.asarray([1, -2, 3]))
+
+
+# ------------------------------------------------------------- stage cache
+def test_stage_cache_keyed_by_backend_with_reset(monkeypatch):
+    """The jitted stage program's donation choice depends on the backend, so
+    the cache must key by it (never freeze the first caller's backend) and be
+    resettable for tests/reconfiguration."""
+    from repro.pipeline import executor, reset_stage_cache
+
+    toks = make_corpus(60, 9, "uniform", seed=1)
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=9)
+    run_job(toks, cfg)
+    real = jax_backend = executor.jax.default_backend()
+    assert jax_backend in executor._STAGE_CORE
+    cpu_fn = executor._STAGE_CORE[real]
+    monkeypatch.setattr(executor.jax, "default_backend", lambda: "faketpu")
+    # a "new backend" must get its own program, not reuse the frozen one
+    run_job(toks, cfg)
+    assert "faketpu" in executor._STAGE_CORE
+    assert executor._STAGE_CORE["faketpu"] is not cpu_fn
+    assert executor._STAGE_CORE[real] is cpu_fn    # old entry untouched
+    reset_stage_cache()
+    assert executor._STAGE_CORE == {}
+    monkeypatch.undo()
+    assert_stats_equal(run_job(toks, cfg),
+                       WaveExecutor(cfg, wave_tokens=13).run(toks))
+
+
+def test_generational_ingest_skips_empty_delta():
+    """An empty delta bumps the generation (cache invalidation) but must not
+    insert an all-sentinel segment that every later query pays for."""
+    from repro.core.stats import NGramStats
+    from repro.index import GenerationalIndex
+
+    gen = GenerationalIndex(sigma=3, vocab_size=9)
+    stats = run_job(make_corpus(200, 9, "zipf", seed=2),
+                    NGramConfig(sigma=3, tau=1, vocab_size=9))
+    gen.ingest(stats)
+    n_seg, g0 = gen.n_segments, gen.generation
+    empty = NGramStats(np.zeros((0, 3), np.int32), np.zeros((0,), np.int32),
+                       np.zeros((0,), np.int64))
+    rep = gen.ingest(empty)
+    assert rep["ingested_rows"] == 0 and rep["merges"] == 0
+    assert gen.n_segments == n_seg
+    assert gen.generation == g0 + 1
+
+
 # ----------------------------------------------------- randomized corpora
 def _parity_draw(method, vocab, dist, sigma, tau, wave_frac, seed):
     toks = make_corpus(350, vocab, dist, seed)
