@@ -214,6 +214,11 @@ def main() -> None:
                          "10%% ingest vs full rebuild (interleaved medians), "
                          "compaction cost, post-merge latency")
     args = ap.parse_args()
+    # live registry for the drive-loop latency histograms; snapshot rides the
+    # BENCH record so percentiles are diffable run over run
+    from repro.obs import metrics as obs_metrics
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
     ctx = _setup(args.tokens, max(args.queries, CONTRACT_BATCH), args.topk,
                  args.compress)
     rows = run(args.tokens, n_queries=args.queries, topk=args.topk,
@@ -223,9 +228,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    from repro.obs import report as obs_report
     record = {"tokens": args.tokens, "queries": args.queries,
               "compress": args.compress, "streaming": args.streaming,
-              "rows": rows}
+              "env": obs_report.environment_metadata(),
+              "metrics": reg.snapshot(), "rows": rows}
     # append-only history: the perf *trajectory*, not just the latest run
     runs = []
     try:

@@ -158,12 +158,46 @@ def run(n_tokens: int = 60_000, *, reps: int = 3) -> list[dict]:
                         f"vs_mono={us / mono_us:.2f}x"),
         })
 
+    # tracing-overhead cell: the same waves_N job with the tracer live.
+    # Acceptance gates: overhead < 1.05x the untraced median, and >= 90% of
+    # the root span's wall time attributed to named child spans.
+    from repro.obs import trace as obs_trace
+    nw = WAVE_COUNTS[-1]
+    wave = -(-n_tokens // nw)
+    t_tr = []
+    tracer = None
+    try:
+        for _ in range(reps):
+            tracer = obs_trace.enable_tracing()
+            t0 = time.perf_counter()
+            WaveExecutor(cfg, wave_tokens=wave).run(tokens)
+            t_tr.append(time.perf_counter() - t0)
+            obs_trace.disable_tracing()
+    finally:
+        obs_trace.disable_tracing()
+    us = float(np.median(t_tr) * 1e6)
+    base = float(np.median(lat[nw]) * 1e6)
+    cov = obs_trace.span_coverage(tracer.export(), "wave.run")
+    rows.append({"name": f"waves_traced_{nw}", "us": us,
+                 "derived": (f"overhead={us / base:.3f}x;"
+                             f"span_cov={cov:.3f}")})
+
+    # per-run metric snapshot: the job counters of the cells review diffs
+    # most (monolithic vs the deepest wave sweep), typed and env-stamped
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import report as obs_report
+    reg = obs_metrics.MetricsRegistry()
+    reg.merge_job_counters(last["mono"].counters, prefix="mono.")
+    reg.merge_job_counters(last[nw].counters, prefix=f"waves{nw}.")
+
     try:
         with open(BENCH_JSON) as f:
             prev = json.load(f).get("runs", [])
     except (FileNotFoundError, json.JSONDecodeError):
         prev = []
-    prev.append({"n_tokens": n_tokens, "reps": reps, "rows": rows})
+    prev.append({"n_tokens": n_tokens, "reps": reps, "rows": rows,
+                 "env": obs_report.environment_metadata(),
+                 "metrics": reg.snapshot()})
     with open(BENCH_JSON, "w") as f:
         json.dump({"runs": prev}, f, indent=2)
     return rows

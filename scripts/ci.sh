@@ -43,4 +43,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 60 \
 echo "examples smoke: out_of_core.py (corpus > device budget; 60s budget)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 60 \
     python examples/out_of_core.py > /dev/null
+
+echo "observability smoke: traced + metered wave job, then schema validation"
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 120 \
+    python -m repro.launch.ngram --tokens 20000 --sigma 3 --tau 5 \
+    --wave-tokens 4000 --trace "$OBS_TMP/trace.json" \
+    --metrics "$OBS_TMP/metrics.jsonl" > /dev/null
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report \
+    --validate-trace "$OBS_TMP/trace.json" \
+    --validate-metrics "$OBS_TMP/metrics.jsonl"
 echo "examples smoke: OK"

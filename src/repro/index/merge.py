@@ -43,6 +43,8 @@ from repro.core.stats import NGramStats
 from repro.mapreduce import pack as packing
 from repro.mapreduce import segment as mr_segment
 from repro.mapreduce import sort as mr_sort
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from ._layout import SENTINEL, pad_rows, round_capacity
 from .build import IndexSegment, NGramIndex, build_index, index_from_segment
 from .compress import CompressedNGramIndex, build_compressed_index, compress_index
@@ -160,6 +162,19 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
             raise ValueError(
                 f"segment meta mismatch: ({s.sigma}, {s.vocab_size}) vs "
                 f"({sigma}, {vocab})")
+    sp = obs_trace.span("merge.segments")
+    if sp:
+        sp.set(n_segments=len(segs),
+               rows_in=sum(int(s.keys.shape[0]) for s in segs))
+    sp.__enter__()
+    try:
+        return _merge_segments_body(segs, sigma, vocab, route=route,
+                                    use_kernels=use_kernels, pad_to=pad_to)
+    finally:
+        sp.__exit__(None, None, None)
+
+
+def _merge_segments_body(segs, sigma, vocab, *, route, use_kernels, pad_to):
     keys, counts = _merged_run(segs, route=route, use_kernels=use_kernels)
 
     # run boundaries (a row starts a run iff it differs from its predecessor,
@@ -410,6 +425,9 @@ class GenerationalIndex:
         self.use_kernels = use_kernels
         self.levels: list = []          # newest (L0) first
         self.generation = 0
+        # lifetime compaction accounting, surfaced through the metrics
+        # registry on every mutation (see _publish_metrics)
+        self.compaction_stats = {"ingests": 0, "merges": 0, "rows_merged": 0}
 
     # --- structure ----------------------------------------------------------- #
 
@@ -455,19 +473,33 @@ class GenerationalIndex:
             raise ValueError(
                 f"delta sigma {int(stats.grams.shape[1])} != index sigma "
                 f"{self.sigma}")
-        merges = 0
-        if len(stats):
-            self.levels.insert(0, self._freeze(stats))
-            merges = self._compact()
-        self.generation += 1
-        return {"ingested_rows": len(stats), "merges": merges,
-                "segment_rows": [ix.n_rows for ix in self.levels]}
+        with obs_trace.span("gen.ingest") as sp:
+            merges = 0
+            if len(stats):
+                with obs_trace.span("gen.freeze"):
+                    self.levels.insert(0, self._freeze(stats))
+                merges = self._compact()
+            self.generation += 1
+            self.compaction_stats["ingests"] += 1
+            self._publish_metrics()
+            if sp:
+                sp.set(rows=len(stats), merges=merges,
+                       segments=len(self.levels))
+            return {"ingested_rows": len(stats), "merges": merges,
+                    "segment_rows": [ix.n_rows for ix in self.levels]}
 
     def _merge_front(self, n: int) -> None:
         # elder segments first: merge-path ties keep generation order stable
-        merged = merge_indexes(list(reversed(self.levels[:n])),
-                               route=self.route, use_kernels=self.use_kernels)
-        self.levels[:n] = [merged]
+        with obs_trace.span("gen.compact") as sp:
+            rows_in = sum(ix.n_rows for ix in self.levels[:n])
+            merged = merge_indexes(list(reversed(self.levels[:n])),
+                                   route=self.route,
+                                   use_kernels=self.use_kernels)
+            self.levels[:n] = [merged]
+            self.compaction_stats["merges"] += 1
+            self.compaction_stats["rows_merged"] += rows_in
+            if sp:
+                sp.set(rows_in=rows_in, rows_out=merged.n_rows)
 
     def _compact(self) -> int:
         merges = 0
@@ -477,11 +509,32 @@ class GenerationalIndex:
             merges += 1
         return merges
 
+    def _publish_metrics(self) -> None:
+        """Push live structure + lifetime compaction stats to the registry.
+
+        A no-op (shared null singleton) when metrics are disabled; gauges
+        carry the current shape (rung sizes newest-first), counters mirror
+        the monotonic ``compaction_stats``.
+        """
+        reg = obs_metrics.get_registry()
+        if not reg:
+            return
+        reg.gauge("gen.generation").set(self.generation)
+        reg.gauge("gen.segments").set(self.n_segments)
+        reg.gauge("gen.rows").set(self.n_rows)
+        # rung sizes newest-first; bounded set of gauges (log-many rungs)
+        for i, ix in enumerate(self.levels):
+            reg.gauge(f"gen.rung{i}_rows").set(ix.n_rows)
+        for k, v in self.compaction_stats.items():
+            c = reg.counter(f"gen.{k}")
+            c.add(v - c.value)          # counters mirror the lifetime totals
+
     def compact_all(self) -> None:
         """Force-merge every live segment into one (maintenance/benchmarks)."""
         if len(self.levels) >= 2:
             self._merge_front(len(self.levels))
             self.generation += 1
+            self._publish_metrics()
 
 
 def generational_from_stats(stats: NGramStats, *, vocab_size: int,

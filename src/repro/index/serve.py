@@ -23,6 +23,7 @@ never dropped, and the driver retries with doubled capacity.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 
 import jax
@@ -33,6 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.stats import NGramStats
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from .build import NGramIndex, build_index
 from .compress import compress_index
 from .merge import (GenerationalIndex, merge_continuation_results,
@@ -352,15 +355,29 @@ def serve(sharded, grams, lengths, *, mode: str = "lookup",
     # b_local rows per (src, dst) pair is always enough -- the clamp makes small
     # batches retry-free while big batches keep the factor*B/P head-room sizing
     capacity = min(b_local, max(8, int(capacity_factor * b_local / n_parts) + 1))
-    for _ in range(max_retries):
-        server = _cached_server(sharded, mode, k, capacity, use_kernels)
-        out, overflow = server(sharded.index, jnp.asarray(g, jnp.int32),
-                               jnp.asarray(ln, jnp.int32))
-        if int(overflow) == 0:
-            break
-        capacity *= 2
-    else:
-        raise RuntimeError(f"query shuffle overflow persisted at {capacity}")
+    reg = obs_metrics.get_registry()
+    with obs_trace.span("serve.batch") as sp:
+        if sp:
+            sp.set(mode=mode, batch=b, parts=n_parts)
+        t0 = time.perf_counter()
+        for attempt in range(max_retries):
+            server = _cached_server(sharded, mode, k, capacity, use_kernels)
+            out, overflow = server(sharded.index, jnp.asarray(g, jnp.int32),
+                                   jnp.asarray(ln, jnp.int32))
+            if int(overflow) == 0:
+                break
+            capacity *= 2
+        else:
+            raise RuntimeError(
+                f"query shuffle overflow persisted at {capacity}")
+        if sp:
+            sp.set(retries=attempt, capacity=capacity)
+        if reg:
+            reg.counter("serve.batches").add(1)
+            reg.counter("serve.queries").add(b)
+            reg.counter("serve.retries").add(attempt)
+            reg.histogram("serve.batch_seconds").observe(
+                time.perf_counter() - t0)
     # np.array (not asarray): the device buffer view is read-only and the
     # empty-prefix overlay below writes into rows
     out = np.array(out).reshape(n_parts * b_local, -1)[:b]

@@ -42,6 +42,11 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help=">1: run distributed on an N-way host mesh (sets "
                          "XLA_FLAGS; with --wave-tokens, shards every wave)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export a Chrome/Perfetto trace_event JSON of the run")
+    ap.add_argument("--metrics", default=None, metavar="FILE",
+                    help="append a metrics snapshot (JSONL) and print the "
+                         "summary table")
     args = ap.parse_args()
     if args.devices > 1:
         from repro.launch.mesh import pin_host_device_count
@@ -49,6 +54,10 @@ def main() -> None:
 
     from repro.core import NGramConfig, extensions_filter, run_job
     from repro.data import corpus as corpus_mod
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import report as obs_report
+
+    finish_obs = obs_report.setup(args.trace, args.metrics)
 
     mesh = None
     if args.devices > 1:
@@ -85,6 +94,7 @@ def main() -> None:
     dt = time.time() - t0
     if args.filter:
         stats = extensions_filter(stats, args.filter)
+    obs_metrics.get_registry().merge_job_counters(stats.counters)
     print(f"method={args.method} sigma={args.sigma} tau={args.tau} "
           f"tokens={args.tokens}: {len(stats)} n-grams in {dt:.2f}s")
     print("counters:", {k: int(v) for k, v in stats.counters.items()})
@@ -92,6 +102,8 @@ def main() -> None:
     top = sorted(d.items(), key=lambda kv: -kv[1])[: args.top]
     for g, c in top:
         print(f"  cf={c:8d}  {g}")
+    finish_obs({"driver": "ngram", "method": args.method,
+                "tokens": args.tokens, "wall_s": dt})
 
 
 if __name__ == "__main__":

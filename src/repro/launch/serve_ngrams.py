@@ -77,6 +77,7 @@ class LRUQueryCache:
         self.generation = -1
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self._d: OrderedDict = OrderedDict()
 
     def _sync(self, generation: int) -> bool:
@@ -105,6 +106,7 @@ class LRUQueryCache:
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
+            self.evictions += 1
 
     def __len__(self) -> int:
         return len(self._d)
@@ -113,6 +115,24 @@ class LRUQueryCache:
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+    def snapshot(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._d),
+                "generation": self.generation, "hit_rate": self.hit_rate}
+
+    def publish_metrics(self, reg=None) -> None:
+        """Mirror lifetime cache stats into the active metrics registry."""
+        if reg is None:
+            from repro.obs import metrics as obs_metrics
+            reg = obs_metrics.get_registry()
+        if not reg:
+            return
+        for k in ("hits", "misses", "evictions"):
+            c = reg.counter("cache." + k)
+            c.add(getattr(self, k) - c.value)     # lifetime mirror, not +=
+        reg.gauge("cache.entries").set(len(self._d))
+        reg.gauge("cache.hit_rate").set(self.hit_rate)
 
 
 def __getattr__(name):
@@ -165,25 +185,32 @@ class StreamingNGramService:
         pipeline when waves are on, the ordinary distributed job otherwise.
         The resulting stats are bit-identical every way.
         """
-        t0 = time.perf_counter()
-        if self.wave_tokens is not None:
-            if self._wave_ex is None:   # reuse: compiled programs carry over
-                from repro.pipeline import WaveExecutor
-                self._wave_ex = WaveExecutor(self.cfg,
-                                             wave_tokens=self.wave_tokens,
-                                             mesh=self.mesh,
-                                             axis_name=self.axis_name)
-            stats = self._wave_ex.run(tokens)
-        else:
-            from repro.core import run_job
-            stats = run_job(tokens, self.cfg, mesh=self.mesh,
-                            axis_name=self.axis_name)
-        t_job = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        report = self.gen.ingest(stats)
-        report.update(job_s=t_job, ingest_s=time.perf_counter() - t0,
-                      segments=self.gen.n_segments,
-                      waves=stats.counters.get("waves", 1))
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        with obs_trace.span("svc.ingest") as sp:
+            t0 = time.perf_counter()
+            if self.wave_tokens is not None:
+                if self._wave_ex is None:  # reuse: compiled programs carry over
+                    from repro.pipeline import WaveExecutor
+                    self._wave_ex = WaveExecutor(self.cfg,
+                                                 wave_tokens=self.wave_tokens,
+                                                 mesh=self.mesh,
+                                                 axis_name=self.axis_name)
+                stats = self._wave_ex.run(tokens)
+            else:
+                from repro.core import run_job
+                stats = run_job(tokens, self.cfg, mesh=self.mesh,
+                                axis_name=self.axis_name)
+            t_job = time.perf_counter() - t0
+            obs_metrics.get_registry().merge_job_counters(stats.counters)
+            t0 = time.perf_counter()
+            report = self.gen.ingest(stats)
+            report.update(job_s=t_job, ingest_s=time.perf_counter() - t0,
+                          segments=self.gen.n_segments,
+                          waves=stats.counters.get("waves", 1))
+            if sp:
+                sp.set(tokens=len(tokens), rows=report.get("ingested_rows"),
+                       waves=report["waves"])
         return report
 
     def _submit_lookup(self, grams, lengths) -> dict:
@@ -242,17 +269,27 @@ class StreamingNGramService:
         dispatched before batch i's device result is materialized, so host
         batching/cache work overlaps device execution with no
         ``block_until_ready`` anywhere."""
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
         from repro.pipeline.executor import DoubleBufferedDriver
         drv = DoubleBufferedDriver(self._submit_lookup,
                                    collect=self._collect_lookup)
+        reg = obs_metrics.get_registry()
+        inflight = reg.gauge("serve.inflight")
         results: list = []
-        for g, ln in batches:
-            res, _ = drv.submit(g, ln)
+        with obs_trace.span("serve.pipelined") as sp:
+            for g, ln in batches:
+                inflight.add(1)               # one submitted, maybe one live
+                res, _ = drv.submit(g, ln)
+                if res is not None:
+                    inflight.add(-1)
+                    results.append(res)
+            res, _ = drv.drain()
+            inflight.set(0)
             if res is not None:
                 results.append(res)
-        res, _ = drv.drain()
-        if res is not None:
-            results.append(res)
+            if sp:
+                sp.set(batches=len(batches))
         return results
 
     def continuations(self, prefixes, p_len, *, k: int = 8):
@@ -289,9 +326,17 @@ class StreamingNGramService:
         return out
 
 
-def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
-    """Feed the stream through ``answer`` in fixed micro-batches; (qps, lat[s])."""
+def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2,
+                     hist_name: str = "drive.batch_seconds"):
+    """Feed the stream through ``answer`` in fixed micro-batches; (qps, lat[s]).
+
+    Timed batches also land in the ``hist_name`` registry histogram, so the
+    p50/p95/p99 the production frontend needs come out of the metrics export
+    as well as the returned sample list.
+    """
     import numpy as np
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
     n = grams.shape[0]
     n_batches = -(-n // batch)
     pad = n_batches * batch - n
@@ -299,13 +344,19 @@ def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2):
     ln = np.pad(lengths, (0, pad))
     for i in range(min(warmup, n_batches)):      # compile + cache warm
         answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
+    hist = obs_metrics.get_registry().histogram(hist_name)
     lat = []
-    t_all = time.perf_counter()
-    for i in range(n_batches):
-        t0 = time.perf_counter()
-        answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
-        lat.append(time.perf_counter() - t0)
-    qps = n / (time.perf_counter() - t_all)
+    with obs_trace.span("serve.drive") as sp:
+        t_all = time.perf_counter()
+        for i in range(n_batches):
+            t0 = time.perf_counter()
+            answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
+            dt = time.perf_counter() - t0
+            lat.append(dt)
+            hist.observe(dt)
+        qps = n / (time.perf_counter() - t_all)
+        if sp:
+            sp.set(batch=batch, n_batches=n_batches, qps=int(qps))
     return qps, lat
 
 
@@ -320,6 +371,7 @@ def run_streaming(args) -> None:
     from repro.core.stats import NGramConfig
     from repro.data import corpus as corpus_mod
     from repro.index.merge import segment_to_stats
+    from repro.obs import metrics as obs_metrics
 
     mesh = None
     if args.devices > 1:
@@ -365,16 +417,21 @@ def run_streaming(args) -> None:
         svc.lookup_pipelined(pipe_b)
         t_pipe = time.perf_counter() - t0
         lat = []
+        lat_hist = obs_metrics.get_registry().histogram("serve.lookup_seconds")
         for g, ln in sync_b:
             t1 = time.perf_counter()
             svc.lookup(g, ln)
-            lat.append(time.perf_counter() - t1)
+            dt = time.perf_counter() - t1
+            lat.append(dt)
+            lat_hist.observe(dt)
+        svc.cache.publish_metrics()
         n_pipe = sum(b[0].shape[0] for b in pipe_b)
         print(f"ingest[{step}]: {len(delta):>7} tokens in {t_ing:.2f}s "
               f"({len(delta) / t_ing:,.0f} tok/s; waves={rep['waves']} "
               f"merges={rep['merges']} segments={rep['segments']}) | pipelined "
               f"{n_pipe / t_pipe:>8,.0f} qps | sync {_percentiles(lat)} "
               f"cache_hit={svc.cache.hit_rate:.0%}")
+    svc.cache.publish_metrics()
     print(f"final: {svc.gen!r}, {svc.gen.nbytes / 2**20:.1f} MiB, "
           f"cache {len(svc.cache)} entries hit_rate={svc.cache.hit_rate:.0%}")
 
@@ -409,14 +466,22 @@ def main() -> None:
     ap.add_argument("--stream-batch", type=int, default=256,
                     help="query micro-batch size of the streaming loop")
     ap.add_argument("--cache-capacity", type=int, default=65536)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export a Chrome/Perfetto trace_event JSON of the run")
+    ap.add_argument("--metrics", default=None, metavar="FILE",
+                    help="append a metrics snapshot (JSONL) and print the "
+                         "summary table")
     args = ap.parse_args()
     if args.devices > 1:
         # --devices always wins; must run before the first jax backend init,
         # so it precedes both serving modes
         from repro.launch.mesh import pin_host_device_count
         pin_host_device_count(args.devices)
+    from repro.obs import report as obs_report
+    finish_obs = obs_report.setup(args.trace, args.metrics)
     if args.streaming:
         run_streaming(args)
+        finish_obs({"driver": "serve_ngrams", "mode": "streaming"})
         return
 
     import numpy as np
@@ -432,6 +497,8 @@ def main() -> None:
     t0 = time.time()
     stats = run_job(tokens, cfg)
     t_job = time.time() - t0
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.get_registry().merge_job_counters(stats.counters)
     t0 = time.time()
     if args.devices > 1:
         from repro.launch.mesh import make_data_mesh
@@ -481,9 +548,11 @@ def main() -> None:
 
     for mode, answer in (("lookup", answer_lookup), ("topk", answer_topk)):
         for batch in (int(b) for b in args.batch_sizes.split(",")):
-            qps, lat = microbatch_drive(answer, grams, lengths, batch)
+            qps, lat = microbatch_drive(answer, grams, lengths, batch,
+                                        hist_name=f"drive.{mode}_seconds")
             print(f"serve_{mode} batch={batch:>5} qps={qps:>10.0f} "
                   f"{_percentiles(lat)}")
+    finish_obs({"driver": "serve_ngrams", "mode": "microbatch"})
 
 
 if __name__ == "__main__":

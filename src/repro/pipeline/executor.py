@@ -56,6 +56,8 @@ import numpy as np
 
 from repro.mapreduce import pack as packing
 from repro.mapreduce import shuffle as mr_shuffle
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.pipeline import stages
 from repro.pipeline.plan import JobPlan, plan_for
 
@@ -144,18 +146,30 @@ def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
     out = None
     carry = None
     for k in range(1, plan.rounds + 1):
-        records, valid, emit_extras = plan.map.emit(
-            tok_ext, aux_ext, n_live, cfg, carry, k)
+        with obs_trace.span("round.emit") as sp:
+            if sp:
+                sp.set(round=k)
+            records, valid, emit_extras = plan.map.emit(
+                tok_ext, aux_ext, n_live, cfg, carry, k)
         map_rec = int(jnp.sum(valid))
-        dense, shuffled, hist = _stage_core(
-            records, n_lanes=n_l, has_bucket=has_bucket,
-            combine_route=combine_route, use_kernels=cfg.use_kernels,
-            sigma=cfg.sigma, lane_vocab=lane_vocab,
-            shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
-            with_positions=plan.reduce.with_positions,
-            n_buckets=cfg.n_buckets)
-        terms, flags, counts = (np.asarray(x) for x in dense[:3])
-        stats_k = NGramStats.from_dense(terms, flags, counts, tau_eff)
+        # combine -> shuffle-key -> sort -> reduce fuse into one jitted
+        # program, so the stage granularity under this span is the dispatch;
+        # the device time lands in the materialize span's sync below
+        with obs_trace.span("round.stages") as sp:
+            if sp:
+                sp.set(round=k)
+            dense, shuffled, hist = _stage_core(
+                records, n_lanes=n_l, has_bucket=has_bucket,
+                combine_route=combine_route, use_kernels=cfg.use_kernels,
+                sigma=cfg.sigma, lane_vocab=lane_vocab,
+                shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
+                with_positions=plan.reduce.with_positions,
+                n_buckets=cfg.n_buckets)
+        with obs_trace.span("round.materialize") as sp:
+            if sp:
+                sp.set(round=k)
+            terms, flags, counts = (np.asarray(x) for x in dense[:3])
+            stats_k = NGramStats.from_dense(terms, flags, counts, tau_eff)
         reduce_extras = ({"totals_pos": dense[3]}
                          if plan.reduce.with_positions else {})
         shuffled = int(shuffled)
@@ -186,12 +200,22 @@ def run_plan(tokens, cfg, bucket_ids=None, plan: JobPlan | None = None):
     bit-compared against.
     """
     plan = plan or plan_for(cfg)
-    tokens = jnp.asarray(tokens, jnp.int32)
-    aux = None if bucket_ids is None else jnp.asarray(bucket_ids, jnp.uint32)
-    counters = {"overflow": 0}
-    out = _run_rounds(tokens, aux, int(tokens.shape[0]), cfg, plan,
-                      cfg.tau, counters)
-    return stages.canonical_stats(out)
+    with obs_trace.span("plan.run") as sp:
+        if sp:
+            sp.set(method=cfg.method, rounds=plan.rounds)
+        tokens = jnp.asarray(tokens, jnp.int32)
+        aux = None if bucket_ids is None else jnp.asarray(bucket_ids,
+                                                          jnp.uint32)
+        # the full canonical counter set (obs.metrics.COUNTER_DOC), so the
+        # monolithic and wave paths expose identical keys with stable types
+        counters = dict.fromkeys(
+            ("jobs", "map_records", "shuffle_records", "shuffle_bytes",
+             "retries", "overflow"), 0)
+        counters["shuffle_skew"] = 0.0
+        out = _run_rounds(tokens, aux, int(tokens.shape[0]), cfg, plan,
+                          cfg.tau, counters)
+        out.counters = obs_metrics.normalize_counters(out.counters)
+        return stages.canonical_stats(out)
 
 
 class DoubleBufferedDriver:
@@ -235,12 +259,13 @@ class DoubleBufferedDriver:
 
 
 def _merge_wave_counters(dst: dict, src: dict) -> None:
-    """Fold one wave's counters into the run totals (sums; skew is a max)."""
-    for key, v in src.items():
-        if key == "shuffle_skew":
-            dst[key] = max(dst.get(key, 0.0), v)
-        else:
-            dst[key] = dst.get(key, 0) + v
+    """Fold one wave's counters into the run totals.
+
+    Delegates to the one shared policy (``repro.obs.metrics``): sums, except
+    the documented max-merged ratio keys (``shuffle_skew``).  The canonical
+    counter set and its semantics live in ``obs.metrics.COUNTER_DOC``.
+    """
+    obs_metrics.merge_counter_dicts(dst, src)
 
 
 class WaveExecutor:
@@ -313,11 +338,18 @@ class WaveExecutor:
         wave = max(1, min(wave, n) if n else 1)
         n_waves = max(1, -(-n // wave))
         halo = self.cfg.sigma - 1
-        padded = np.zeros((n_waves * wave + halo,), np.int32)
-        padded[:n] = np.asarray(tokens, np.int32)
+        with obs_trace.span("wave.window.pad") as sp:
+            if sp:
+                sp.set(n_waves=n_waves, wave_tokens=wave)
+            padded = np.zeros((n_waves * wave + halo,), np.int32)
+            padded[:n] = np.asarray(tokens, np.int32)
         for w in range(n_waves):
             n_live = max(0, min(wave, n - w * wave))
-            yield jnp.asarray(padded[w * wave: (w + 1) * wave + halo]), n_live
+            with obs_trace.span("wave.window.h2d") as sp:
+                if sp:
+                    sp.set(wave=w)
+                tok_ext = jnp.asarray(padded[w * wave: (w + 1) * wave + halo])
+            yield tok_ext, n_live
 
     # --- single-device async wave dispatch ----------------------------------- #
 
@@ -332,51 +364,67 @@ class WaveExecutor:
         round chain emits empty partials that fold to nothing.
         """
         cfg, plan = self.cfg, self.plan
-        lane_vocab = plan.effective_lane_vocab(cfg)
-        n_l = packing.n_lanes(cfg.sigma, lane_vocab)
-        combine_route = plan.combine.route if plan.combine is not None else None
-        carry = None
-        rounds = []
-        for k in range(1, plan.rounds + 1):
-            records, valid, emit_extras = plan.map.emit(
-                tok_ext, None, n_live, cfg, carry, k)
-            map_rec = jnp.sum(valid)          # device scalar: deferred
-            dense, shuffled, hist = _stage_core(
-                records, n_lanes=n_l, has_bucket=False,
-                combine_route=combine_route, use_kernels=cfg.use_kernels,
-                sigma=cfg.sigma, lane_vocab=lane_vocab,
-                shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
-                with_positions=plan.reduce.with_positions,
-                n_buckets=cfg.n_buckets)
-            rounds.append((dense[:3], map_rec, shuffled, hist))
-            if k < plan.rounds and plan.update_carry is not None:
-                carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
-                                          emit_extras, carry)
-        rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
-                                         n_meta=plan.map.n_meta)
-        return {"rounds": rounds, "rec_bytes": rec_bytes}
+        with obs_trace.span("wave.submit") as sp:
+            if sp:
+                sp.set(n_live=n_live, rounds=plan.rounds)
+            lane_vocab = plan.effective_lane_vocab(cfg)
+            n_l = packing.n_lanes(cfg.sigma, lane_vocab)
+            combine_route = plan.combine.route if plan.combine is not None \
+                else None
+            carry = None
+            rounds = []
+            for k in range(1, plan.rounds + 1):
+                records, valid, emit_extras = plan.map.emit(
+                    tok_ext, None, n_live, cfg, carry, k)
+                map_rec = jnp.sum(valid)          # device scalar: deferred
+                dense, shuffled, hist = _stage_core(
+                    records, n_lanes=n_l, has_bucket=False,
+                    combine_route=combine_route, use_kernels=cfg.use_kernels,
+                    sigma=cfg.sigma, lane_vocab=lane_vocab,
+                    shuffle_key=plan.shuffle.key,
+                    reduce_kind=plan.reduce.kind,
+                    with_positions=plan.reduce.with_positions,
+                    n_buckets=cfg.n_buckets)
+                rounds.append((dense[:3], map_rec, shuffled, hist))
+                if k < plan.rounds and plan.update_carry is not None:
+                    carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
+                                              emit_extras, carry)
+            rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
+                                             n_meta=plan.map.n_meta)
+            return {"rounds": rounds, "rec_bytes": rec_bytes}
 
     def _collect_wave(self, pend: dict):
-        """Materialize a submitted wave -> exact ``NGramStats`` partial."""
+        """Materialize a submitted wave -> exact ``NGramStats`` partial.
+
+        The ``np.asarray`` materializations here are the wave's one device
+        sync: the collect span's duration is host-visible device+transfer
+        time (the double-buffer's occupancy signal -- a collect much shorter
+        than its submit-to-submit gap means the device was idle).
+        """
         from repro.core.stats import NGramStats, add_counters
 
-        counters: dict = {}
-        out = None
-        for dense, map_rec, shuffled, hist in pend["rounds"]:
-            terms, flags, counts = (np.asarray(x) for x in dense)
-            stats_k = NGramStats.from_dense(terms, flags, counts, 1)
-            shuffled = int(shuffled)
-            hist = np.asarray(hist)
-            add_counters(counters, jobs=1, map_records=int(map_rec),
-                         shuffle_records=shuffled,
-                         shuffle_bytes=shuffled * pend["rec_bytes"])
-            if shuffled:
-                skew = float(hist.max() * _SKEW_BUCKETS / max(hist.sum(), 1))
-                counters["shuffle_skew"] = max(
-                    counters.get("shuffle_skew", 0.0), skew)
-            out = stats_k if out is None else out.merged_with(stats_k)
-        out.counters = counters
-        return out
+        with obs_trace.span("wave.collect") as sp:
+            counters: dict = {}
+            out = None
+            for dense, map_rec, shuffled, hist in pend["rounds"]:
+                terms, flags, counts = (np.asarray(x) for x in dense)
+                stats_k = NGramStats.from_dense(terms, flags, counts, 1)
+                shuffled = int(shuffled)
+                hist = np.asarray(hist)
+                add_counters(counters, jobs=1, map_records=int(map_rec),
+                             shuffle_records=shuffled,
+                             shuffle_bytes=shuffled * pend["rec_bytes"])
+                if shuffled:
+                    skew = float(hist.max() * _SKEW_BUCKETS
+                                 / max(hist.sum(), 1))
+                    counters["shuffle_skew"] = max(
+                        counters.get("shuffle_skew", 0.0), skew)
+                out = stats_k if out is None else out.merged_with(stats_k)
+            out.counters = counters
+            if sp:
+                sp.set(rows=len(out), shuffle_records=counters.get(
+                    "shuffle_records", 0))
+            return out
 
     # --- distributed (mesh) wave dispatch ------------------------------------ #
 
@@ -508,20 +556,23 @@ class WaveExecutor:
             for k in range(1, plan.rounds + 1):
                 rows = self._emit_rows(n_local + cfg.sigma - 1, k)
                 capacity = max(8, int(cfg.capacity_factor * rows / n_parts) + 1)
-                for attempt in range(6):   # overflow -> double capacity, rerun
-                    fn = self._mesh_program(k, capacity, carry is not None,
-                                            n_local)
-                    args = (tok_p, n_live_dev) + (
-                        (carry,) if carry is not None else ())
-                    terms, flags, counts, carry_out, cnt, hist = fn(*args)
-                    cnt_np = np.asarray(cnt)
-                    if int(cnt_np[0, 2]) == 0:
-                        break
-                    capacity *= 2
-                else:
-                    raise RuntimeError(
-                        f"wave shuffle overflow persisted at capacity "
-                        f"{capacity} (round {k})")
+                with obs_trace.span("wave.mesh.round") as sp_r:
+                    for attempt in range(6):   # overflow -> double, rerun
+                        fn = self._mesh_program(k, capacity, carry is not None,
+                                                n_local)
+                        args = (tok_p, n_live_dev) + (
+                            (carry,) if carry is not None else ())
+                        terms, flags, counts, carry_out, cnt, hist = fn(*args)
+                        cnt_np = np.asarray(cnt)
+                        if int(cnt_np[0, 2]) == 0:
+                            break
+                        capacity *= 2
+                    else:
+                        raise RuntimeError(
+                            f"wave shuffle overflow persisted at capacity "
+                            f"{capacity} (round {k})")
+                    if sp_r:
+                        sp_r.set(round=k, retries=attempt, capacity=capacity)
                 if attempt:   # capacity-doubling reruns, visible like the jobs'
                     add_counters(counters, retries=attempt)
                 shuf = int(cnt_np[0, 1])
@@ -534,14 +585,18 @@ class WaveExecutor:
                                  / max(hist_np.sum(), 1))
                     counters["shuffle_skew"] = max(
                         counters.get("shuffle_skew", 0.0), skew)
-                terms, flags, counts = (np.asarray(terms), np.asarray(flags),
-                                        np.asarray(counts))
-                stats_k = None
-                for p in range(n_parts):
-                    part = NGramStats.from_dense(terms[p], flags[p],
-                                                 counts[p], 1)
-                    stats_k = part if stats_k is None else \
-                        stats_k.merged_with(part)
+                with obs_trace.span("wave.mesh.materialize") as sp_m:
+                    terms, flags, counts = (np.asarray(terms),
+                                            np.asarray(flags),
+                                            np.asarray(counts))
+                    stats_k = None
+                    for p in range(n_parts):
+                        part = NGramStats.from_dense(terms[p], flags[p],
+                                                     counts[p], 1)
+                        stats_k = part if stats_k is None else \
+                            stats_k.merged_with(part)
+                    if sp_m:
+                        sp_m.set(round=k, rows=len(stats_k))
                 out = stats_k if out is None else out.merged_with(stats_k)
                 if plan.stop_on_empty and len(stats_k) == 0:
                     break
@@ -589,23 +644,44 @@ class WaveExecutor:
                                        TieredSegmentAccumulator,
                                        segment_to_stats)
 
-        tokens = np.asarray(tokens, np.int32)
-        counters = {"overflow": 0, "waves": 0}
-        acc_cls = (TieredSegmentAccumulator if self.accumulator == "tiered"
-                   else PairwiseSegmentAccumulator)
-        acc = acc_cls(route=self.merge_route,
-                      use_kernels=self.cfg.use_kernels)
-        for wave_stats in self.iter_wave_stats(tokens):
-            counters["waves"] += 1
-            _merge_wave_counters(counters, wave_stats.counters)
-            seg = segment_from_stats(wave_stats,
-                                     vocab_size=self.cfg.vocab_size)
-            acc.push(seg, n_rows=len(wave_stats))
-        merged = segment_to_stats(acc.result())
-        counters["fold_rows"] = acc.fold_rows
-        keep = merged.counts >= self.cfg.tau
-        return NGramStats(merged.grams[keep], merged.lengths[keep],
-                          merged.counts[keep], counters)
+        with obs_trace.span("wave.run") as root:
+            tokens = np.asarray(tokens, np.int32)
+            if root:
+                root.set(n_tokens=int(tokens.shape[0]),
+                         method=self.cfg.method,
+                         accumulator=self.accumulator)
+            # full canonical counter set (obs.metrics.COUNTER_DOC): identical
+            # keys to the monolithic run_plan, plus the wave-only
+            # waves/fold_rows
+            counters = dict.fromkeys(
+                ("jobs", "map_records", "shuffle_records", "shuffle_bytes",
+                 "retries", "overflow", "waves", "fold_rows"), 0)
+            counters["shuffle_skew"] = 0.0
+            acc_cls = (TieredSegmentAccumulator
+                       if self.accumulator == "tiered"
+                       else PairwiseSegmentAccumulator)
+            acc = acc_cls(route=self.merge_route,
+                          use_kernels=self.cfg.use_kernels)
+            for wave_stats in self.iter_wave_stats(tokens):
+                counters["waves"] += 1
+                _merge_wave_counters(counters, wave_stats.counters)
+                with obs_trace.span("wave.fold") as sp:
+                    if sp:
+                        sp.set(wave=counters["waves"] - 1,
+                               rows=len(wave_stats))
+                    seg = segment_from_stats(wave_stats,
+                                             vocab_size=self.cfg.vocab_size)
+                    acc.push(seg, n_rows=len(wave_stats))
+            with obs_trace.span("wave.finalize") as sp:
+                merged = segment_to_stats(acc.result())
+                counters["fold_rows"] = acc.fold_rows
+                keep = merged.counts >= self.cfg.tau
+                out = NGramStats(merged.grams[keep], merged.lengths[keep],
+                                 merged.counts[keep],
+                                 obs_metrics.normalize_counters(counters))
+                if sp:
+                    sp.set(rows=len(out), fold_rows=acc.fold_rows)
+            return out
 
     def run_streaming(self, tokens, *, gen=None, compress: bool = False,
                       **gen_kw):

@@ -1,0 +1,267 @@
+"""Observability contracts (repro.obs): quantile math, schemas, no-op cost.
+
+Four guarantees under test:
+
+  * **Histogram quantiles** -- the fixed-boundary estimator must track the
+    numpy sample oracle to within one bucket width (it stores buckets, not
+    samples; that bound is the whole design).
+  * **Trace schema** -- a *real* traced 8-wave job must export Chrome
+    ``trace_event`` JSON that passes ``validate_trace`` and whose named child
+    spans cover >= 90% of the root span's wall time (the attribution
+    acceptance bar).
+  * **Counter parity** -- monolithic ``run_plan`` and ``WaveExecutor.run``
+    must emit the same counter *names* with normalized types for every
+    method; wave-only keys are exactly the documented ones.  (Values can
+    differ legitimately: per-wave combining dedups less, apriori pruning
+    weakens at tau=1.)
+  * **Disabled == free** -- with tracing off, ``trace.span`` returns the
+    shared null singleton and a full wave run performs zero
+    ``jax.block_until_ready`` calls attributable to the tracer.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import METHODS, NGramConfig, run_job
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
+from repro.pipeline import WaveExecutor
+from tests.test_compress import make_corpus
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends on the disabled singletons."""
+    obs_trace.disable_tracing()
+    obs_metrics.set_registry(None)
+    yield
+    obs_trace.disable_tracing()
+    obs_metrics.set_registry(None)
+
+
+# ------------------------------------------------------------ histograms
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+def test_histogram_quantiles_vs_numpy_oracle(dist):
+    rng = np.random.default_rng(hash(dist) % 2**31)
+    if dist == "uniform":
+        xs = rng.uniform(0.0, 1.0, 5000)
+    elif dist == "lognormal":
+        xs = rng.lognormal(-7.0, 1.0, 5000)       # latency-shaped, ~1ms
+    else:
+        xs = np.concatenate([rng.uniform(1e-4, 2e-4, 2500),
+                             rng.uniform(1e-2, 2e-2, 2500)])
+    h = obs_metrics.Histogram("t")
+    for x in xs:
+        h.observe(x)
+    b = np.asarray(h.boundaries)
+    n = len(xs)
+    for q in (0.5, 0.95, 0.99):
+        est = h.quantile(q)
+        # oracle bound: the order-statistic neighborhood of q (the empirical
+        # CDF may jump across a mass gap, where every value in the gap is an
+        # equally valid quantile), widened by the estimate's bucket width
+        ref_lo = float(np.quantile(xs, max(q - 1.5 / n, 0.0)))
+        ref_hi = float(np.quantile(xs, min(q + 1.5 / n, 1.0)))
+        i = int(np.searchsorted(b, est))
+        lo = b[i - 1] if i > 0 else float(xs.min())
+        hi = b[i] if i < len(b) else float(xs.max())
+        w = hi - lo
+        assert ref_lo - w - 1e-12 <= est <= ref_hi + w + 1e-12, \
+            f"{dist} q={q}: est={est} ref=[{ref_lo},{ref_hi}] width={w}"
+    assert h.count == len(xs)
+    assert h.min == pytest.approx(xs.min())
+    assert h.max == pytest.approx(xs.max())
+    assert h.mean == pytest.approx(xs.mean())
+
+
+def test_histogram_edges():
+    h = obs_metrics.Histogram("t", boundaries=[1.0, 2.0, 4.0])
+    assert h.quantile(0.5) == 0.0                 # empty
+    h.observe(3.0)
+    assert h.quantile(0.0) <= 3.0 <= h.quantile(1.0) + 1e-12
+    assert h.quantile(1.0) == pytest.approx(3.0)  # clamped to observed max
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        obs_metrics.Histogram("bad", boundaries=[2.0, 1.0])
+    snap = h.snapshot()
+    assert obs_report.validate_metrics(
+        {"counters": {}, "gauges": {}, "histograms": {"t": snap}}) == []
+
+
+# ------------------------------------------------------------ trace schema
+
+def test_traced_eight_wave_run_schema_and_coverage(tmp_path):
+    toks = make_corpus(4000, 60, "zipf", 0)
+    cfg = NGramConfig(sigma=3, tau=3, vocab_size=60)
+    wave = -(-len(toks) // 8)
+    tracer = obs_trace.enable_tracing()
+    try:
+        stats = WaveExecutor(cfg, wave_tokens=wave).run(toks)
+    finally:
+        obs_trace.disable_tracing()
+    assert stats.counters["waves"] == 8
+    path = tmp_path / "trace.json"
+    tracer.save(str(path))
+    obj = json.loads(path.read_text())
+    assert obs_report.validate_trace(obj) == []
+    names = {e["name"] for e in obj["traceEvents"]}
+    assert {"wave.run", "wave.submit", "wave.collect", "wave.fold",
+            "wave.finalize"} <= names
+    assert sum(e["name"] == "wave.submit" for e in obj["traceEvents"]) == 8
+    # attribution bar: named child spans cover >= 90% of the root's wall time
+    assert obs_trace.span_coverage(obj, "wave.run") >= 0.90
+
+
+def test_monolithic_trace_has_per_round_spans():
+    toks = make_corpus(1500, 40, "zipf", 1)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=40)
+    tracer = obs_trace.enable_tracing()
+    try:
+        run_job(toks, cfg)
+    finally:
+        obs_trace.disable_tracing()
+    names = {e["name"] for e in tracer.export()["traceEvents"]}
+    assert {"plan.run", "round.emit", "round.stages",
+            "round.materialize"} <= names
+
+
+# ------------------------------------------------------------ counter parity
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_counters_parity_monolithic_vs_wave(method):
+    toks = make_corpus(2000, 50, "zipf", hash(method) % 2**31)
+    cfg = NGramConfig(sigma=3, tau=3, vocab_size=50, method=method)
+    mono = run_job(toks, cfg)
+    wavy = WaveExecutor(cfg, wave_tokens=-(-len(toks) // 4)).run(toks)
+    wave_only = {"waves", "fold_rows"}
+    assert set(wavy.counters) - wave_only == set(mono.counters)
+    # every emitted key is documented in the one canonical glossary
+    for k in set(mono.counters) | set(wavy.counters):
+        assert k in obs_metrics.COUNTER_DOC, f"undocumented counter {k!r}"
+    # normalized types: float for ratio keys, int for counts -- on both paths
+    for counters in (mono.counters, wavy.counters):
+        for k, v in counters.items():
+            want = float if k in obs_metrics.FLOAT_COUNTERS else int
+            assert type(v) is want, f"{k}: {type(v).__name__}"
+
+
+def test_merge_policy_sums_except_skew():
+    dst = {"jobs": 2, "shuffle_skew": 1.5}
+    obs_metrics.merge_counter_dicts(dst, {"jobs": 3, "shuffle_skew": 1.2,
+                                          "retries": 1})
+    assert dst == {"jobs": 5, "shuffle_skew": 1.5, "retries": 1}
+    reg = obs_metrics.MetricsRegistry()
+    reg.merge_job_counters({"jobs": 2, "shuffle_skew": 3.5})
+    reg.merge_job_counters({"jobs": 1, "shuffle_skew": 2.0})
+    assert reg.counters["job.jobs"] == 3
+    assert reg.snapshot()["gauges"]["job.shuffle_skew"] == 3.5
+
+
+# ------------------------------------------------------------ disabled == free
+
+def test_disabled_tracer_is_noop_and_sync_free(monkeypatch):
+    import jax
+    assert obs_trace.span("anything") is obs_trace.NULL_SPAN
+    sp = obs_trace.span("x")
+    assert not sp and sp.set(a=1) is None and sp.sync(object()) is None
+
+    calls = {"n": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", counting)
+    toks = make_corpus(1200, 40, "zipf", 2)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=40)
+    WaveExecutor(cfg, wave_tokens=300).run(toks)
+    assert calls["n"] == 0, \
+        "disabled observability must not add block_until_ready syncs"
+
+
+def test_null_registry_instruments_are_noops():
+    reg = obs_metrics.get_registry()
+    assert not reg
+    reg.counter("c").add(5)
+    reg.gauge("g").set(2)
+    reg.histogram("h").observe(0.1)
+    reg.merge_job_counters({"jobs": 1})
+    assert obs_metrics.get_registry().counter("c").value == 0
+
+
+# ------------------------------------------------------------ metrics export
+
+def test_registry_snapshot_roundtrips_through_validator(tmp_path):
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    toks = make_corpus(1500, 40, "zipf", 3)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=40)
+    stats = WaveExecutor(cfg, wave_tokens=400).run(toks)
+    reg.merge_job_counters(stats.counters)
+    reg.histogram("lat").observe(0.002)
+    snap = reg.snapshot()
+    assert obs_report.validate_metrics(snap) == []
+    path = tmp_path / "m.jsonl"
+    obs_report.write_jsonl(str(path), [{"metrics": snap,
+                                        "env": obs_report
+                                        .environment_metadata()}])
+    assert obs_report.main(["--validate-metrics", str(path)]) == 0
+    table = obs_report.summary_table(snap)
+    assert "job.waves" in table and "lat" in table
+
+
+def test_validators_reject_malformed():
+    assert obs_report.validate_trace({}) != []
+    assert obs_report.validate_trace(
+        {"traceEvents": [{"name": "a", "ph": "B", "ts": 0, "dur": 1,
+                          "pid": 0, "tid": 0}]}) != []
+    bad = {"counters": {"c": "nope"}, "gauges": {}, "histograms": {}}
+    assert obs_report.validate_metrics(bad) != []
+    bad_h = {"counters": {}, "gauges": {}, "histograms": {
+        "h": {"boundaries": [2.0, 1.0], "counts": [0, 0, 0], "count": 0,
+              "sum": 0.0, "min": 0.0, "max": 0.0, "p50": 0.0, "p95": 0.0,
+              "p99": 0.0}}}
+    assert obs_report.validate_metrics(bad_h) != []
+
+
+def test_lru_cache_surfaces_evictions_and_registry():
+    from repro.launch.serve_ngrams import LRUQueryCache
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    c = LRUQueryCache(capacity=2)
+    for i in range(4):
+        c.get(("k", i), 0)
+        c.put(("k", i), 0, i)
+    assert c.evictions == 2 and c.misses == 4
+    assert c.get(("k", 3), 0) == 3 and c.hits == 1
+    c.publish_metrics()
+    snap = reg.snapshot()
+    assert snap["counters"]["cache.evictions"] == 2
+    assert snap["counters"]["cache.hits"] == 1
+    assert snap["gauges"]["cache.entries"] == 2
+    c.publish_metrics()                            # lifetime mirror, not +=
+    assert reg.snapshot()["counters"]["cache.evictions"] == 2
+    assert obs_report.validate_metrics(snap) == []
+
+
+def test_generational_compaction_stats_in_registry():
+    from repro.index import GenerationalIndex
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    toks = make_corpus(1500, 40, "zipf", 4)
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=40)
+    gen = GenerationalIndex(sigma=3, vocab_size=40, size_ratio=2)
+    for part in np.array_split(toks, 4):
+        gen.ingest(run_job(part, cfg))
+    assert gen.compaction_stats["ingests"] == 4
+    snap = reg.snapshot()
+    assert snap["counters"]["gen.ingests"] == 4
+    assert snap["counters"]["gen.merges"] == gen.compaction_stats["merges"]
+    assert snap["gauges"]["gen.segments"] == gen.n_segments
+    assert snap["gauges"]["gen.rung0_rows"] == gen.levels[0].n_rows
+    assert obs_report.validate_metrics(snap) == []
