@@ -49,14 +49,32 @@ def main() -> None:
     ap.add_argument("--waves", action="store_true",
                     help="only the wave-engine cells (wave count vs job "
                          "throughput, interleaved medians -> BENCH_waves.json)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="interleaved reps per wave cell (--waves only)")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the slow distributed-wave subprocess cell "
+                         "(--waves only; CI smokes)")
+    ap.add_argument("--gate", type=float, default=None, metavar="RATIO",
+                    help="fail (exit 1) if the deepest wave sweep exceeds "
+                         "RATIO x the monolithic median (--waves only)")
     args = ap.parse_args()
     n = 20_000 if args.quick else 60_000
 
     if args.waves:
         from benchmarks import waves
         print("name,us_per_call,derived")
-        for r in waves.run(n):
+        rows = waves.run(n, reps=args.reps, mesh=not args.no_mesh)
+        for r in rows:
             _csv(r["name"], r["us"], r["derived"])
+        if args.gate is not None:
+            by_name = {r["name"]: r["us"] for r in rows}
+            deepest = f"waves_{max(waves.WAVE_COUNTS)}"
+            ratio = by_name[deepest] / by_name["waves_monolithic"]
+            ok = ratio <= args.gate
+            print(f"# perf gate: {deepest}/monolithic = {ratio:.2f}x "
+                  f"(limit {args.gate:.2f}x) -> {'OK' if ok else 'FAIL'}")
+            if not ok:
+                sys.exit(1)
         return
 
     from benchmarks import paper_figures as pf

@@ -54,4 +54,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 120 \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report \
     --validate-trace "$OBS_TMP/trace.json" \
     --validate-metrics "$OBS_TMP/metrics.jsonl"
+
+# Wave-engine perf smoke: the fused out-of-core loop must stay within a
+# generous multiple of the monolithic job (the tracked target is ~1.5x at
+# 8 waves on the full corpus; 3.0x here absorbs CI host noise at the
+# reduced --quick corpus).  Appends a trend row to BENCH_waves.json.
+echo "waves perf smoke: --quick, gate waves_8 <= 3.0x monolithic"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 300 \
+    python -m benchmarks.run --waves --quick --reps 2 --no-mesh --gate 3.0
+
 echo "examples smoke: OK"

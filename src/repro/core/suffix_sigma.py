@@ -236,12 +236,15 @@ def sigma_split(tokens, cfg: NGramConfig, sigma_head: int = 16,
     flags[:, :sigma_head] = False
     stats_b = NGramStats.from_dense(np.asarray(terms), flags, np.asarray(counts),
                                     cfg.tau)
-    dropped = int(jnp.sum(eligible)) - n_b
+    # one blocking device round trip for the survivor counter, reused for
+    # both the overflow check and the counter bookkeeping below
+    n_eligible = int(jnp.sum(eligible))
+    dropped = n_eligible - n_b
     stats_a = NGramStats(
         np.pad(stats_a.grams, ((0, 0), (0, cfg.sigma - sigma_head))),
         stats_a.lengths, stats_a.counts, stats_a.counters)
     out = stats_a.merged_with(stats_b)
-    add_counters(out.counters, phase_b_records=int(jnp.sum(eligible)),
+    add_counters(out.counters, phase_b_records=n_eligible,
                  phase_b_overflow=max(0, dropped))
     if dropped > 0:
         # survivor buffer too small -- rerun exact (counters expose the retry)

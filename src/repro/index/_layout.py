@@ -34,6 +34,18 @@ def pad_rows(a: np.ndarray, size: int, fill) -> np.ndarray:
     return np.pad(a, pad, constant_values=fill)
 
 
+def row_bytes_view(keys: np.ndarray) -> np.ndarray:
+    """[N] void view of uint32 key rows whose byte order == numeric lex order.
+
+    Big-endian bytes make per-row ``memcmp`` equal ascending lexicographic
+    comparison of the uint32 columns, so sorts/merges of index rows can run
+    on a single flat column instead of one pass per key lane.
+    """
+    n_cols = keys.shape[1]
+    return np.ascontiguousarray(keys.astype(">u4")).view(
+        np.dtype((np.void, 4 * n_cols)))[:, 0]
+
+
 def row_offsets(sorted_key: np.ndarray, queries: np.ndarray) -> np.ndarray:
     """Lower-bound offsets of ``queries`` in a sorted key column, int32."""
     return np.searchsorted(sorted_key, queries, side="left").astype(np.int32)

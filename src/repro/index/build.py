@@ -45,7 +45,7 @@ from repro.mapreduce import pack as packing
 from repro.mapreduce import sort
 from repro.core.stats import NGramStats
 from ._layout import (MAX_FANOUT, SENTINEL, fanout_layout, pad_rows,
-                      round_capacity, row_offsets)
+                      round_capacity, row_bytes_view, row_offsets)
 
 _SENTINEL = SENTINEL   # backwards-compat alias (pre-_layout name)
 
@@ -178,6 +178,44 @@ def segment_from_stats(stats: NGramStats, *, vocab_size: int,
                                   SENTINEL)),
         counts=jnp.asarray(pad_rows(np.asarray(counts_s, np.uint32), size, 0)),
         sigma=sigma, vocab_size=vocab_size)
+
+
+def segment_from_wave_stats(stats: NGramStats, *,
+                            vocab_size: int) -> IndexSegment:
+    """Freeze one wave's partial into a sorted segment without a device trip.
+
+    The single-device wave collector emits rows in reducer order: for every
+    gram length, ascending packed lanes (the reducer walks the sorted record
+    block).  A *stable* argsort on the length column alone -- a sigma-way
+    counting sort, not a general sort -- therefore recovers full
+    (length | packed lanes) segment order, and the final stable byte-view
+    argsort degenerates to a linear verification pass (timsort on sorted
+    input).  Rows from collectors without the ordering guarantee (e.g.
+    hash-partitioned mesh partials) are genuinely sorted by that same pass.
+    Everything runs in numpy (``pack_terms_np``), so the per-wave freeze
+    costs ~a millisecond instead of an eager device pack+sort+transfer
+    chain.
+
+    The result is host-resident and unpadded (no sentinel tail) -- exactly
+    what the k-way fold consumes; ``IndexSegment.n_rows`` still answers
+    correctly, and any route of :func:`~repro.index.merge.merge_segments`
+    accepts it.
+    """
+    grams = np.asarray(stats.grams, np.int32)
+    lengths = np.asarray(stats.lengths, np.uint32)
+    counts = np.asarray(stats.counts)
+    if counts.ndim == 2:
+        counts = counts.sum(axis=1)
+    counts = counts.astype(np.uint32)
+    sigma = int(grams.shape[1])
+    lanes = packing.pack_terms_np(grams, vocab_size=vocab_size)
+    keys = np.concatenate([lengths[:, None], lanes], axis=1).astype(np.uint32)
+    order = np.argsort(keys[:, 0], kind="stable")
+    keys = keys[order]
+    counts = counts[order]
+    full = np.argsort(row_bytes_view(keys), kind="stable")
+    return IndexSegment(keys=keys[full], counts=counts[full], sigma=sigma,
+                        vocab_size=vocab_size)
 
 
 def index_from_segment(seg: IndexSegment, *,

@@ -34,11 +34,17 @@ def main() -> None:
                     help="out-of-core: run the job in fixed-size token waves "
                          "(repro.pipeline.WaveExecutor); output is "
                          "bit-identical to the monolithic run")
-    ap.add_argument("--accumulator", default="tiered",
-                    choices=["tiered", "pairwise"],
-                    help="wave-partial fold policy: size-tiered LSM rungs "
-                         "(amortized O(total log waves) merge work) or the "
-                         "pairwise one-segment baseline")
+    ap.add_argument("--accumulator", default="defer",
+                    choices=["defer", "tiered", "pairwise"],
+                    help="wave-partial fold policy: defer = stack wave "
+                         "segments and fold once, k-way, at the end (O(total) "
+                         "merge rows, the default); tiered = size-tiered LSM "
+                         "rungs (bounded live memory, amortized O(total log "
+                         "waves)); pairwise = the one-segment baseline")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialize the per-wave fold with wave dispatch "
+                         "instead of overlapping it on the fold thread "
+                         "(debugging / single-thread environments)")
     ap.add_argument("--devices", type=int, default=0,
                     help=">1: run distributed on an N-way host mesh (sets "
                          "XLA_FLAGS; with --wave-tokens, shards every wave)")
@@ -87,6 +93,7 @@ def main() -> None:
                              "(bucketed counts need a single-wave job)")
         stats = WaveExecutor(cfg, wave_tokens=args.wave_tokens,
                              accumulator=args.accumulator,
+                             overlap=not args.no_overlap,
                              mesh=mesh).run(tokens)
     else:
         kw = {"bucket_ids": years} if args.series else {}

@@ -159,15 +159,16 @@ class StreamingNGramService:
 
     def __init__(self, cfg, *, compress: bool = False,
                  use_kernels: bool = False, cache_capacity: int = 65536,
-                 size_ratio: int = 4, route: str = "merge",
+                 size_ratio: int = 4, route: str = "kway",
                  wave_tokens: int | None = None, mesh=None,
-                 axis_name: str = "data"):
+                 axis_name: str = "data", overlap: bool = True):
         from repro.index import GenerationalIndex
         self.cfg = cfg
         self.use_kernels = use_kernels
         self.wave_tokens = wave_tokens
         self.mesh = mesh
         self.axis_name = axis_name
+        self.overlap = overlap
         self.gen = GenerationalIndex(
             sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
             size_ratio=size_ratio, route=route, use_kernels=use_kernels)
@@ -195,7 +196,8 @@ class StreamingNGramService:
                     self._wave_ex = WaveExecutor(self.cfg,
                                                  wave_tokens=self.wave_tokens,
                                                  mesh=self.mesh,
-                                                 axis_name=self.axis_name)
+                                                 axis_name=self.axis_name,
+                                                 overlap=self.overlap)
                 stats = self._wave_ex.run(tokens)
             else:
                 from repro.core import run_job
@@ -385,7 +387,8 @@ def run_streaming(args) -> None:
     svc = StreamingNGramService(cfg, compress=args.compress,
                                 use_kernels=args.use_kernels,
                                 cache_capacity=args.cache_capacity,
-                                wave_tokens=args.wave_tokens, mesh=mesh)
+                                wave_tokens=args.wave_tokens, mesh=mesh,
+                                overlap=not args.no_overlap)
     nb = max(args.ingest_batches, 1)
     base, rest = np.split(tokens, [int(len(tokens) * 0.6)])
     deltas = np.array_split(rest, nb)
@@ -463,6 +466,10 @@ def main() -> None:
                          "engine (repro.pipeline) in waves of this many "
                          "tokens; bounds device memory by O(waves * sigma) "
                          "independent of corpus size")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialize each ingest's per-wave fold with wave "
+                         "dispatch instead of overlapping it on the wave "
+                         "engine's fold thread")
     ap.add_argument("--stream-batch", type=int, default=256,
                     help="query micro-batch size of the streaming loop")
     ap.add_argument("--cache-capacity", type=int, default=65536)

@@ -20,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PAD_ID = 0  # reserved: sorts first, marks end-of-document / end-of-suffix
 
@@ -58,6 +59,52 @@ def pack_terms(terms: jax.Array, *, vocab_size: int) -> jax.Array:
     t = t.reshape(t.shape[:-1] + (lanes, per))
     shifts = jnp.arange(per - 1, -1, -1, dtype=jnp.uint32) * jnp.uint32(bits)
     return jnp.sum(t << shifts, axis=-1).astype(jnp.uint32)
+
+
+def pack_terms_np(terms: np.ndarray, *, vocab_size: int) -> np.ndarray:
+    """Host numpy mirror of :func:`pack_terms` -- bit-identical lanes.
+
+    The wave fold packs each wave's (already materialized) partial on the
+    host; a device dispatch per wave just to shift-and-sum integers would
+    serialize with the next wave's real work.
+    """
+    sigma = terms.shape[-1]
+    bits = bits_for_vocab(vocab_size)
+    per = terms_per_lane(vocab_size)
+    lanes = n_lanes(sigma, vocab_size)
+    pad_to = lanes * per
+    t = terms.astype(np.uint32)
+    if pad_to != sigma:
+        pad_width = [(0, 0)] * (t.ndim - 1) + [(0, pad_to - sigma)]
+        t = np.pad(t, pad_width)
+    t = t.reshape(t.shape[:-1] + (lanes, per))
+    shifts = np.arange(per - 1, -1, -1, dtype=np.uint32) * np.uint32(bits)
+    return (t << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def prefix_lane_masks(sigma: int, vocab_size: int) -> np.ndarray:
+    """AND-masks [sigma + 1, n_lanes] uint32 reducing packed lanes to prefixes.
+
+    ``lanes & masks[l]`` zeroes the bit fields of every term slot past the
+    first ``l``, which is exactly ``pack_terms`` of the length-``l`` prefix
+    padded with PAD=0 -- each term occupies its own bit field, so zeroing a
+    slot's bits equals packing a PAD there.  Lets a collector derive every
+    prefix gram's packed key directly from the full suffix lanes, with no
+    unpack -> re-pack round trip.
+    """
+    bits = bits_for_vocab(vocab_size)
+    per = terms_per_lane(vocab_size)
+    lanes = n_lanes(sigma, vocab_size)
+    field = (1 << bits) - 1
+    masks = np.zeros((sigma + 1, lanes), np.uint32)
+    for l in range(sigma + 1):
+        for j in range(lanes):
+            m = 0
+            for i in range(per):
+                if j * per + i < l:
+                    m |= field << ((per - 1 - i) * bits)
+            masks[l, j] = np.uint32(m & 0xFFFFFFFF)
+    return masks
 
 
 @partial(jax.jit, static_argnames=("vocab_size", "sigma"))

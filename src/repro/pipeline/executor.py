@@ -10,23 +10,32 @@ map -> combine -> shuffle -> sort -> reduce *across machines*.
     ``sigma - 1`` token halo from the next wave, exactly the ppermute halo of
     the distributed jobs) move to the device one at a time, so the device
     working set is O(wave * sigma), independent of corpus size;
-  * each wave runs the method's :class:`~repro.pipeline.plan.JobPlan` through
-    one jitted stage pipeline (combine -> sort -> reduce, record buffers
-    donated), compiled once and reused by every wave;
-  * wave dispatch is **double-buffered** (:class:`DoubleBufferedDriver`): wave
-    ``i + 1``'s h2d copy and stage program are submitted before wave ``i``'s
-    results are materialized, so jax's async dispatch overlaps device work
-    with the host-side fold.  No per-wave host syncs ride the hot path --
+  * each wave runs the method's :class:`~repro.pipeline.plan.JobPlan` as
+    **one fused jitted program** (``_wave_core``): every round's map emit,
+    the combine -> shuffle-key -> sort -> reduce stage chain, and the tau=1
+    carry updates feeding the next round all trace into a single donated XLA
+    program, compiled once per plan and reused by every wave -- a wave is a
+    single dispatch, not a per-stage (or per-round) chain of them;
+  * the wave loop is **device-resident with an overlapped fold**
+    (``_for_each_wave``): the main thread only slices host token slabs and
+    dispatches fused wave programs, while a background fold thread
+    materializes each wave and folds it (accumulator merge / generational
+    ingest) -- so host-side fold work overlaps the next waves' device work
+    instead of serializing with it, with a bounded in-flight queue keeping
+    the memory model.  No per-wave host syncs ride the feeder's hot path --
     counters stay device scalars until collect time;
   * per-wave partials are produced at ``tau = 1`` -- a gram below tau in every
     wave can still be frequent globally, so nothing may be dropped early --
     and folded through the *segment merge* path (``index/merge.py``).  The
-    fold is **size-tiered** (:class:`~repro.index.merge.TieredSegmentAccumulator`,
-    the LSM discipline of ``GenerationalIndex``): amortized O(total log waves)
-    merge work instead of the O(waves * total) of folding every wave into one
-    running segment.  Either accumulator yields the same sorted segment, so
-    the final output stays bit-identical to the monolithic job (canonical
-    order; the global tau filter runs once at the end);
+    default fold **defers**: wave segments stack and merge once, k-way, at
+    the end (:class:`~repro.index.merge.DeferredSegmentAccumulator` -- one
+    stable host sort over O(total) rows, with a skewed searchsorted-splice
+    fast path when one segment dominates); ``accumulator="tiered"`` keeps
+    the LSM rung stack of ``GenerationalIndex`` for bounded live memory,
+    ``"pairwise"`` is the re-merge-every-wave baseline.  Every accumulator
+    yields the same sorted segment, so the final output stays bit-identical
+    to the monolithic job (canonical order; the global tau filter runs once
+    at the end);
   * with a ``mesh``, every wave is **distributed**: the wave's extended
     window shards contiguously over the mesh axis and runs through a
     ``shard_map`` stage program that reuses the per-method jobs' own plumbing
@@ -69,13 +78,27 @@ _SKEW_BUCKETS = 64   # nominal reducer count for the shuffle-skew counter
 # the decision must never be frozen at first call
 _STAGE_CORE: dict[str, object] = {}
 
+# fused whole-wave programs keyed by (backend, plan, cfg): every round's
+# emit -> combine -> shuffle-key -> sort -> reduce plus the tau=1 carry
+# updates traced into ONE jitted program, so a wave is a single dispatch.
+# Both plan (frozen JobPlan of function refs) and cfg (frozen NGramConfig)
+# hash by value, so distinct WaveExecutor instances over the same job share
+# the compiled program (the benchmarks build a fresh executor per rep).
+_WAVE_PROGRAMS: dict[tuple, object] = {}
+
+# in-flight single-device waves beyond the one being folded: bounds the
+# device/host footprint of the overlapped fold at O(wave * sigma) times a
+# small constant while still keeping the device fed during host-side folds
+_WAVES_IN_FLIGHT = 2
+
 
 def reset_stage_cache() -> None:
     """Drop the jitted stage programs (tests / backend reconfiguration)."""
     _STAGE_CORE.clear()
+    _WAVE_PROGRAMS.clear()
 
 
-def _stage_core(records, **kw):
+def _stage_core(records, valid, **kw):
     backend = jax.default_backend()
     fn = _STAGE_CORE.get(backend)
     if fn is None:
@@ -89,20 +112,26 @@ def _stage_core(records, **kw):
                              "shuffle_key", "reduce_kind", "with_positions",
                              "n_buckets"))(_stage_core_impl)
         _STAGE_CORE[backend] = fn
-    return fn(records, **kw)
+    return fn(records, valid, **kw)
 
 
-def _stage_core_impl(records, *, n_lanes: int, has_bucket: bool,
+def _stage_core_impl(records, valid, *, n_lanes: int, has_bucket: bool,
                      combine_route: str | None, use_kernels: bool, sigma: int,
                      lane_vocab: int, shuffle_key: str, reduce_kind: str,
                      with_positions: bool, n_buckets: int):
     """combine -> shuffle-key -> sort -> reduce over one wave's records.
 
     The single jitted program every wave reuses; ``records`` is donated, so
-    the map buffer's memory is recycled for the sort.  Returns (dense reducer
-    outputs, post-combine live-record count, partition histogram over
-    ``_SKEW_BUCKETS`` nominal reducers -- the realized shuffle skew).
+    the map buffer's memory is recycled for the sort.  ``valid`` is the map
+    emit's live mask: its sum (the ``map_records`` counter) rides the program
+    as a device scalar so callers never host-sync before dispatch.  Returns
+    (dense reducer outputs, map-record count, post-combine live-record count,
+    partition histogram over ``_SKEW_BUCKETS`` nominal reducers -- the
+    realized shuffle skew, and the sorted records' packed key lanes -- the
+    direct-segment collector's raw material); all five stay device-resident
+    until the caller's materialize sync.
     """
+    map_rec = jnp.sum(valid)
     if combine_route is not None:
         records = stages.combine(records, n_lanes, has_bucket,
                                  route=combine_route, use_kernels=use_kernels)
@@ -122,7 +151,54 @@ def _stage_core_impl(records, *, n_lanes: int, has_bucket: bool,
     else:
         dense = stages.reduce_exact(rec, sigma=sigma, vocab_size=lane_vocab,
                                     with_positions=with_positions)
-    return dense, shuffled, hist
+    return dense, map_rec, shuffled, hist, rec[:, :n_lanes]
+
+
+def _build_wave_program(cfg, plan: JobPlan):
+    """Trace one wave's FULL round chain into a single jitted program.
+
+    Every round's map emit, the fused stage core, and the tau=1 carry update
+    feeding the next round (``plan.py``'s traceability contract: under the
+    wave regime carries are pure jnp functions of the emit-side evidence)
+    compile into one donated XLA program -- a wave is one dispatch, not a
+    per-stage (or per-round) chain of them.  ``n_live`` is a traced scalar so
+    the partial final wave reuses the same executable, and position payloads
+    are skipped (``with_positions=False``): only tau>1 carries consume them,
+    which the wave regime never takes.
+    """
+    lane_vocab = plan.effective_lane_vocab(cfg)
+    n_l = packing.n_lanes(cfg.sigma, lane_vocab)
+    combine_route = plan.combine.route if plan.combine is not None else None
+
+    def wave_fn(tok_ext, n_live):
+        carry = None
+        rounds = []
+        for k in range(1, plan.rounds + 1):
+            records, valid, emit_extras = plan.map.emit(
+                tok_ext, None, n_live, cfg, carry, k)
+            dense, map_rec, shuffled, hist, lanes = _stage_core_impl(
+                records, valid, n_lanes=n_l, has_bucket=False,
+                combine_route=combine_route, use_kernels=cfg.use_kernels,
+                sigma=cfg.sigma, lane_vocab=lane_vocab,
+                shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
+                with_positions=False, n_buckets=0)
+            rounds.append((dense[:3], map_rec, shuffled, hist, lanes))
+            if k < plan.rounds and plan.update_carry is not None:
+                carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
+                                          emit_extras, carry)
+        return tuple(rounds)
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(wave_fn, donate_argnums=donate)
+
+
+def _wave_core(cfg, plan: JobPlan, tok_ext, n_live: int):
+    """Dispatch one wave through the cached fused program (one dispatch)."""
+    key = (jax.default_backend(), plan, cfg)
+    fn = _WAVE_PROGRAMS.get(key)
+    if fn is None:
+        fn = _WAVE_PROGRAMS[key] = _build_wave_program(cfg, plan)
+    return fn(tok_ext, n_live)
 
 
 def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
@@ -151,15 +227,17 @@ def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
                 sp.set(round=k)
             records, valid, emit_extras = plan.map.emit(
                 tok_ext, aux_ext, n_live, cfg, carry, k)
-        map_rec = int(jnp.sum(valid))
         # combine -> shuffle-key -> sort -> reduce fuse into one jitted
         # program, so the stage granularity under this span is the dispatch;
-        # the device time lands in the materialize span's sync below
+        # the device time lands in the materialize span's sync below.  The
+        # map-record counter rides the program as a device scalar (read at
+        # the materialize sync below) -- summing ``valid`` here would force
+        # a host round trip *before* the stage dispatch.
         with obs_trace.span("round.stages") as sp:
             if sp:
                 sp.set(round=k)
-            dense, shuffled, hist = _stage_core(
-                records, n_lanes=n_l, has_bucket=has_bucket,
+            dense, map_rec, shuffled, hist, _lanes = _stage_core(
+                records, valid, n_lanes=n_l, has_bucket=has_bucket,
                 combine_route=combine_route, use_kernels=cfg.use_kernels,
                 sigma=cfg.sigma, lane_vocab=lane_vocab,
                 shuffle_key=plan.shuffle.key, reduce_kind=plan.reduce.kind,
@@ -172,6 +250,7 @@ def _run_rounds(tok_ext, aux_ext, n_live: int, cfg, plan: JobPlan,
             stats_k = NGramStats.from_dense(terms, flags, counts, tau_eff)
         reduce_extras = ({"totals_pos": dense[3]}
                          if plan.reduce.with_positions else {})
+        map_rec = int(map_rec)
         shuffled = int(shuffled)
         hist = np.asarray(hist)
         add_counters(counters, jobs=1, map_records=map_rec,
@@ -268,19 +347,41 @@ def _merge_wave_counters(dst: dict, src: dict) -> None:
     obs_metrics.merge_counter_dicts(dst, src)
 
 
+class WavePartial:
+    """One collected wave: its host-frozen sorted segment + job counters.
+
+    The unit the fold consumes (accumulator push in :meth:`WaveExecutor.run`,
+    generational ingest in :meth:`WaveExecutor.run_streaming`): ``segment``
+    is an unpadded host-resident :class:`~repro.index.build.IndexSegment`
+    holding the wave's exact tau=1 rows in (length | packed lanes) order,
+    ``n_rows`` its real row count, ``counters`` the wave's MapReduce-style
+    counter dict.
+    """
+
+    __slots__ = ("segment", "n_rows", "counters")
+
+    def __init__(self, segment, n_rows: int, counters: dict):
+        self.segment = segment
+        self.n_rows = n_rows
+        self.counters = counters
+
+
 class WaveExecutor:
     """Run a :class:`JobPlan` over fixed-size token waves (out-of-core).
 
     ``wave_tokens`` bounds the device-resident working set; ``None`` (or a
     wave at least the corpus size) degenerates to one wave.  Waves execute at
     ``tau = 1`` and fold through ``index/merge.py`` segments under the
-    ``accumulator`` policy (``"tiered"`` = size-tiered LSM rung stack,
-    amortized O(total log waves) merge work; ``"pairwise"`` = the legacy
+    ``accumulator`` policy (``"defer"`` = stack wave partials and fold once,
+    k-way, at finalize -- O(total) merge rows, the default; ``"tiered"`` =
+    size-tiered LSM rung stack, amortized O(total log waves) merge work with
+    log-many live rungs; ``"pairwise"`` = the legacy
     fold-every-wave-into-one-segment baseline, O(waves x total));
-    ``merge_route``: ``"sort"`` = one fused re-sort per fold, the fastest
-    eager route on CPU; ``"merge"`` = pairwise merge-path.  :meth:`run`
-    applies the global tau once at the end, so for any wave size (and either
-    accumulator) the output is bit-identical to the monolithic job.
+    ``merge_route``: ``"kway"`` = galloping host merge of the presorted
+    segments, the fastest fold; ``"sort"`` = one fused re-sort per fold;
+    ``"merge"`` = pairwise merge-path.  :meth:`run` applies the global tau
+    once at the end, so for any wave size (and any accumulator/route) the
+    output is bit-identical to the monolithic job.
 
     With a ``mesh`` (size > 1), each wave's stage pipeline shards over
     ``axis_name``: contiguous token slices per shard, the distributed jobs'
@@ -299,18 +400,18 @@ class WaveExecutor:
     """
 
     def __init__(self, cfg, *, wave_tokens: int | None = None,
-                 plan: JobPlan | None = None, merge_route: str = "sort",
-                 accumulator: str = "tiered", mesh=None,
-                 axis_name: str = "data"):
+                 plan: JobPlan | None = None, merge_route: str = "kway",
+                 accumulator: str = "defer", mesh=None,
+                 axis_name: str = "data", overlap: bool = True):
         if wave_tokens is not None and wave_tokens < 1:
             raise ValueError("wave_tokens must be >= 1")
         if cfg.n_buckets:
             raise ValueError("wave execution does not support n_buckets "
                              "(bucketed series need the bucket-carrying "
                              "single job -- run_job / run_plan)")
-        if accumulator not in ("tiered", "pairwise"):
+        if accumulator not in ("defer", "tiered", "pairwise"):
             raise ValueError(f"unknown accumulator {accumulator!r} "
-                             "(options: 'tiered', 'pairwise')")
+                             "(options: 'defer', 'tiered', 'pairwise')")
         self.cfg = cfg
         self.wave_tokens = wave_tokens
         self.plan = plan or plan_for(cfg)
@@ -318,8 +419,18 @@ class WaveExecutor:
         self.accumulator = accumulator
         self.mesh = mesh
         self.axis_name = axis_name
+        # overlap: run the per-wave fold (collect + accumulator merge /
+        # generational ingest) on a background thread so it overlaps the next
+        # wave's device work; False serializes fold and dispatch on the main
+        # thread (debugging / environments where threads are unwelcome)
+        self.overlap = overlap
         self._mesh_programs: dict = {}   # (k, capacity, has_carry, n_local)
         self._emit_rows_cache: dict = {}
+        # direct-segment collect is valid iff the record lanes' packed layout
+        # is the segment layout -- i.e. the plan packs with cfg.vocab_size
+        # (pack ablations / pack_vocab overrides take the stats route)
+        self._direct = (self.plan.effective_lane_vocab(cfg) == cfg.vocab_size)
+        self._masks = None               # prefix_lane_masks, built lazily
 
     # --- wave iteration ------------------------------------------------------ #
 
@@ -354,12 +465,13 @@ class WaveExecutor:
     # --- single-device async wave dispatch ----------------------------------- #
 
     def _submit_wave(self, tok_ext, n_live: int) -> dict:
-        """Dispatch one wave's rounds; nothing is materialized here.
+        """Dispatch one wave as ONE fused program; nothing materializes here.
 
         The wave regime always runs at ``tau_eff = 1``, where carries are a
         pure traceable function of the emit-side evidence (the contract
-        ``plan.py`` documents), so no round needs a host-synced ``stats_k``
-        and the whole wave -- counters included -- stays in flight until
+        ``plan.py`` documents), so the *entire* round chain -- emits, stage
+        pipelines, carry updates, counters -- traces into a single jitted
+        donated program (``_wave_core``) and stays in flight until
         :meth:`_collect_wave`.  ``stop_on_empty`` is skipped: an exhausted
         round chain emits empty partials that fold to nothing.
         """
@@ -367,31 +479,16 @@ class WaveExecutor:
         with obs_trace.span("wave.submit") as sp:
             if sp:
                 sp.set(n_live=n_live, rounds=plan.rounds)
-            lane_vocab = plan.effective_lane_vocab(cfg)
-            n_l = packing.n_lanes(cfg.sigma, lane_vocab)
-            combine_route = plan.combine.route if plan.combine is not None \
-                else None
-            carry = None
-            rounds = []
-            for k in range(1, plan.rounds + 1):
-                records, valid, emit_extras = plan.map.emit(
-                    tok_ext, None, n_live, cfg, carry, k)
-                map_rec = jnp.sum(valid)          # device scalar: deferred
-                dense, shuffled, hist = _stage_core(
-                    records, n_lanes=n_l, has_bucket=False,
-                    combine_route=combine_route, use_kernels=cfg.use_kernels,
-                    sigma=cfg.sigma, lane_vocab=lane_vocab,
-                    shuffle_key=plan.shuffle.key,
-                    reduce_kind=plan.reduce.kind,
-                    with_positions=plan.reduce.with_positions,
-                    n_buckets=cfg.n_buckets)
-                rounds.append((dense[:3], map_rec, shuffled, hist))
-                if k < plan.rounds and plan.update_carry is not None:
-                    carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
-                                              emit_extras, carry)
-            rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
-                                             n_meta=plan.map.n_meta)
-            return {"rounds": rounds, "rec_bytes": rec_bytes}
+            # one span == one dispatch: the fused-wave regression tests count
+            # exactly one round.stages span per wave, any number of rounds
+            with obs_trace.span("round.stages") as sp_s:
+                if sp_s:
+                    sp_s.set(fused_rounds=plan.rounds)
+                rounds = _wave_core(cfg, plan, tok_ext, n_live)
+            rec_bytes = packing.record_bytes(
+                cfg.sigma, plan.effective_lane_vocab(cfg),
+                n_meta=plan.map.n_meta)
+            return {"rounds": list(rounds), "rec_bytes": rec_bytes}
 
     def _collect_wave(self, pend: dict):
         """Materialize a submitted wave -> exact ``NGramStats`` partial.
@@ -406,7 +503,7 @@ class WaveExecutor:
         with obs_trace.span("wave.collect") as sp:
             counters: dict = {}
             out = None
-            for dense, map_rec, shuffled, hist in pend["rounds"]:
+            for dense, map_rec, shuffled, hist, _lanes in pend["rounds"]:
                 terms, flags, counts = (np.asarray(x) for x in dense)
                 stats_k = NGramStats.from_dense(terms, flags, counts, 1)
                 shuffled = int(shuffled)
@@ -425,6 +522,81 @@ class WaveExecutor:
                 sp.set(rows=len(out), shuffle_records=counters.get(
                     "shuffle_records", 0))
             return out
+
+    def _prefix_masks(self) -> np.ndarray:
+        masks = self._masks
+        if masks is None:
+            masks = self._masks = packing.prefix_lane_masks(
+                self.cfg.sigma, self.cfg.vocab_size)
+        return masks
+
+    def _partial_from_stats(self, wave_stats) -> WavePartial:
+        """Freeze an ``NGramStats`` wave partial (mesh / stats-route waves)."""
+        from repro.index.build import segment_from_wave_stats
+        seg = segment_from_wave_stats(wave_stats,
+                                      vocab_size=self.cfg.vocab_size)
+        return WavePartial(seg, len(wave_stats), wave_stats.counters)
+
+    def _collect_wave_segment(self, pend: dict) -> WavePartial:
+        """Materialize a submitted wave straight into a sorted host segment.
+
+        The fold-path twin of :meth:`_collect_wave` that never leaves packed
+        space: the reducer already walked the *sorted* record block, so its
+        key lanes ARE the packed gram lanes in lex order, and a kept row of
+        length ``l`` has segment key ``(l | lanes & prefix_mask[l])``
+        (zeroing a term slot's bits == packing PAD there).  Rows come out of
+        ``nonzero(keep.T)`` in (length, lane-rank) order -- segment order --
+        so the closing stable byte-view argsort is a linear verification
+        pass for single-round plans and a galloping merge of the per-round
+        sorted runs otherwise.  Skips the stats detour entirely: no term
+        unpack, no gram re-pack, no ``terms`` d2h.  Bit-identical to
+        ``segment_from_wave_stats(_collect_wave(pend))`` because both
+        reduce to the same (key, count) row set in the same canonical
+        order; requires the lane/segment pack layouts to coincide
+        (``self._direct``) -- other configs take exactly that stats route.
+        """
+        if not self._direct:
+            return self._partial_from_stats(self._collect_wave(pend))
+        from repro.core.stats import add_counters
+        from repro.index._layout import row_bytes_view
+        from repro.index.build import IndexSegment
+
+        cfg = self.cfg
+        with obs_trace.span("wave.collect") as sp:
+            counters: dict = {}
+            masks = self._prefix_masks()
+            key_parts, cnt_parts = [], []
+            for dense, map_rec, shuffled, hist, lanes in pend["rounds"]:
+                flags = np.asarray(dense[1])
+                counts = np.asarray(dense[2])
+                lanes = np.asarray(lanes)
+                shuffled = int(shuffled)
+                hist = np.asarray(hist)
+                add_counters(counters, jobs=1, map_records=int(map_rec),
+                             shuffle_records=shuffled,
+                             shuffle_bytes=shuffled * pend["rec_bytes"])
+                if shuffled:
+                    skew = float(hist.max() * _SKEW_BUCKETS
+                                 / max(hist.sum(), 1))
+                    counters["shuffle_skew"] = max(
+                        counters.get("shuffle_skew", 0.0), skew)
+                # from_dense's keep at the wave regime's tau = 1
+                keep = (flags != 0) & (counts >= 1)
+                lens0, rows = np.nonzero(keep.T)
+                lengths = (lens0 + 1).astype(np.uint32)
+                pref = lanes[rows] & masks[lengths]
+                key_parts.append(np.concatenate(
+                    [lengths[:, None], pref], axis=1).astype(np.uint32))
+                cnt_parts.append(counts[rows, lens0].astype(np.uint32))
+            keys = np.concatenate(key_parts, axis=0)
+            cnts = np.concatenate(cnt_parts, axis=0)
+            order = np.argsort(row_bytes_view(keys), kind="stable")
+            seg = IndexSegment(keys=keys[order], counts=cnts[order],
+                               sigma=cfg.sigma, vocab_size=cfg.vocab_size)
+            if sp:
+                sp.set(rows=int(keys.shape[0]), shuffle_records=counters.get(
+                    "shuffle_records", 0))
+            return WavePartial(seg, int(keys.shape[0]), counters)
 
     # --- distributed (mesh) wave dispatch ------------------------------------ #
 
@@ -563,8 +735,14 @@ class WaveExecutor:
                         args = (tok_p, n_live_dev) + (
                             (carry,) if carry is not None else ())
                         terms, flags, counts, carry_out, cnt, hist = fn(*args)
-                        cnt_np = np.asarray(cnt)
-                        if int(cnt_np[0, 2]) == 0:
+                        # per-attempt sync: ONLY the overflow flag.  The full
+                        # cnt/hist of an overflowed attempt must never reach
+                        # the counters -- a rerun re-emits the same records,
+                        # so folding every attempt's stats would double-count
+                        # map/shuffle records; only the successful attempt's
+                        # stats land (below), while the reruns themselves
+                        # stay visible through ``retries``.
+                        if int(cnt[0, 2]) == 0:
                             break
                         capacity *= 2
                     else:
@@ -575,6 +753,7 @@ class WaveExecutor:
                         sp_r.set(round=k, retries=attempt, capacity=capacity)
                 if attempt:   # capacity-doubling reruns, visible like the jobs'
                     add_counters(counters, retries=attempt)
+                cnt_np = np.asarray(cnt)        # the successful attempt's
                 shuf = int(cnt_np[0, 1])
                 hist_np = np.asarray(hist)[0]
                 add_counters(counters, jobs=1, map_records=int(cnt_np[0, 0]),
@@ -631,6 +810,77 @@ class WaveExecutor:
         if res is not None:
             yield res
 
+    def _for_each_wave(self, tokens, consume, *, collect=None,
+                       from_stats=None) -> None:
+        """Run ``consume(collected wave)`` for every wave, in wave order.
+
+        ``collect`` maps a submitted single-device wave to the object
+        ``consume`` sees (default :meth:`_collect_wave` -> ``NGramStats``;
+        the fold paths pass :meth:`_collect_wave_segment` ->
+        :class:`WavePartial`); ``from_stats`` adapts the mesh path's
+        ``NGramStats`` partials to the same type (default identity).
+
+        The wave-level parallel fold: on the single-device path the main
+        thread stays a pure *feeder* -- it slices host token slabs and
+        dispatches one fused program per wave -- while a background fold
+        thread materializes each wave and runs ``consume`` (the accumulator
+        merge of :meth:`run`, the generational ingest of
+        :meth:`run_streaming`).  Host-side fold work therefore overlaps the
+        next waves' device work instead of serializing with it; a bounded
+        queue (``_WAVES_IN_FLIGHT``) backpressures the feeder so at most a
+        small constant number of waves is ever in flight, preserving the
+        O(wave * sigma) memory model.  The single FIFO fold thread keeps
+        wave order, so the fold sequence -- and with it the bit-identity
+        contract -- is exactly the serial path's.
+
+        Mesh waves stay synchronous (overflow retries force a per-wave
+        sync), as does ``overlap=False``.
+        """
+        collect = collect or self._collect_wave
+        from_stats = from_stats or (lambda ws: ws)
+        tokens = np.asarray(tokens, np.int32)
+        self.cfg.validate_tokens(tokens)
+        if self.mesh is not None and self.mesh.size > 1:
+            for wave_stats in self._iter_wave_stats_mesh(tokens):
+                consume(from_stats(wave_stats))
+            return
+        if not self.overlap:
+            for tok_ext, n_live in self._windows(tokens):
+                consume(collect(self._submit_wave(tok_ext, n_live)))
+            return
+        import queue
+        import threading
+
+        work: queue.Queue = queue.Queue(maxsize=_WAVES_IN_FLIGHT)
+        failure: list[BaseException] = []
+
+        def fold_loop():
+            while True:
+                pend = work.get()
+                try:
+                    if pend is None:
+                        return
+                    if not failure:
+                        consume(collect(pend))
+                except BaseException as e:      # propagate to the feeder
+                    failure.append(e)
+                finally:
+                    work.task_done()
+
+        folder = threading.Thread(target=fold_loop, name="wave-fold",
+                                  daemon=True)
+        folder.start()
+        try:
+            for tok_ext, n_live in self._windows(tokens):
+                if failure:
+                    break
+                work.put(self._submit_wave(tok_ext, n_live))
+        finally:
+            work.put(None)
+            folder.join()
+        if failure:
+            raise failure[0]
+
     # --- whole-job execution ------------------------------------------------- #
 
     def run(self, tokens):
@@ -639,8 +889,8 @@ class WaveExecutor:
         counters is the total segment rows fed through ``merge_segments`` --
         the accumulator's measured merge work."""
         from repro.core.stats import NGramStats
-        from repro.index.build import segment_from_stats
-        from repro.index.merge import (PairwiseSegmentAccumulator,
+        from repro.index.merge import (DeferredSegmentAccumulator,
+                                       PairwiseSegmentAccumulator,
                                        TieredSegmentAccumulator,
                                        segment_to_stats)
 
@@ -657,27 +907,30 @@ class WaveExecutor:
                 ("jobs", "map_records", "shuffle_records", "shuffle_bytes",
                  "retries", "overflow", "waves", "fold_rows"), 0)
             counters["shuffle_skew"] = 0.0
-            acc_cls = (TieredSegmentAccumulator
-                       if self.accumulator == "tiered"
-                       else PairwiseSegmentAccumulator)
+            acc_cls = {"defer": DeferredSegmentAccumulator,
+                       "tiered": TieredSegmentAccumulator,
+                       "pairwise": PairwiseSegmentAccumulator}[self.accumulator]
             acc = acc_cls(route=self.merge_route,
                           use_kernels=self.cfg.use_kernels)
-            for wave_stats in self.iter_wave_stats(tokens):
+
+            def fold(part: WavePartial):
+                # runs on the fold thread: overlaps the next wave's dispatch
                 counters["waves"] += 1
-                _merge_wave_counters(counters, wave_stats.counters)
+                _merge_wave_counters(counters, part.counters)
                 with obs_trace.span("wave.fold") as sp:
                     if sp:
-                        sp.set(wave=counters["waves"] - 1,
-                               rows=len(wave_stats))
-                    seg = segment_from_stats(wave_stats,
-                                             vocab_size=self.cfg.vocab_size)
-                    acc.push(seg, n_rows=len(wave_stats))
+                        sp.set(wave=counters["waves"] - 1, rows=part.n_rows)
+                    acc.push(part.segment, n_rows=part.n_rows)
+
+            self._for_each_wave(tokens, fold,
+                                collect=self._collect_wave_segment,
+                                from_stats=self._partial_from_stats)
             with obs_trace.span("wave.finalize") as sp:
-                merged = segment_to_stats(acc.result())
+                # tau filters inside segment_to_stats, *before* the term
+                # unpack, so only the monolithic-sized survivor set pays it
+                out = segment_to_stats(acc.result(), min_count=self.cfg.tau)
                 counters["fold_rows"] = acc.fold_rows
-                keep = merged.counts >= self.cfg.tau
-                out = NGramStats(merged.grams[keep], merged.lengths[keep],
-                                 merged.counts[keep],
+                out = NGramStats(out.grams, out.lengths, out.counts,
                                  obs_metrics.normalize_counters(counters))
                 if sp:
                     sp.set(rows=len(out), fold_rows=acc.fold_rows)
@@ -691,10 +944,10 @@ class WaveExecutor:
         is frozen and ingested as a fresh L0 segment -- point/top-k answers
         over the resulting index match a from-scratch build over the full
         corpus at ``tau = 1`` exactly, while the device only ever holds one
-        wave of job state plus the serving artifacts.  The wave feed is
-        double-buffered, so wave ``i + 1``'s device work overlaps wave
-        ``i``'s ingest/compaction.  Returns ``(index, reports)`` with one
-        ingest report per wave.
+        wave of job state plus the serving artifacts.  The generational
+        ingest (freeze + compaction) runs on the overlapped fold thread, so
+        it proceeds while the device already works on the next waves.
+        Returns ``(index, reports)`` with one ingest report per wave.
         """
         from repro.index.merge import GenerationalIndex
         if gen is None:
@@ -703,6 +956,15 @@ class WaveExecutor:
                                     compress=compress,
                                     use_kernels=self.cfg.use_kernels, **gen_kw)
         reports = []
-        for wave_stats in self.iter_wave_stats(tokens):
-            reports.append(gen.ingest(wave_stats))
+
+        def ingest(part: WavePartial):
+            # hand the bare collected segment to the LSM (an empty wave
+            # ingests no segment); the query artifact materializes lazily
+            # on first read
+            reports.append(gen.ingest_segment(
+                part.segment if part.n_rows else None, n_rows=part.n_rows))
+
+        self._for_each_wave(tokens, ingest,
+                            collect=self._collect_wave_segment,
+                            from_stats=self._partial_from_stats)
         return gen, reports

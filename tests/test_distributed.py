@@ -489,3 +489,38 @@ def test_moe_sort_dispatch_under_mesh():
         print("OK", float(loss))
     """)
     assert "OK" in out
+
+
+def test_mesh_wave_capacity_retry_counters_not_double_counted():
+    """Mesh-wave capacity retries rerun the whole round program, so a naive
+    fold of every attempt's stats would double-count map/shuffle records.
+    Regression: only the successful attempt's stats may land -- the tight-
+    and ample-capacity runs must agree on every additive counter (and on the
+    output), differing only in ``retries``."""
+    out = run_with_devices("""
+        import dataclasses, numpy as np, jax
+        from repro.core import run_job
+        from repro.core.stats import NGramConfig
+        from repro.pipeline import WaveExecutor
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(1)
+        # heavy skew: tiny vocab concentrates lead terms; combine=False keeps
+        # the duplicate records that actually overflow the (src, dst) buckets
+        toks = rng.integers(0, 3, 2400)
+        ample_cfg = NGramConfig(sigma=3, tau=1, vocab_size=2, combine=False,
+                                capacity_factor=50.0)
+        tight_cfg = dataclasses.replace(ample_cfg, capacity_factor=0.05)
+        ample = WaveExecutor(ample_cfg, wave_tokens=600, mesh=mesh).run(toks)
+        tight = WaveExecutor(tight_cfg, wave_tokens=600, mesh=mesh).run(toks)
+        assert ample.counters.get("retries", 0) == 0
+        assert tight.counters["retries"] >= 1
+        assert tight.counters["overflow"] == 0     # final attempts clean
+        for k in ("jobs", "map_records", "shuffle_records", "shuffle_bytes",
+                  "waves", "fold_rows"):
+            assert tight.counters[k] == ample.counters[k], k
+        assert tight.to_dict() == ample.to_dict()
+        assert tight.to_dict() == run_job(toks, ample_cfg).to_dict()
+        print("OK retries=", tight.counters["retries"])
+    """)
+    assert "OK" in out

@@ -408,3 +408,83 @@ def test_suffix_map_record_invariant_across_waves():
     got = WaveExecutor(cfg, wave_tokens=97).run(toks)
     assert got.counters["map_records"] == n_tok
     assert got.counters["shuffle_records"] == n_tok
+
+
+# ------------------------------------------------------------ fused dispatch
+def test_fused_wave_one_stage_dispatch_per_wave():
+    """The whole-wave program really is ONE dispatch: a traced 8-wave run
+    emits exactly one ``round.stages`` span per wave even for a multi-round
+    plan (the rounds are fused inside the program, not looped on the host),
+    and every wave passes through exactly one collect and one fold."""
+    from repro.obs import trace as obs_trace
+
+    toks = make_corpus(400, 23, "zipf", seed=5)
+    n_waves = 8
+    wave = -(-len(toks) // n_waves)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=23, method="apriori_scan")
+    assert plan_for(cfg).rounds > 1
+    WaveExecutor(cfg, wave_tokens=wave).run(toks)   # warm the program caches
+    tracer = obs_trace.enable_tracing()
+    try:
+        WaveExecutor(cfg, wave_tokens=wave).run(toks)
+    finally:
+        obs_trace.disable_tracing()
+    names = [e["name"] for e in tracer.events]
+    assert names.count("round.stages") == n_waves
+    assert names.count("wave.collect") == n_waves
+    assert names.count("wave.fold") == n_waves
+    assert names.count("wave.run") == 1
+
+
+def test_direct_segment_collect_matches_stats_route():
+    """The packed-lane collect (``_collect_wave_segment``: keys built as
+    ``lanes & prefix_mask[len]`` straight off the sorted records) must
+    produce the exact segment of the stats detour
+    (``segment_from_wave_stats(_collect_wave(...))``) -- per wave, every
+    method."""
+    from repro.index.build import segment_from_wave_stats
+
+    toks = make_corpus(300, 23, "zipf", seed=9)
+    for method in sorted(METHODS):
+        cfg = NGramConfig(sigma=4, tau=2, vocab_size=23, method=method,
+                          apriori_index_k=2)
+        ex = WaveExecutor(cfg, wave_tokens=61)
+        assert ex._direct
+        for tok_ext, n_live in ex._windows(np.asarray(toks, np.int32)):
+            pend = ex._submit_wave(tok_ext, n_live)
+            part = ex._collect_wave_segment(pend)
+            want = segment_from_wave_stats(ex._collect_wave(pend),
+                                           vocab_size=cfg.vocab_size)
+            assert part.n_rows == want.n_rows, method
+            np.testing.assert_array_equal(np.asarray(part.segment.keys),
+                                          np.asarray(want.keys))
+            np.testing.assert_array_equal(np.asarray(part.segment.counts),
+                                          np.asarray(want.counts))
+
+
+def test_wave_parity_unpacked_lane_fallback():
+    """``pack=False`` packs lanes with a vocabulary other than the segment's,
+    so the direct-segment collect must disable itself and route through the
+    stats collect -- still bit-identical to the monolithic job."""
+    toks = make_corpus(200, 11, "zipf", seed=13)
+    cfg = NGramConfig(sigma=3, tau=2, vocab_size=11, pack=False)
+    assert not WaveExecutor(cfg, wave_tokens=37)._direct
+    check_wave_parity(toks, cfg, 37)
+
+
+def test_overlap_off_matches_overlap_on():
+    """The background fold thread is a scheduling choice, not a semantic one:
+    overlap on/off must agree bit-for-bit on stats, counters, and the
+    streaming ingest reports."""
+    toks = make_corpus(300, 19, "zipf", seed=17)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=19)
+    on = WaveExecutor(cfg, wave_tokens=41).run(toks)
+    off = WaveExecutor(cfg, wave_tokens=41, overlap=False).run(toks)
+    assert_stats_equal(on, off)
+    assert on.counters == off.counters
+    cfg1 = NGramConfig(sigma=4, tau=1, vocab_size=19)
+    g_on, r_on = WaveExecutor(cfg1, wave_tokens=41).run_streaming(toks)
+    g_off, r_off = WaveExecutor(cfg1, wave_tokens=41,
+                                overlap=False).run_streaming(toks)
+    assert r_on == r_off
+    assert g_on.generation == g_off.generation
