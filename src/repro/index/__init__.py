@@ -15,7 +15,7 @@ from . import build, compress, merge, query, serve
 from .build import (IndexSegment, NGramIndex, build_index, index_from_segment,
                     segment_from_stats)
 from .compress import (CompressedNGramIndex, EliasFano, build_compressed_index,
-                       compress_index)
+                       compress_index, decode_segment)
 from .merge import (GenerationalIndex, PairwiseSegmentAccumulator,
                     TieredSegmentAccumulator, generational_from_stats,
                     merge_indexes, merge_segments, segment_to_stats,
@@ -30,7 +30,7 @@ __all__ = ["build", "compress", "merge", "query", "serve",
            "IndexSegment", "NGramIndex", "build_index", "index_from_segment",
            "segment_from_stats",
            "CompressedNGramIndex", "EliasFano", "build_compressed_index",
-           "compress_index",
+           "compress_index", "decode_segment",
            "GenerationalIndex", "TieredSegmentAccumulator",
            "PairwiseSegmentAccumulator", "generational_from_stats",
            "merge_indexes", "merge_segments", "segment_to_stats",

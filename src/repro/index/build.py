@@ -84,9 +84,15 @@ class IndexSegment:
     @property
     def n_rows(self) -> int:
         """Real (non-sentinel) rows; the length column is the primary sort key,
-        so one host-side searchsorted recovers the boundary."""
-        lens = np.asarray(self.keys[..., 0])
-        return int(np.searchsorted(lens, self.sigma, side="right"))
+        so one host-side searchsorted recovers the boundary.  Cached on first
+        read (segments are immutable; compaction polls row counts per ingest,
+        which would otherwise re-sync the device per poll)."""
+        cached = self.__dict__.get("_n_rows")
+        if cached is None:
+            lens = np.asarray(self.keys[..., 0])
+            cached = int(np.searchsorted(lens, self.sigma, side="right"))
+            object.__setattr__(self, "_n_rows", cached)
+        return cached
 
     @property
     def nbytes(self) -> int:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -133,8 +134,15 @@ class EliasFano:
 
     def select_many(self, i: jax.Array) -> jax.Array:
         """:meth:`select`, but batch-adaptive: whole-decode + gather when the
-        (static) batch size amortizes it, per-query directory search when not."""
-        if self.n <= 64 * int(np.prod(i.shape)):
+        (static) batch size amortizes it, per-query directory search when not.
+
+        The crossover is deliberately tight (4 selects per value, was 64):
+        ``decode_all``'s whole-table sort dominated batch-4096 lookup latency,
+        and past a few selects per value the per-query directory search wins
+        on every backend we measured.  Hot paths should prefer the decoded
+        caches on :class:`CompressedNGramIndex` and never reach this.
+        """
+        if self.n <= 4 * int(np.prod(i.shape)):
             return jnp.take(self.decode_all(), jnp.clip(i, 0, self.n - 1))
         return self.select(i)
 
@@ -167,17 +175,17 @@ class CompressedNGramIndex:
     """
 
     # --- point-lookup view -------------------------------------------------- #
-    heads: jax.Array         # [nb, 1+L] uint32 (row length | packed head lanes)
+    heads: jax.Array         # [nb, HL] uint32 dense (row_len|terms) head keys
     lcps: jax.Array          # packed lcp stream, lcp_width bits/row
     payload: jax.Array       # packed suffix-term stream, term_bits bits/term
     block_base: jax.Array    # [nb+1] uint32 cumulative suffix terms per block
     counts_packed: jax.Array  # packed cf stream, count_width bits/row
     ef_section: EliasFano    # section_start  (sigma+1 values, universe=size)
-    # (no point-view fanout: point lookups bsearch ALL heads -- with one search
-    # per query a bracket fetch costs more than the steps it saves; the
-    # continuation path runs two searches per query and keeps its bracket)
+    # (both views bracket their head bsearch through the decoded fanout
+    # caches below; the point view's bracket rows never need EF encoding --
+    # they are the flat fanout table's, divided by block_size)
     # --- continuation view -------------------------------------------------- #
-    cont_heads: jax.Array        # [nb, 1+L] uint32 (gram length | prefix lanes)
+    cont_heads: jax.Array        # [nb, HL] uint32 dense (gram len|prefix) keys
     cont_lcps: jax.Array
     cont_payload: jax.Array
     cont_block_base: jax.Array
@@ -185,6 +193,19 @@ class CompressedNGramIndex:
     cont_counts_packed: jax.Array  # packed cf stream, count_width bits/row
     ef_cont_fanout: EliasFano
     ef_cumsum: EliasFano          # cont_cumsum (size+1 values)
+    # --- cached select directories ------------------------------------------ #
+    # Deterministic decodes of the EF structures, precomputed once at build so
+    # the query hot path gathers instead of paying per-batch EF select work.
+    # The EFs above stay the at-rest format (``nbytes_at_rest``); these are
+    # resident-only acceleration state, pure functions of the streams, so
+    # merged-vs-built bit parity holds.  The fanout caches store the
+    # head-search bracket *lo block* per (section, lead bucket) -- uint16 when
+    # the block count allows -- which turns both views' head bsearch into the
+    # fixed-``head_steps`` bracketed form.
+    sec_cache: jax.Array       # [sigma+1] int32 decoded section starts
+    cumsum_cache: jax.Array    # [size+1] uint32 decoded cont_cumsum
+    fan_cache: jax.Array       # [sigma*(n_fanout+1)] point-view bracket blocks
+    cont_fan_cache: jax.Array  # [sigma*(n_fanout+1)] cont-view bracket blocks
     # --- static meta -------------------------------------------------------- #
     sigma: int = dataclasses.field(metadata=dict(static=True))
     vocab_size: int = dataclasses.field(metadata=dict(static=True))
@@ -209,11 +230,23 @@ class CompressedNGramIndex:
     @property
     def n_rows(self) -> int:
         """Real (non-sentinel) rows; the last section end."""
-        return int(np.asarray(self.ef_section.select(
-            jnp.asarray([self.ef_section.n - 1]))[0]))
+        return int(np.asarray(self.sec_cache[-1]))
 
     @property
     def nbytes(self) -> int:
+        """Total resident bytes: the at-rest streams plus the decoded caches."""
+        caches = (self.sec_cache, self.cumsum_cache, self.fan_cache,
+                  self.cont_fan_cache)
+        return (self.nbytes_at_rest
+                + sum(int(np.asarray(a).nbytes) for a in caches))
+
+    @property
+    def nbytes_at_rest(self) -> int:
+        """Bytes of the persisted compressed artifact: the front-coded /
+        bit-packed streams plus the EF directories.  Excludes the decoded
+        query caches, which are derived resident-only state rebuilt from the
+        streams -- the number the compression-ratio contract and the
+        generational ``bytes_at_rest`` gauges report."""
         arrays = (self.heads, self.lcps, self.payload, self.block_base,
                   self.counts_packed, self.cont_heads, self.cont_lcps,
                   self.cont_payload, self.cont_block_base,
@@ -224,56 +257,199 @@ class CompressedNGramIndex:
 
     def section_starts(self) -> jax.Array:
         """Decoded [sigma+1] int32 section starts (the in-block length key)."""
-        return self.ef_section.decode_all().astype(jnp.int32)
+        return self.sec_cache
 
     def to_segment(self) -> IndexSegment:
         """Decode the point view back into the sorted :class:`IndexSegment`.
 
-        The inverse of ``compress_index`` restricted to the merge-relevant rows:
-        front-coded blocks decode to the exact term matrix (``decode_view``),
-        which re-packs to the exact lanes -- so segments extracted from the
-        compressed layout merge bit-identically to ones from the flat layout.
+        The inverse of ``compress_index`` restricted to the merge-relevant
+        rows: :func:`decode_segment` streams the front-coded blocks back to
+        the exact term matrix chunk by chunk, which re-packs to the exact
+        lanes -- so segments extracted from the compressed layout merge
+        bit-identically to ones from the flat layout.  (The merge path calls
+        ``decode_segment`` directly and never pads back to capacity.)
         """
-        r = self.n_rows
-        terms = decode_view(self, "point")[:r].astype(np.int32)
-        lanes = np.asarray(packing.pack_terms(jnp.asarray(terms),
-                                              vocab_size=self.vocab_size),
-                           np.uint32)
-        sec = np.asarray(self.section_starts())
-        lens = row_lengths(sec, self.size)[:r].astype(np.uint32)
-        keys = np.concatenate([lens[:, None], lanes], axis=1)
-        counts = np.asarray(extract_bits(self.counts_packed,
-                                         jnp.arange(max(r, 1)),
-                                         self.count_width), np.uint32)[:r]
+        seg = decode_segment(self)
         return IndexSegment(
-            keys=jnp.asarray(pad_rows(keys, self.size, SENTINEL)),
-            counts=jnp.asarray(pad_rows(counts, self.size, 0)),
+            keys=jnp.asarray(pad_rows(np.asarray(seg.keys), self.size,
+                                      SENTINEL)),
+            counts=jnp.asarray(pad_rows(np.asarray(seg.counts), self.size,
+                                        0)),
             sigma=self.sigma, vocab_size=self.vocab_size)
 
 
 # shared with build/merge via index/_layout (satellite: constants dedupe)
 _row_lengths = row_lengths
 
+# rows decoded per chunk by decode_segment; module-level so tests can shrink
+# it and assert the working-set bound
+_DECODE_CHUNK_ROWS = 4096
+# peak rows any single decode chunk materialized (test hook for the
+# "compaction never decodes a full table" contract)
+_DECODE_WATERMARK = {"rows": 0}
 
-def _front_code(terms: np.ndarray, lanes: np.ndarray, row_len: np.ndarray,
+
+@partial(jax.jit, static_argnames=("term_bits", "lcp_width", "block_size",
+                                   "vocab_size", "use_kernels"))
+def _decode_chunk(lcps, payload, block_base, sec, ids, *, term_bits: int,
+                  lcp_width: int, block_size: int, vocab_size: int,
+                  use_kernels: bool):
+    """Packed lanes [len(ids)*block_size, L] of the requested point blocks."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    sigma = sec.shape[0] - 1
+    if use_kernels:
+        terms = kops.block_expand(lcps, payload, block_base, sec, ids,
+                                  sigma=sigma, term_bits=term_bits,
+                                  lcp_width=lcp_width, block_size=block_size,
+                                  len_off=0)
+    else:
+        terms = kref.block_expand_ref(lcps, payload, block_base, sec, ids,
+                                      term_bits=term_bits, lcp_width=lcp_width,
+                                      block_size=block_size, len_off=0)
+    return packing.pack_terms(terms.reshape(-1, sigma), vocab_size=vocab_size)
+
+
+def decode_segment(cidx: CompressedNGramIndex, *, chunk_rows: int | None = None,
+                   use_kernels: bool = False) -> IndexSegment:
+    """Stream the point view back into an **unpadded host** :class:`IndexSegment`.
+
+    The compressed-native merge entry point: blocks decode ``chunk_rows`` rows
+    at a time through one fixed-shape jitted program (the tail chunk clips
+    block ids instead of recompiling), so the peak decoded working set is
+    O(chunk), never the whole table.  Decode work is attributed to the metrics
+    registry (``merge.blocks_decoded`` / ``compress.rows_decoded``) so any
+    remaining full-table decode shows up in traces.
+    """
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    b = cidx.block_size
+    r = cidx.n_rows
+    nb_used = -(-r // b)                       # blocks holding real rows
+    cb = max(1, (chunk_rows if chunk_rows is not None
+                 else _DECODE_CHUNK_ROWS) // b)
+    # never wider than the table: an oversized chunk would pad ids out to the
+    # requested width and decode the clamp-filler blocks over and over
+    cb = min(cb, max(nb_used, 1))
+    n_lanes = cidx.n_lanes
+    keys = np.empty((r, 1 + n_lanes), np.uint32)
+    keys[:, 0] = _row_lengths(np.asarray(cidx.sec_cache),
+                              cidx.size)[:r].astype(np.uint32)
+    sp = obs_trace.span("compress.decode")
+    if sp:
+        sp.set(rows=r, blocks=nb_used, chunk_blocks=cb)
+    sp.__enter__()
+    try:
+        for c0 in range(0, nb_used, cb):
+            ids = jnp.minimum(jnp.arange(c0, c0 + cb, dtype=jnp.int32),
+                              max(cidx.n_blocks - 1, 0))
+            lanes = np.asarray(_decode_chunk(
+                cidx.lcps, cidx.payload, cidx.block_base, cidx.sec_cache, ids,
+                term_bits=cidx.term_bits, lcp_width=cidx.lcp_width,
+                block_size=b, vocab_size=cidx.vocab_size,
+                use_kernels=use_kernels), np.uint32)
+            lo, hi = c0 * b, min((c0 + cb) * b, r)
+            keys[lo:hi, 1:] = lanes[:hi - lo]
+            _DECODE_WATERMARK["rows"] = max(_DECODE_WATERMARK["rows"], cb * b)
+        counts = np.asarray(extract_bits(cidx.counts_packed,
+                                         jnp.arange(max(r, 1)),
+                                         cidx.count_width), np.uint32)[:r]
+    finally:
+        sp.__exit__(None, None, None)
+    reg = obs_metrics.get_registry()
+    reg.counter("merge.blocks_decoded").add(nb_used)
+    reg.counter("compress.rows_decoded").add(r)
+    return IndexSegment(keys=keys, counts=counts, sigma=cidx.sigma,
+                        vocab_size=cidx.vocab_size)
+
+
+def head_key_layout(sigma: int, term_bits: int):
+    """((offset, width) per field, n_lanes) of the dense head search key.
+
+    Head rows are pure search accelerators (decode restarts from the payload
+    at every block head), so they use a denser layout than the row lanes:
+    (row_len, t0..t_{sigma-1}) concatenated MSB-first with no per-lane slack,
+    split into uint32 lanes.  Lex order over the lanes equals lex order over
+    (row_len, terms) -- the same total order the flat index sorts by -- while
+    usually saving a lane per head vs the old (len | packed lanes) form:
+    fewer gathers and compares per bsearch step on the hot path, and a
+    smaller at-rest heads array.
+    """
+    len_bits = (sigma + 1).bit_length()     # row_len <= sigma+1 (sentinels)
+    widths = [len_bits] + [term_bits] * sigma
+    offs, o = [], 0
+    for w in widths:
+        offs.append(o)
+        o += w
+    return tuple(zip(offs, widths)), -(-o // 32)
+
+
+def _pack_head_keys(row_len: np.ndarray, terms: np.ndarray,
+                    *, term_bits: int) -> np.ndarray:
+    """[n, HL] uint32 dense head keys (host build side of
+    :func:`head_key_layout`; :func:`repro.index.query._dense_qkey` is the
+    traced query side -- the two must pack bit-identically)."""
+    n, sigma = terms.shape
+    fields, hl = head_key_layout(sigma, term_bits)
+    lanes = np.zeros((n, hl), np.uint32)
+    cols = [row_len.astype(np.uint64)] + \
+        [terms[:, j].astype(np.uint64) for j in range(sigma)]
+    for (o, w), v in zip(fields, cols):
+        v = v & np.uint64((1 << w) - 1)
+        r = o + w
+        j0 = o // 32
+        e0 = 32 * (j0 + 1)
+        if r <= e0:
+            lanes[:, j0] |= (v << np.uint64(e0 - r)).astype(np.uint32)
+        else:                       # field straddles a lane boundary
+            lanes[:, j0] |= (v >> np.uint64(r - e0)).astype(np.uint32)
+            e1 = 32 * ((r - 1) // 32 + 1)
+            lanes[:, (r - 1) // 32] |= (
+                (v << np.uint64(e1 - r)) & np.uint64(0xFFFFFFFF)
+            ).astype(np.uint32)
+    return lanes
+
+
+def _unpack_terms_host(lanes: np.ndarray, *, vocab_size: int,
+                       sigma: int) -> np.ndarray:
+    """Host-side :func:`packing.unpack_terms` -- the build path stays on the
+    host end to end instead of paying two device round-trips per view."""
+    bits = packing.bits_for_vocab(vocab_size)
+    per = packing.terms_per_lane(vocab_size)
+    shifts = np.arange(per - 1, -1, -1, dtype=np.uint32) * np.uint32(bits)
+    mask = np.uint32((1 << bits) - 1) if bits < 32 else np.uint32(0xFFFFFFFF)
+    t = (lanes[..., None] >> shifts) & mask
+    t = t.reshape(t.shape[:-2] + (-1,))
+    return t[..., :sigma].astype(np.int32)
+
+
+def _lcp_host(terms: np.ndarray) -> np.ndarray:
+    """lcp[i] = common prefix length of sorted rows i and i-1 (lcp[0] = 0)."""
+    lcp = np.zeros(terms.shape[0], np.int32)
+    if terms.shape[0] > 1:
+        eq = (terms[1:] == terms[:-1]).astype(np.int32)
+        lcp[1:] = np.cumprod(eq, axis=1).sum(axis=1)
+    return lcp
+
+
+def _front_code(terms: np.ndarray, row_len: np.ndarray,
                 *, len_off: int, block_size: int, term_bits: int,
                 lcp_width: int, payload_words: int | None):
     """(heads, lcps, payload, block_base) for one view.
 
     terms  : [size, S] int32 decoded term rows (view order, sentinels included)
-    lanes  : [size, L] uint32 packed rows (head storage, for the head bsearch)
     len_off: 0 for the point view, 1 for the continuation (prefix) view --
              stored terms per row = clip(row_len - len_off, 0, S); everything
              past that is PAD and reconstructed as 0.
     """
-    from repro.kernels import ops as kops
     size, sigma = terms.shape
     b = block_size
     if size % b:
         raise ValueError(f"size {size} not a multiple of block_size {b}")
     store_len = np.clip(row_len - len_off, 0, sigma).astype(np.int32)
-    lcp = np.asarray(kops.lcp_boundary(jnp.asarray(terms))[0])
-    lcp = np.minimum(lcp, store_len)
+    lcp = np.minimum(_lcp_host(terms), store_len)
     lcp[0::b] = 0                      # block heads restart the coding chain
     ns = store_len - lcp
     j = np.arange(sigma)[None, :]
@@ -285,9 +461,21 @@ def _front_code(terms: np.ndarray, lanes: np.ndarray, row_len: np.ndarray,
     block_base = cum[0::b].astype(np.uint32)
     payload = pack_bits(suffix, term_bits, n_words=payload_words)
     lcps = pack_bits(lcp.astype(np.uint32), lcp_width)
-    heads = np.concatenate(
-        [row_len[0::b].astype(np.uint32)[:, None], lanes[0::b]], axis=1)
+    heads = _pack_head_keys(row_len[0::b], terms[0::b], term_bits=term_bits)
     return heads, lcps, payload, block_base
+
+
+def _fan_lo_blocks(fan_rows: np.ndarray, block_size: int,
+                   size: int) -> np.ndarray:
+    """Per-(section, bucket) head-search bracket start, in *blocks*.
+
+    The decoded fanout cache: one gather replaces the per-batch EF
+    select/decode work that used to seed the head bsearch, and storing block
+    ids (not rows) keeps it uint16 for every index under 64Ki blocks."""
+    lo = fan_rows // block_size
+    nb = size // block_size
+    dt = np.uint16 if nb <= np.iinfo(np.uint16).max else np.int32
+    return lo.astype(dt)
 
 
 def compress_index(idx: NGramIndex, *, block_size: int = 4,
@@ -308,18 +496,16 @@ def compress_index(idx: NGramIndex, *, block_size: int = 4,
     cw = count_width if count_width is not None else \
         max(1, int(counts.max()).bit_length() if counts.size else 1)
 
-    lanes = np.asarray(idx.lanes)
-    terms = np.asarray(packing.unpack_terms(
-        jnp.asarray(lanes), vocab_size=vocab, sigma=sigma))
+    terms = _unpack_terms_host(np.asarray(idx.lanes), vocab_size=vocab,
+                               sigma=sigma)
     heads, lcps, payload, block_base = _front_code(
-        terms, lanes, row_len, len_off=0, block_size=block_size,
+        terms, row_len, len_off=0, block_size=block_size,
         term_bits=tb, lcp_width=lw, payload_words=payload_words)
 
-    c_lanes = np.asarray(idx.cont_prefix)
-    c_terms = np.asarray(packing.unpack_terms(
-        jnp.asarray(c_lanes), vocab_size=vocab, sigma=sigma))
+    c_terms = _unpack_terms_host(np.asarray(idx.cont_prefix),
+                                 vocab_size=vocab, sigma=sigma)
     c_heads, c_lcps, c_payload, c_block_base = _front_code(
-        c_terms, c_lanes, row_len, len_off=1, block_size=block_size,
+        c_terms, row_len, len_off=1, block_size=block_size,
         term_bits=tb, lcp_width=lw, payload_words=cont_payload_words)
 
     fan = np.asarray(idx.fanout, np.int64).reshape(-1)
@@ -358,6 +544,10 @@ def compress_index(idx: NGramIndex, *, block_size: int = 4,
         ef_cumsum=EliasFano.encode(
             cumsum, universe=cumsum_universe if cumsum_universe is not None
             else int(cumsum[-1])),
+        sec_cache=jnp.asarray(section_start.astype(np.int32)),
+        cumsum_cache=jnp.asarray(cumsum.astype(np.uint32)),
+        fan_cache=jnp.asarray(_fan_lo_blocks(fan, block_size, size)),
+        cont_fan_cache=jnp.asarray(_fan_lo_blocks(c_fan, block_size, size)),
         sigma=sigma, vocab_size=vocab, size=size,
         fanout_shift=idx.fanout_shift, n_fanout=idx.n_fanout,
         block_size=block_size, head_span=head_span,

@@ -55,7 +55,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from ._layout import SENTINEL, pad_rows, round_capacity, row_bytes_view
 from .build import IndexSegment, NGramIndex, build_index, index_from_segment
-from .compress import CompressedNGramIndex, compress_index
+from .compress import CompressedNGramIndex, compress_index, decode_segment
 
 DEFAULT_SIZE_RATIO = 4
 _U32_MAX = np.iinfo(np.uint32).max
@@ -254,7 +254,8 @@ def _fold_runs_host(keys: np.ndarray, counts: np.ndarray, *,
 
 
 def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
-                   pad_to: int | None = None) -> IndexSegment:
+                   pad_to: int | None = None,
+                   n_compressed: int | None = None) -> IndexSegment:
     """Merge sorted segments into one, summing counts of duplicate grams.
 
     ``route="kway"`` folds on the host exploiting the inputs' sortedness
@@ -265,6 +266,10 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
     re-sorts the concatenation (the ``mapreduce.sort`` fallback).  All three
     are bit-identical.  Raises ``ValueError`` if any merged count overflows
     the uint32 device lanes.
+
+    ``n_compressed`` is purely observational: callers that decoded some
+    inputs from the compressed layout record the flat/compressed mix on the
+    ``merge.segments`` span.
     """
     segs = list(segments)
     if not segs:
@@ -279,6 +284,9 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
     if sp:
         sp.set(n_segments=len(segs),
                rows_in=sum(int(s.keys.shape[0]) for s in segs))
+        if n_compressed is not None:
+            sp.set(n_compressed=n_compressed,
+                   n_flat=len(segs) - n_compressed)
     sp.__enter__()
     try:
         return _merge_segments_body(segs, sigma, vocab, route=route,
@@ -325,12 +333,29 @@ def _merge_segments_body(segs, sigma, vocab, *, route, use_kernels, pad_to):
                         vocab_size=vocab)
 
 
+def _merge_input_segment(entry, *, route: str) -> IndexSegment:
+    """Segment view of one merge input, compressed-native when needed.
+
+    Flat entries pass through (``to_segment`` on an :class:`NGramIndex` is a
+    field read); compressed entries stream-decode block chunks through
+    :func:`~repro.index.compress.decode_segment` -- O(chunk) peak decoded
+    working set, never a whole decoded table.  The host ``"kway"`` route (the
+    LSM default) takes the unpadded host segment straight in; device routes
+    get the capacity-padded device form their search kernels expect.
+    """
+    if isinstance(entry, CompressedNGramIndex):
+        return decode_segment(entry) if route == "kway" else entry.to_segment()
+    return entry if isinstance(entry, IndexSegment) else entry.to_segment()
+
+
 def merge_indexes(indexes, *, route: str = "merge", use_kernels: bool = False,
                   pad_to: int | None = None):
     """Merge finished indexes into one of the same layout, job-free.
 
     All inputs must share (sigma, vocab_size) and layout; compressed inputs must
-    agree on ``block_size`` and yield a compressed result.
+    agree on ``block_size`` and yield a compressed result.  Compressed inputs
+    merge natively: their rows stream through the chunked block decode rather
+    than a full-table ``to_segment`` round trip.
     """
     ixs = list(indexes)
     if not ixs:
@@ -339,8 +364,11 @@ def merge_indexes(indexes, *, route: str = "merge", use_kernels: bool = False,
     for ix in ixs[1:]:
         if isinstance(ix, CompressedNGramIndex) != compressed:
             raise ValueError("cannot merge mixed flat/compressed layouts")
-    seg = merge_segments([ix.to_segment() for ix in ixs], route=route,
-                         use_kernels=use_kernels)
+    seg = merge_segments([_merge_input_segment(ix, route=route) for ix in ixs],
+                         route=route, use_kernels=use_kernels,
+                         n_compressed=sum(
+                             isinstance(ix, CompressedNGramIndex)
+                             for ix in ixs))
     idx = index_from_segment(seg, pad_to=pad_to)
     if compressed:
         bs = {ix.block_size for ix in ixs}
@@ -599,6 +627,16 @@ class GenerationalIndex:
     Queries go through ``query.py`` / ``serve.py``, which sum point counts
     and exactly fold top-k candidates across live segments.  ``generation``
     bumps on every mutation -- the serving cache's invalidation key.
+
+    **Compressed-at-rest tier policy** (``compress=True``): hot L0 deltas
+    materialize *flat* -- they are small, short-lived, and merge away soon --
+    while any rung produced by a compaction merge freezes to the
+    :class:`CompressedNGramIndex` at-rest layout.  Provenance, not position,
+    decides: a rung that has been through a merge is the cold, grown run.
+    Mixed flat/compressed stacks answer bit-identically (the compressed
+    layout's parity contract), and compaction decodes compressed inputs
+    chunk-by-chunk via :func:`~repro.index.compress.decode_segment` -- never
+    a whole decoded table.
     """
 
     def __init__(self, *, sigma: int, vocab_size: int, compress: bool = False,
@@ -613,9 +651,10 @@ class GenerationalIndex:
         self.size_ratio = size_ratio
         self.route = route
         self.use_kernels = use_kernels
+        self._next_id = 0
         # newest (L0) first; an entry is a bare IndexSegment until a reader
         # materializes it (in place) into a built index artifact
-        self.levels: list = []
+        self.levels = []
         self.generation = 0
         # lifetime compaction accounting, surfaced through the metrics
         # registry on every mutation (see _publish_metrics)
@@ -623,26 +662,53 @@ class GenerationalIndex:
 
     # --- structure ----------------------------------------------------------- #
 
+    @property
+    def levels(self) -> list:
+        """Live level entries, newest first.  Assign a full list to replace
+        the stack (tests/benchmarks bootstrap with pre-built artifacts);
+        in-place mutation is reserved for the index itself, which keeps the
+        per-level provenance and identity books in sync."""
+        return self._levels
+
+    @levels.setter
+    def levels(self, entries) -> None:
+        # externally handed entries carry no merge provenance: bare segments
+        # among them materialize flat, matching a fresh-ingest L0
+        self._levels = list(entries)
+        self._from_merge = [False] * len(self._levels)
+        self._level_ids = [self._take_id() for _ in self._levels]
+
+    @property
+    def level_ids(self) -> tuple:
+        """Stable per-level identity tokens (newest first): a level keeps its
+        id as long as its content is untouched, and every ingest/merge mints
+        a fresh id -- the incremental re-shard reuse key (``serve.py``)."""
+        return tuple(self._level_ids)
+
+    def _take_id(self) -> int:
+        self._next_id += 1
+        return self._next_id
+
     def _materialize(self, i: int):
         """Build (and cache, replacing in place) level ``i``'s query artifact."""
-        entry = self.levels[i]
+        entry = self._levels[i]
         if isinstance(entry, IndexSegment):
             with obs_trace.span("gen.materialize") as sp:
                 idx = index_from_segment(entry)
-                if self.compress:
+                # tier policy: only merged (cold, grown) rungs freeze to the
+                # compressed at-rest layout; fresh L0 deltas stay flat
+                compressed = self.compress and self._from_merge[i]
+                if compressed:
                     idx = compress_index(idx, block_size=self.block_size)
                 if sp:
-                    sp.set(level=i, rows=idx.n_rows)
-            self.levels[i] = entry = idx
+                    sp.set(level=i, rows=idx.n_rows,
+                           compressed=int(compressed))
+            self._levels[i] = entry = idx
         return entry
-
-    @staticmethod
-    def _segment_of(entry) -> IndexSegment:
-        return entry if isinstance(entry, IndexSegment) else entry.to_segment()
 
     @property
     def segments(self) -> tuple:
-        return tuple(self._materialize(i) for i in range(len(self.levels)))
+        return tuple(self._materialize(i) for i in range(len(self._levels)))
 
     @property
     def n_segments(self) -> int:
@@ -712,7 +778,9 @@ class GenerationalIndex:
         """
         merges = 0
         if rows:
-            self.levels.insert(0, seg)
+            self._levels.insert(0, seg)
+            self._from_merge.insert(0, False)       # fresh delta: hot, flat
+            self._level_ids.insert(0, self._take_id())
             merges = self._compact()
         self.generation += 1
         self.compaction_stats["ingests"] += 1
@@ -724,14 +792,20 @@ class GenerationalIndex:
 
     def _merge_front(self, n: int) -> None:
         # elder segments first: merge-path ties keep generation order stable;
-        # compaction works on bare segments (any cached artifact of a merged
-        # level dies with it -- the merged level rebuilds lazily if read)
+        # compaction works on segment views (any cached artifact of a merged
+        # level dies with it -- the merged level rebuilds lazily if read);
+        # compressed rungs stream-decode chunk by chunk, never a full table
         with obs_trace.span("gen.compact") as sp:
-            rows_in = sum(ix.n_rows for ix in self.levels[:n])
+            rows_in = sum(ix.n_rows for ix in self._levels[:n])
             merged = merge_segments(
-                [self._segment_of(e) for e in reversed(self.levels[:n])],
-                route=self.route, use_kernels=self.use_kernels)
-            self.levels[:n] = [merged]
+                [_merge_input_segment(e, route=self.route)
+                 for e in reversed(self._levels[:n])],
+                route=self.route, use_kernels=self.use_kernels,
+                n_compressed=sum(isinstance(e, CompressedNGramIndex)
+                                 for e in self._levels[:n]))
+            self._levels[:n] = [merged]
+            self._from_merge[:n] = [True]           # merged: cold at rest
+            self._level_ids[:n] = [self._take_id()]
             self.compaction_stats["merges"] += 1
             self.compaction_stats["rows_merged"] += rows_in
             if sp:
@@ -758,9 +832,21 @@ class GenerationalIndex:
         reg.gauge("gen.generation").set(self.generation)
         reg.gauge("gen.segments").set(self.n_segments)
         reg.gauge("gen.rows").set(self.n_rows)
-        # rung sizes newest-first; bounded set of gauges (log-many rungs)
-        for i, ix in enumerate(self.levels):
+        # rung sizes newest-first; bounded set of gauges (log-many rungs).
+        # bytes_at_rest reads the entry as-is: a bare (not yet materialized)
+        # rung reports its flat segment bytes and shrinks at the first
+        # publish after its lazy compression; compressed rungs report their
+        # persisted stream bytes (nbytes_at_rest), not the resident total
+        # with decoded query caches
+        n_comp, total_bytes = 0, 0
+        for i, ix in enumerate(self._levels):
             reg.gauge(f"gen.rung{i}_rows").set(ix.n_rows)
+            b = getattr(ix, "nbytes_at_rest", None) or ix.nbytes
+            total_bytes += b
+            reg.gauge(f"gen.rung{i}_bytes_at_rest").set(b)
+            n_comp += isinstance(ix, CompressedNGramIndex)
+        reg.gauge("gen.bytes_at_rest").set(total_bytes)
+        reg.gauge("gen.compressed_segments").set(n_comp)
         for k, v in self.compaction_stats.items():
             c = reg.counter(f"gen.{k}")
             c.add(v - c.value)          # counters mirror the lifetime totals

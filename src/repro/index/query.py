@@ -46,7 +46,7 @@ import numpy as np
 from repro.kernels.bitpack import extract_bits
 from repro.mapreduce import pack as packing
 from .build import NGramIndex, search_steps
-from .compress import CompressedNGramIndex, EliasFano
+from .compress import CompressedNGramIndex
 from .merge import GenerationalIndex, merge_continuation_results
 
 
@@ -93,31 +93,61 @@ def _clean(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
 # compressed-index plan: EF bracket -> head bsearch -> block decode -> gather
 # --------------------------------------------------------------------------- #
 
-def _c_head_bracket(cidx: CompressedNGramIndex, table: EliasFano,
+def _dense_qkey(cidx: CompressedNGramIndex, length: jax.Array,
+                terms: jax.Array) -> jax.Array:
+    """[Q, HL] uint32 query keys in the dense head layout.
+
+    Traced mirror of ``compress._pack_head_keys`` over the same
+    ``head_key_layout``: (length, t0..t_{sigma-1}) MSB-first with no slack,
+    so one lane fewer to gather and compare per bsearch step than the old
+    (len | packed lanes) keys.  Garbage terms on invalid queries stay
+    in-width (masked), deterministic, and are discarded downstream."""
+    from .compress import head_key_layout
+    fields, hl = head_key_layout(cidx.sigma, cidx.term_bits)
+    cols = [length] + [terms[:, j] for j in range(cidx.sigma)]
+    out = [jnp.zeros(length.shape, jnp.uint32) for _ in range(hl)]
+    for (o, w), v in zip(fields, cols):
+        v = v.astype(jnp.uint32) & jnp.uint32((1 << w) - 1)
+        r = o + w
+        j0 = o // 32
+        e0 = 32 * (j0 + 1)
+        if r <= e0:
+            out[j0] = out[j0] | (v << (e0 - r))
+        else:                       # field straddles a lane boundary
+            out[j0] = out[j0] | (v >> (r - e0))
+            e1 = 32 * ((r - 1) // 32 + 1)
+            out[(r - 1) // 32] = out[(r - 1) // 32] | (v << (e1 - r))
+    return jnp.stack(out, axis=1)
+
+
+def _c_head_bracket(cidx: CompressedNGramIndex, table: jax.Array,
                     length: jax.Array, lead: jax.Array
                     ) -> tuple[jax.Array, jax.Array]:
     """[lo_h, hi_h) *block* bracket of the (length, lead-term bucket) cell.
 
-    One EF select fetches the cell's start row; the static ``head_span`` (the
-    widest cell measured at build time, in blocks) bounds its width, which both
-    seeds the head bsearch and caps its trip count (``head_steps``) -- without
-    the fanout bracket every head probe would pay log2(n_blocks) steps.  The
-    cell end itself is never needed: ranks count against the *global*
-    (length, terms) order, under which rows outside the cell still compare
-    consistently, so cell-clipping the result would be a no-op for any valid
-    query (invalid ones are masked upstream).
+    One gather off the decoded fanout cache (``fan_cache`` /
+    ``cont_fan_cache``, already in blocks) fetches the cell's start; the
+    static ``head_span`` (the widest cell measured at build time, in blocks)
+    bounds its width, which both seeds the head bsearch and caps its trip
+    count (``head_steps``) -- without the bracket every head probe would pay
+    log2(n_blocks) steps, and before the cache the fetch itself cost a
+    per-batch EF select/decode.  The cell end itself is never needed: ranks
+    count against the *global* (length, terms) order, under which rows
+    outside the cell still compare consistently, so cell-clipping the result
+    would be a no-op for any valid query (invalid ones are masked upstream).
     """
     sec = jnp.clip(length - 1, 0, cidx.sigma - 1)
     b = jnp.clip((lead >> jnp.uint32(cidx.fanout_shift)).astype(jnp.int32),
                  0, cidx.n_fanout - 1)
     flat = sec * (cidx.n_fanout + 1) + b
-    lo_h = table.select_many(flat).astype(jnp.int32) // cidx.block_size
+    lo_h = jnp.take(table, flat).astype(jnp.int32)
     return lo_h, jnp.minimum(lo_h + cidx.head_span, cidx.n_blocks)
 
 
 def _c_rank(cidx: CompressedNGramIndex, blk: jax.Array, q_terms: jax.Array,
             q_len: jax.Array, sec: jax.Array, *, cont: bool,
-            use_kernels: bool) -> tuple[jax.Array, jax.Array]:
+            use_kernels: bool, qblock: int = 256
+            ) -> tuple[jax.Array, jax.Array]:
     """(cnt_lt, cnt_eq) of each query inside its candidate block."""
     if cont:
         args = (cidx.cont_lcps, cidx.cont_payload, cidx.cont_block_base)
@@ -127,31 +157,39 @@ def _c_rank(cidx: CompressedNGramIndex, blk: jax.Array, q_terms: jax.Array,
               block_size=cidx.block_size, len_off=1 if cont else 0)
     if use_kernels:
         from repro.kernels import ops as kops
-        return kops.block_decode(*args, sec, blk, q_terms, q_len, **kw)
+        return kops.block_decode(*args, sec, blk, q_terms, q_len, **kw,
+                                 qblock=qblock)
+    # the jnp ref path processes the whole batch at once; qblock only tiles
+    # the Pallas grid
     from repro.kernels import ref as kref
     return kref.block_decode_ref(*args, sec, blk, q_terms, q_len, **kw)
 
 
 def _c_lookup_packed(cidx: CompressedNGramIndex, q_lanes: jax.Array,
                      q_len: jax.Array, valid: jax.Array, *,
-                     use_kernels: bool) -> jax.Array:
+                     use_kernels: bool, qblock: int = 256,
+                     q_terms: jax.Array | None = None) -> jax.Array:
     b, nb = cidx.block_size, cidx.n_blocks
     sec = cidx.section_starts()
-    qkey = jnp.concatenate([q_len.astype(jnp.uint32)[:, None], q_lanes], axis=1)
+    if q_terms is None:
+        # pre-packed callers (the sharded server ships lanes only): recover
+        # the terms; the cleaned-gram entry points pass them through instead
+        q_terms = packing.unpack_terms(q_lanes, vocab_size=cidx.vocab_size,
+                                       sigma=cidx.sigma).astype(jnp.int32)
+    qkey = _dense_qkey(cidx, q_len, q_terms)
     # point rows are unique, so the block holding q (if any) is the last one
-    # whose head <= q: upper bound over heads, minus one.  The search runs
-    # over ALL heads: with one search per query the EF fanout bracket costs
-    # more to fetch than the log2(n_blocks / widest-cell) steps it saves
-    # (measured on the CPU ref path; continuations amortize it over two
-    # searches and keep it)
-    zeros = jnp.zeros_like(q_len)
-    pos_h = _bsearch(cidx.heads, qkey, zeros, zeros + nb, upper=True,
-                     use_kernels=use_kernels)
+    # whose head <= q: upper bound over heads, minus one.  The fanout-cache
+    # bracket caps the search at head_steps trips (log2 of the widest cell)
+    # instead of log2(n_blocks) -- heads outside the cell compare
+    # consistently under the global order, so the bracketed result is
+    # bit-identical to a full-range search
+    lead = packing.lead_term(q_lanes[:, 0], vocab_size=cidx.vocab_size)
+    lo_h, hi_h = _c_head_bracket(cidx, cidx.fan_cache, q_len, lead)
+    pos_h = _bsearch(cidx.heads, qkey, lo_h, hi_h, upper=True,
+                     use_kernels=use_kernels, steps=cidx.head_steps)
     blk = jnp.clip(pos_h - 1, 0, nb - 1)
-    q_terms = packing.unpack_terms(q_lanes, vocab_size=cidx.vocab_size,
-                                   sigma=cidx.sigma).astype(jnp.int32)
     cnt_lt, cnt_eq = _c_rank(cidx, blk, q_terms, q_len, sec, cont=False,
-                             use_kernels=use_kernels)
+                             use_kernels=use_kernels, qblock=qblock)
     pos = jnp.clip(blk * b + cnt_lt, 0, cidx.size - 1)
     hit = valid & (cnt_eq > 0)       # uniqueness makes equality self-validating
     cf = extract_bits(cidx.counts_packed, pos, cidx.count_width)
@@ -160,15 +198,17 @@ def _c_lookup_packed(cidx: CompressedNGramIndex, q_lanes: jax.Array,
 
 def _c_continuations_packed(cidx: CompressedNGramIndex, p_lanes: jax.Array,
                             p_len: jax.Array, valid: jax.Array, *, k: int,
-                            use_kernels: bool):
+                            use_kernels: bool, qblock: int = 256,
+                            p_terms: jax.Array | None = None):
     b, nb = cidx.block_size, cidx.n_blocks
     sec = cidx.section_starts()
     lead = packing.lead_term(p_lanes[:, 0], vocab_size=cidx.vocab_size)
     target = p_len + 1
-    lo_h, hi_h = _c_head_bracket(cidx, cidx.ef_cont_fanout, target, lead)
-    qkey = jnp.concatenate([target.astype(jnp.uint32)[:, None], p_lanes], axis=1)
-    p_terms = packing.unpack_terms(p_lanes, vocab_size=cidx.vocab_size,
-                                   sigma=cidx.sigma).astype(jnp.int32)
+    lo_h, hi_h = _c_head_bracket(cidx, cidx.cont_fan_cache, target, lead)
+    if p_terms is None:
+        p_terms = packing.unpack_terms(p_lanes, vocab_size=cidx.vocab_size,
+                                       sigma=cidx.sigma).astype(jnp.int32)
+    qkey = _dense_qkey(cidx, target, p_terms)
     # duplicate prefixes can straddle blocks, so the lower bound needs the
     # block *before* the first head >= q, the upper bound the block of the
     # last head <= q (see compress.py docstring for the run/head argument)
@@ -183,11 +223,14 @@ def _c_continuations_packed(cidx: CompressedNGramIndex, p_lanes: jax.Array,
     lt2, eq2 = _c_rank(cidx, jnp.concatenate([blk_lb, blk_ub]),
                        jnp.concatenate([p_terms, p_terms]),
                        jnp.concatenate([target, target]), sec, cont=True,
-                       use_kernels=use_kernels)
+                       use_kernels=use_kernels, qblock=qblock)
     lb = jnp.where(valid, blk_lb * b + lt2[:nq], 0)
     ub = jnp.where(valid, blk_ub * b + lt2[nq:] + eq2[nq:], 0)
     n_distinct = (ub - lb).astype(jnp.uint32)
-    mass = cidx.ef_cumsum.select_many(jnp.concatenate([ub, lb]))
+    # one gather off the decoded cumsum cache -- the resident EF structure
+    # stays the at-rest format, but the hot path never pays per-batch EF
+    # select/decode work (this select_many was the top-k latency gap)
+    mass = jnp.take(cidx.cumsum_cache, jnp.concatenate([ub, lb]))
     total = mass[:nq] - mass[nq:]
     offs = lb[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
     in_group = offs < ub[:, None]
@@ -201,13 +244,23 @@ def _c_continuations_packed(cidx: CompressedNGramIndex, p_lanes: jax.Array,
     return n_distinct, total, terms, counts
 
 
-@partial(jax.jit, static_argnames=("use_kernels",))
+@partial(jax.jit, static_argnames=("use_kernels", "qblock"))
 def lookup_packed(idx: NGramIndex, q_lanes: jax.Array, q_len: jax.Array,
-                  valid: jax.Array, *, use_kernels: bool = False) -> jax.Array:
-    """Point counts [Q] uint32 for pre-packed queries (the serving hot path)."""
+                  valid: jax.Array, *, use_kernels: bool = False,
+                  qblock: int = 256,
+                  q_terms: jax.Array | None = None) -> jax.Array:
+    """Point counts [Q] uint32 for pre-packed queries (the serving hot path).
+
+    ``qblock`` tiles the compressed block-decode kernel's query grid (a TPU
+    tuning knob; the jnp ref path ignores it).  ``q_terms`` lets callers that
+    already hold the cleaned term matrix skip the lane unpack on the
+    compressed path -- for valid rows ``unpack(pack(g)) == g`` exactly and
+    invalid rows are masked, so answers are bit-identical either way.
+    """
     if isinstance(idx, CompressedNGramIndex):
         return _c_lookup_packed(idx, q_lanes, q_len, valid,
-                                use_kernels=use_kernels)
+                                use_kernels=use_kernels, qblock=qblock,
+                                q_terms=q_terms)
     lead = packing.lead_term(q_lanes[:, 0], vocab_size=idx.vocab_size)
     lo, hi = _bracket(idx, idx.fanout, q_len, lead)
     pos = _search(idx, idx.lanes, q_lanes, lo, hi, upper=False,
@@ -217,13 +270,15 @@ def lookup_packed(idx: NGramIndex, q_lanes: jax.Array, q_len: jax.Array,
     return jnp.where(hit, idx.counts[safe], 0)
 
 
-@partial(jax.jit, static_argnames=("use_kernels",))
+@partial(jax.jit, static_argnames=("use_kernels", "qblock"))
 def _lookup_single(idx: NGramIndex, grams: jax.Array, lengths: jax.Array,
-                   *, use_kernels: bool = False) -> jax.Array:
+                   *, use_kernels: bool = False,
+                   qblock: int = 256) -> jax.Array:
     """One-segment :func:`lookup` (jitted; the pre-generational entry point)."""
     grams, lengths, valid = _clean(idx, grams, lengths, lo_len=1)
     q_lanes = packing.pack_terms(grams, vocab_size=idx.vocab_size)
-    return lookup_packed(idx, q_lanes, lengths, valid, use_kernels=use_kernels)
+    return lookup_packed(idx, q_lanes, lengths, valid, use_kernels=use_kernels,
+                         qblock=qblock, q_terms=grams)
 
 
 _U32_MAX = np.iinfo(np.uint32).max
@@ -280,14 +335,18 @@ def lookup(idx, grams, lengths, *, use_kernels: bool = False):
                           np.asarray(grams).shape[0])
 
 
-@partial(jax.jit, static_argnames=("k", "use_kernels"))
+@partial(jax.jit, static_argnames=("k", "use_kernels", "qblock"))
 def continuations_packed(idx: NGramIndex, p_lanes: jax.Array, p_len: jax.Array,
                          valid: jax.Array, *, k: int,
-                         use_kernels: bool = False):
-    """Top-k completions for pre-packed prefixes (see :func:`continuations`)."""
+                         use_kernels: bool = False, qblock: int = 256,
+                         p_terms: jax.Array | None = None):
+    """Top-k completions for pre-packed prefixes (see :func:`continuations`).
+
+    ``qblock``/``p_terms`` as in :func:`lookup_packed`."""
     if isinstance(idx, CompressedNGramIndex):
         return _c_continuations_packed(idx, p_lanes, p_len, valid, k=k,
-                                       use_kernels=use_kernels)
+                                       use_kernels=use_kernels, qblock=qblock,
+                                       p_terms=p_terms)
     lead = packing.lead_term(p_lanes[:, 0], vocab_size=idx.vocab_size)
     target_len = p_len + 1
     lo, hi = _bracket(idx, idx.cont_fanout, target_len, lead)
@@ -307,16 +366,17 @@ def continuations_packed(idx: NGramIndex, p_lanes: jax.Array, p_len: jax.Array,
     return n_distinct, total, terms, counts
 
 
-@partial(jax.jit, static_argnames=("k", "use_kernels"))
+@partial(jax.jit, static_argnames=("k", "use_kernels", "qblock"))
 def _continuations_single(idx: NGramIndex, prefixes: jax.Array,
                           p_len: jax.Array, *, k: int,
-                          use_kernels: bool = False):
+                          use_kernels: bool = False, qblock: int = 256):
     """One-segment :func:`continuations` (jitted)."""
     prefixes, p_len, valid = _clean(idx, prefixes, p_len, lo_len=0)
     valid = valid & (p_len <= idx.sigma - 1)
     p_lanes = packing.pack_terms(prefixes, vocab_size=idx.vocab_size)
     return continuations_packed(idx, p_lanes, p_len, valid, k=k,
-                                use_kernels=use_kernels)
+                                use_kernels=use_kernels, qblock=qblock,
+                                p_terms=prefixes)
 
 
 def generational_continuation_sets(segments, fetch, *, k: int):

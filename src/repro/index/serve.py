@@ -126,6 +126,12 @@ class ShardedGenerationalIndex:
     generation: int
     mesh: jax.sharding.Mesh
     axis_name: str
+    # identity tokens of the generational levels each shard stack was built
+    # from (GenerationalIndex.level_ids), plus the (compress, block_size)
+    # layout the build used -- together the reuse key for incremental
+    # re-sharding (see shard_generational's ``prev``)
+    level_ids: tuple = ()
+    layout: tuple = ()
 
     @property
     def n_segments(self) -> int:
@@ -142,7 +148,9 @@ class ShardedGenerationalIndex:
 
 def shard_generational(gen: GenerationalIndex, *, mesh, axis_name: str = "data",
                        compress: bool | None = None,
-                       block_size: int | None = None) -> ShardedGenerationalIndex:
+                       block_size: int | None = None,
+                       prev: ShardedGenerationalIndex | None = None,
+                       ) -> ShardedGenerationalIndex:
     """Partition every live segment of ``gen`` over the mesh.
 
     Layout defaults follow the generational index's own (``compress`` /
@@ -153,21 +161,47 @@ def shard_generational(gen: GenerationalIndex, *, mesh, axis_name: str = "data",
     ``GenerationalIndex.ingest`` started dropping empty deltas) are skipped
     when a non-empty one exists: an all-sentinel shard stack would cost every
     query batch a full hash-routed round trip to add zeros.
+
+    ``prev`` (a ShardedGenerationalIndex built from an earlier generation of
+    the *same* index) makes the re-shard incremental: levels are immutable and
+    carry stable identity tokens (``gen.level_ids``), so any level whose id
+    appears in ``prev`` reuses its already-built shard stack verbatim --
+    including its compiled server cache -- and only new/merged levels pay the
+    partition + build + (optional) compress pass.  A small delta over a big
+    base then re-shards at O(delta) instead of O(total).  Reuse is skipped
+    when the mesh, axis, or layout differ.
     """
     if not gen.segments:
         raise ValueError("cannot shard an empty GenerationalIndex")
     compress = gen.compress if compress is None else compress
     block_size = gen.block_size if block_size is None else block_size
-    segments = [ix for ix in gen.segments if ix.n_rows] or \
-        list(gen.segments[:1])
-    shards = tuple(
-        build_sharded_index(segment_to_stats(ix.to_segment()),
-                            vocab_size=gen.vocab_size, mesh=mesh,
-                            axis_name=axis_name, compress=compress,
-                            block_size=block_size)
-        for ix in segments)
+    layout = (bool(compress), int(block_size))
+    cache: dict = {}
+    if (prev is not None and prev.mesh is mesh
+            and prev.axis_name == axis_name and prev.layout == layout):
+        cache = dict(zip(prev.level_ids, prev.shards))
+    ids = gen.level_ids
+    pairs = [(lid, ix) for lid, ix in zip(ids, gen.segments) if ix.n_rows] or \
+        [(ids[0], gen.segments[0])]
+    reused = sum(lid in cache for lid, _ in pairs)
+    with obs_trace.span("serve.shard_generational") as sp:
+        if sp:
+            sp.set(segments=len(pairs), reused=reused)
+        shards = tuple(
+            cache[lid] if lid in cache else
+            build_sharded_index(segment_to_stats(ix.to_segment()),
+                                vocab_size=gen.vocab_size, mesh=mesh,
+                                axis_name=axis_name, compress=compress,
+                                block_size=block_size)
+            for lid, ix in pairs)
+    reg = obs_metrics.get_registry()
+    if reg:
+        reg.counter("serve.shard_builds").add(len(pairs) - reused)
+        reg.counter("serve.shard_reuses").add(reused)
     return ShardedGenerationalIndex(shards=shards, generation=gen.generation,
-                                    mesh=mesh, axis_name=axis_name)
+                                    mesh=mesh, axis_name=axis_name,
+                                    level_ids=tuple(lid for lid, _ in pairs),
+                                    layout=layout)
 
 
 def result_width(mode: str, k: int) -> int:

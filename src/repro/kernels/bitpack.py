@@ -45,11 +45,18 @@ def pack_bits(values: np.ndarray, width: int,
     if width == 0 or n == 0:
         return words
     bitpos = np.arange(n, dtype=np.uint64) * np.uint64(width)
-    for b in range(width):
-        p = bitpos + np.uint64(b)
-        bit = ((values >> np.uint64(b)) & np.uint64(1)).astype(np.uint32)
-        np.bitwise_or.at(words, (p >> np.uint64(5)).astype(np.int64),
-                         bit << (p & np.uint64(31)).astype(np.uint32))
+    # width <= 32, so each value straddles at most two words: scatter the
+    # in-word part, then the spill into the next word for the lanes whose
+    # shifted value actually carries past bit 31.  (values < 2**32 and
+    # shift <= 31 keep the product inside uint64.)
+    w = (bitpos >> np.uint64(5)).astype(np.int64)
+    shifted = values << (bitpos & np.uint64(31))
+    np.bitwise_or.at(words, w,
+                     (shifted & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    spill = shifted >> np.uint64(32)
+    lanes = np.nonzero(spill)[0]
+    if lanes.size:
+        np.bitwise_or.at(words, w[lanes] + 1, spill[lanes].astype(np.uint32))
     return words
 
 

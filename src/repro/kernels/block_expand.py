@@ -1,0 +1,119 @@
+"""Batched front-coded block decode kernel -- the compressed-merge inner loop.
+
+Compressed-native merge (see ``repro.index.merge``) streams a compressed
+segment back into packed lanes a chunk of blocks at a time.  XLA's unfused
+decode materializes wide intermediate tensors per chunk; the kernel instead
+walks each block's front-coding chain once entirely in VMEM, reconstructing
+every row from the packed lcp / suffix-term streams, so only the decoded
+[block, sigma] tiles leave the core.
+
+TPU mapping: block batches ride the grid; the compressed streams (a few bits
+per row -- the whole point) ride in full as block inputs.  The per-row suffix
+fetch is a clamped dynamic take on the payload words with two-word bit
+extraction; the chain is a python loop over the static ``block_size`` rows
+with the previous decoded row as carry (front coding is inherently sequential
+per block, but every block in the tile decodes in lockstep on the VPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(*, sigma: int, term_bits: int, lcp_width: int,
+                 block_size: int, len_off: int):
+    # masks stay python ints (weak scalars): a jnp constant here would be
+    # captured by the traced kernel, which pallas_call rejects
+    per_word = 32 // lcp_width
+    lcp_mask = (1 << lcp_width) - 1
+    term_mask = (1 << term_bits) - 1
+
+    def kernel(lcps_ref, payload_ref, base_ref, sec_ref, blk_ref, out_ref):
+        lcps = lcps_ref[...]
+        payload = payload_ref[...]
+        nw = payload.shape[0]
+        sec = sec_ref[...]                            # [sigma+1] int32
+        blk = blk_ref[...]                            # [B] int32
+        b = blk.shape[0]
+        base = jnp.take(base_ref[...], blk).astype(jnp.int32)   # [B]
+        # iota, not arange: arange traces to a materialized constant, which
+        # pallas_call rejects ("captures constants ... pass them as inputs")
+        jota = jax.lax.broadcasted_iota(jnp.int32, (sigma,), 0)
+
+        prev = jnp.zeros((b, sigma), jnp.int32)
+        ns_off = jnp.zeros((b,), jnp.int32)
+        # python loop, not fori_loop: each row writes a static out slice, and
+        # block_size is small (4..16), so unrolling beats a carried write
+        for r in range(block_size):
+            g = blk * block_size + r                               # [B]
+            lw = jnp.take(lcps, g // per_word)
+            lcp = ((lw >> ((g % per_word) * lcp_width).astype(jnp.uint32))
+                   & lcp_mask).astype(jnp.int32)
+            row_len = jnp.sum((g[:, None] >= sec[None, :]).astype(jnp.int32),
+                              axis=1)                              # [B]
+            store_len = jnp.clip(row_len - len_off, 0, sigma)
+            lcp = jnp.minimum(lcp, store_len)
+            tpos = (base + ns_off)[:, None] + (jota[None, :] - lcp[:, None])
+            bitp = tpos.astype(jnp.uint32) * term_bits
+            w_lo = jnp.clip((bitp >> 5).astype(jnp.int32), 0, nw - 1)
+            sh = bitp & 31
+            lo = jnp.take(payload, w_lo) >> sh
+            hi = jnp.where(
+                sh > 0,
+                jnp.take(payload, jnp.clip(w_lo + 1, 0, nw - 1))
+                << ((32 - sh) & 31),
+                0)
+            stored = ((lo | hi) & term_mask).astype(jnp.int32)
+            cur = jnp.where(jota[None, :] < lcp[:, None], prev,
+                            jnp.where(jota[None, :] < store_len[:, None],
+                                      stored, 0))
+            out_ref[:, r * sigma:(r + 1) * sigma] = cur
+            prev = cur
+            ns_off = ns_off + store_len - lcp
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("sigma", "term_bits", "lcp_width",
+                                   "block_size", "len_off", "bblock",
+                                   "interpret"))
+def block_expand(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
+                 sec_starts: jax.Array, blk: jax.Array, *, sigma: int,
+                 term_bits: int, lcp_width: int, block_size: int, len_off: int,
+                 bblock: int = 256, interpret: bool = True) -> jax.Array:
+    """Decoded term matrix [B, block_size, sigma] int32 of the requested blocks.
+
+    lcps       : packed lcp stream, ``lcp_width`` bits/row (word-aligned widths)
+    payload    : packed suffix-term stream, ``term_bits`` bits/term
+    block_base : [nb+1] uint32 cumulative suffix-term count at block starts
+    sec_starts : [sigma+1] int32 decoded section starts (row-length key)
+    blk        : [B] int32 block ids to decode (0 <= blk < nb)
+    len_off    : 0 = point view, 1 = continuation (prefix) view
+    """
+    (b,) = blk.shape
+    nb = -(-b // bblock)
+    b_pad = nb * bblock
+    blk_p = jnp.pad(blk.astype(jnp.int32), (0, b_pad - b))
+    sec = sec_starts.astype(jnp.int32)
+    n_sec = sec.shape[0]
+    w1, w2, w3 = lcps.shape[0], payload.shape[0], block_base.shape[0]
+
+    out = pl.pallas_call(
+        _make_kernel(sigma=sigma, term_bits=term_bits, lcp_width=lcp_width,
+                     block_size=block_size, len_off=len_off),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((w1,), lambda i: (0,)),
+            pl.BlockSpec((w2,), lambda i: (0,)),
+            pl.BlockSpec((w3,), lambda i: (0,)),
+            pl.BlockSpec((n_sec,), lambda i: (0,)),
+            pl.BlockSpec((bblock,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((bblock, block_size * sigma), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b_pad, block_size * sigma), jnp.int32)],
+        interpret=interpret,
+    )(lcps, payload, block_base, sec, blk_p)[0]
+    return out[:b].reshape(b, block_size, sigma)

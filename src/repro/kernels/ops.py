@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 
 from .block_decode import block_decode as _block_decode
+from .block_expand import block_expand as _block_expand
 from .bsearch import bsearch as _bsearch
 from .hash_combine import hash_combine as _hash_combine
 from .hash_partition import hash_partition as _hash_partition
@@ -53,4 +54,13 @@ def block_decode(lcps, payload, block_base, sec_starts, blk, q_terms, q_len, *,
     return _block_decode(lcps, payload, block_base, sec_starts, blk, q_terms,
                          q_len, term_bits=term_bits, lcp_width=lcp_width,
                          block_size=block_size, len_off=len_off, qblock=qblock,
+                         interpret=INTERPRET)
+
+
+def block_expand(lcps, payload, block_base, sec_starts, blk, *, sigma: int,
+                 term_bits: int, lcp_width: int, block_size: int, len_off: int,
+                 bblock: int = 256):
+    return _block_expand(lcps, payload, block_base, sec_starts, blk,
+                         sigma=sigma, term_bits=term_bits, lcp_width=lcp_width,
+                         block_size=block_size, len_off=len_off, bblock=bblock,
                          interpret=INTERPRET)

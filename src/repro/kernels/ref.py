@@ -66,14 +66,14 @@ def bsearch_ref(lanes: jax.Array, queries: jax.Array, lo: jax.Array,
     return jax.vmap(one)(queries, lo, hi)
 
 
-def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
-                     sec_starts: jax.Array, blk: jax.Array, q_terms: jax.Array,
-                     q_len: jax.Array, *, term_bits: int, lcp_width: int,
-                     block_size: int, len_off: int) -> tuple[jax.Array, jax.Array]:
-    """(cnt_lt [Q], cnt_eq [Q]): front-coded block decode + in-block rank.
+def block_expand_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
+                     sec_starts: jax.Array, blk: jax.Array, *, term_bits: int,
+                     lcp_width: int, block_size: int,
+                     len_off: int) -> jax.Array:
+    """Decoded term matrix [B, block_size, sigma] int32 of the requested blocks.
 
-    Semantics match ``repro.kernels.block_decode.block_decode`` (its allclose
-    target and the ``use_kernels=False`` compressed-serving path).  Decode is the
+    Semantics match ``repro.kernels.block_expand.block_expand`` (its allclose
+    target and the ``use_kernels=False`` chunked-decode path).  Decode is the
     parallel form of the coding chain: lane j of row r comes from the last row
     p <= r whose stored span covers j.  When row id and term value pack into an
     int32 together, one running max over ``(row << term_bits) | value`` resolves
@@ -84,7 +84,7 @@ def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
     """
     from repro.kernels.bitpack import extract_bits
 
-    b, sigma = block_size, q_terms.shape[1]
+    b, sigma = block_size, sec_starts.shape[0] - 1
     g = blk.astype(jnp.int32)[:, None] * b + jnp.arange(b, dtype=jnp.int32)
     lcp = extract_bits(lcps, g, lcp_width).astype(jnp.int32)        # [Q, B]
     row_len = jnp.sum((g[..., None] >= sec_starts[None, None, :])
@@ -141,7 +141,27 @@ def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
         decoded = jnp.where(
             prov >= 0,
             jnp.take_along_axis(aligned, jnp.maximum(prov, 0), axis=1), 0)
+    return decoded
 
+
+def block_decode_ref(lcps: jax.Array, payload: jax.Array, block_base: jax.Array,
+                     sec_starts: jax.Array, blk: jax.Array, q_terms: jax.Array,
+                     q_len: jax.Array, *, term_bits: int, lcp_width: int,
+                     block_size: int, len_off: int) -> tuple[jax.Array, jax.Array]:
+    """(cnt_lt [Q], cnt_eq [Q]): front-coded block decode + in-block rank.
+
+    Semantics match ``repro.kernels.block_decode.block_decode`` (its allclose
+    target and the ``use_kernels=False`` compressed-serving path).  The decode
+    half is ``block_expand_ref``; this adds the per-query lexicographic
+    (row_len, terms) rank against the decoded candidate block.
+    """
+    b, sigma = block_size, q_terms.shape[1]
+    decoded = block_expand_ref(lcps, payload, block_base, sec_starts, blk,
+                               term_bits=term_bits, lcp_width=lcp_width,
+                               block_size=b, len_off=len_off)
+    g = blk.astype(jnp.int32)[:, None] * b + jnp.arange(b, dtype=jnp.int32)
+    row_len = jnp.sum((g[..., None] >= sec_starts[None, None, :])
+                      .astype(jnp.int32), axis=-1)                  # [Q, B]
     qt = q_terms.astype(jnp.int32)[:, None, :]
     eq = decoded == qt
     prefix_eq = jnp.concatenate(

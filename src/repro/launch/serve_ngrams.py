@@ -157,7 +157,7 @@ class StreamingNGramService:
     sub-batch so the compiled-program cache stays small.
     """
 
-    def __init__(self, cfg, *, compress: bool = False,
+    def __init__(self, cfg, *, compress: bool = False, block_size: int = 4,
                  use_kernels: bool = False, cache_capacity: int = 65536,
                  size_ratio: int = 4, route: str = "kway",
                  wave_tokens: int | None = None, mesh=None,
@@ -171,7 +171,8 @@ class StreamingNGramService:
         self.overlap = overlap
         self.gen = GenerationalIndex(
             sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
-            size_ratio=size_ratio, route=route, use_kernels=use_kernels)
+            block_size=block_size, size_ratio=size_ratio, route=route,
+            use_kernels=use_kernels)
         self.cache = LRUQueryCache(cache_capacity)
         self._wave_ex = None
 
@@ -385,6 +386,7 @@ def run_streaming(args) -> None:
     cfg = NGramConfig(sigma=args.sigma, tau=args.tau,
                       vocab_size=prof.vocab_size)
     svc = StreamingNGramService(cfg, compress=args.compress,
+                                block_size=args.block_size,
                                 use_kernels=args.use_kernels,
                                 cache_capacity=args.cache_capacity,
                                 wave_tokens=args.wave_tokens, mesh=mesh,
@@ -456,6 +458,10 @@ def main() -> None:
     ap.add_argument("--compress", action="store_true",
                     help="serve the front-coded + Elias-Fano layout "
                          "(repro.index.compress) instead of the flat lanes")
+    ap.add_argument("--block-size", type=int, default=4,
+                    help="front-coding block size of the compressed layout "
+                         "(larger = smaller at rest, more rows decoded per "
+                         "query probe)")
     ap.add_argument("--streaming", action="store_true",
                     help="generational driver: ingest the corpus in document "
                          "batches (LSM merges, no rebuilds) with cached, "
@@ -512,11 +518,13 @@ def main() -> None:
         mesh = make_data_mesh(args.devices)
         sharded = index_mod.build_sharded_index(stats, vocab_size=prof.vocab_size,
                                                 mesh=mesh,
-                                                compress=args.compress)
+                                                compress=args.compress,
+                                                block_size=args.block_size)
         idx_bytes = sharded.index.nbytes
     elif args.compress:
         idx = index_mod.build_compressed_index(stats,
-                                               vocab_size=prof.vocab_size)
+                                               vocab_size=prof.vocab_size,
+                                               block_size=args.block_size)
         idx_bytes = idx.nbytes
     else:
         idx = index_mod.build_index(stats, vocab_size=prof.vocab_size)

@@ -937,7 +937,7 @@ class WaveExecutor:
             return out
 
     def run_streaming(self, tokens, *, gen=None, compress: bool = False,
-                      **gen_kw):
+                      block_size: int = 4, **gen_kw):
         """Stream waves straight into a :class:`GenerationalIndex`.
 
         Each wave's exact partial (``tau = 1``; nothing may be dropped early)
@@ -953,7 +953,7 @@ class WaveExecutor:
         if gen is None:
             gen = GenerationalIndex(sigma=self.cfg.sigma,
                                     vocab_size=self.cfg.vocab_size,
-                                    compress=compress,
+                                    compress=compress, block_size=block_size,
                                     use_kernels=self.cfg.use_kernels, **gen_kw)
         reports = []
 

@@ -101,6 +101,30 @@ def _case_block_decode(rng, scale):
             lambda: ref.block_decode_ref(*args, **kw))
 
 
+def _case_block_expand(rng, scale):
+    """Fuzzed compressed streams for the batched block decoder -- same corner
+    coverage as ``_case_block_decode`` minus the query rank (bases < 2**24 so
+    bit positions cannot wrap uint32)."""
+    sigma = int(rng.integers(1, 9))
+    term_bits = int(rng.integers(3, 17))
+    lcp_width = 4 if sigma <= 14 else 8
+    block_size = int(rng.choice([4, 8, 16]))
+    nb = int(rng.integers(1, 20 * scale + 2))
+    size = nb * block_size
+    b = int(rng.integers(1, 80 * scale + 2))
+    lcps = rng.integers(0, 2**32, -(-size * lcp_width // 32)).astype(np.uint32)
+    payload = rng.integers(0, 2**32, int(rng.integers(1, 200))).astype(np.uint32)
+    base = np.sort(rng.integers(0, 2**24, nb + 1)).astype(np.uint32)
+    sec = np.sort(rng.integers(0, size + 1, sigma + 1)).astype(np.int32)
+    blk = rng.integers(0, nb, b).astype(np.int32)
+    args = (jnp.asarray(lcps), jnp.asarray(payload), jnp.asarray(base),
+            jnp.asarray(sec), jnp.asarray(blk))
+    kw = dict(term_bits=term_bits, lcp_width=lcp_width, block_size=block_size,
+              len_off=int(rng.integers(0, 2)))
+    return (lambda: ops.block_expand(*args, **kw, sigma=sigma, bblock=64),
+            lambda: ref.block_expand_ref(*args, **kw))
+
+
 def _case_merge_path(rng, scale):
     """Sorted runs with deliberate duplicates (within and across runs) so the
     stable A-first tie-break is exercised, plus empty/singleton run corners."""
@@ -143,6 +167,7 @@ KERNEL_CASES = {
     "hash_combine": _case_hash_combine,
     "bsearch": _case_bsearch,
     "block_decode": _case_block_decode,
+    "block_expand": _case_block_expand,
     "merge_path": _case_merge_path,
 }
 
@@ -236,6 +261,37 @@ def test_block_decode_ref_against_host_decode():
         key = tuple(np.concatenate([[ql[i]], qt[i]]))
         assert int(lt[i]) == sum(1 for r in rows if tuple(r) < key)
         assert int(eq[i]) == sum(1 for r in rows if tuple(r) == key)
+
+
+def test_block_expand_ref_against_host_decode():
+    """The batched decoder oracle vs the host full-table decode on builder
+    output, both views, including a shuffled / duplicated block id batch."""
+    from repro.core import run_job
+    from repro.core.stats import NGramConfig
+    from repro.index import build_index, compress_index
+    from repro.index.compress import decode_view
+
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, 40, 3000)
+    stats = run_job(toks, NGramConfig(sigma=4, tau=2, vocab_size=39))
+    idx = build_index(stats, vocab_size=39)
+    cidx = compress_index(idx, block_size=8)
+    for view, len_off in (("point", 0), ("cont", 1)):
+        if view == "point":
+            streams = (cidx.lcps, cidx.payload, cidx.block_base,
+                       jnp.asarray(np.asarray(idx.section_start)))
+            nb = cidx.n_blocks
+        else:
+            streams = (cidx.cont_lcps, cidx.cont_payload, cidx.cont_block_base,
+                       jnp.asarray(np.asarray(idx.section_start)))
+            nb = cidx.cont_heads.shape[0]
+        full = decode_view(cidx, view)
+        blk = rng.permutation(np.repeat(np.arange(nb, dtype=np.int32), 2))
+        got = np.asarray(ref.block_expand_ref(
+            *streams, jnp.asarray(blk), term_bits=cidx.term_bits,
+            lcp_width=cidx.lcp_width, block_size=8, len_off=len_off))
+        want = full.reshape(nb, 8, -1)[blk]
+        np.testing.assert_array_equal(got, want)
 
 
 def test_hash_combine_ref_conserves_weight_per_key():

@@ -178,6 +178,84 @@ def test_segment_round_trips():
     assert segment_to_stats(seg).to_dict() == stats.to_dict()
 
 
+# --------------------------------------------------------------------------- #
+# compressed-native merge (streamed block decode)
+# --------------------------------------------------------------------------- #
+
+def test_compressed_native_merge_edge_segments():
+    """Empty, singleton, and partial-final-block compressed inputs all merge
+    bit-identically to the union build through the streamed decode."""
+    vocab, sigma = 30, 3
+    cfg = NGramConfig(sigma=sigma, tau=1, vocab_size=vocab)
+    empty = NGramStats(np.zeros((0, sigma), np.int32), np.zeros(0, np.int32),
+                       np.zeros(0, np.int64))
+    single = NGramStats(np.array([[5, 0, 0]], np.int32),
+                        np.array([1], np.int32), np.array([7], np.int64))
+    big = run_job(make_corpus(900, vocab, "zipf", 5), cfg)
+    block = 64                              # row counts below won't divide it
+    assert build_compressed_index(big, vocab_size=vocab,
+                                  block_size=block).n_rows % block != 0
+    for parts in ([empty, big], [single, big], [empty, single, big]):
+        want = build_compressed_index(stats_union(*parts), vocab_size=vocab,
+                                      block_size=block)
+        for route in ("kway", "merge"):
+            got = merge_indexes(
+                [build_compressed_index(s, vocab_size=vocab, block_size=block)
+                 for s in parts], route=route)
+            assert_trees_equal(got, want)
+
+
+def test_compressed_native_merge_overflow_guard():
+    """The uint32 fold guard fires through the compressed-native path too."""
+    big = 2**31 + 5
+    mk = lambda: NGramStats(np.array([[7, 0, 0]], np.int32),
+                            np.array([1], np.int32),
+                            np.array([big], np.int64))
+    cixs = [build_compressed_index(mk(), vocab_size=9) for _ in range(2)]
+    for route in ("kway", "merge"):
+        with pytest.raises(ValueError, match="overflow"):
+            merge_indexes(cixs, route=route)
+
+
+def test_compressed_merge_working_set_is_block_batches(monkeypatch):
+    """Compaction must never materialize a whole decoded table: with the chunk
+    shrunk to 64 rows, the decode high-water mark stays at the chunk size while
+    merging inputs hundreds of rows deep -- and the output is still exact."""
+    from repro.index import compress as compress_mod
+
+    vocab = 40
+    sa, sb = job_pair(vocab, "zipf", 4, 1, seed=21, n=3000)
+    ca, cb = (build_compressed_index(s, vocab_size=vocab) for s in (sa, sb))
+    assert min(ca.n_rows, cb.n_rows) > 64   # inputs dwarf the chunk
+    monkeypatch.setattr(compress_mod, "_DECODE_CHUNK_ROWS", 64)
+    monkeypatch.setitem(compress_mod._DECODE_WATERMARK, "rows", 0)
+    got = merge_indexes([ca, cb], route="kway")
+    peak = compress_mod._DECODE_WATERMARK["rows"]
+    assert 0 < peak <= 64                   # O(block batch), not O(table)
+    want = build_compressed_index(stats_union(sa, sb), vocab_size=vocab)
+    assert_trees_equal(got, want)
+
+
+def test_decode_segment_chunk_sweep():
+    """decode_segment is chunk-size invariant and equals the unpadded truth."""
+    from repro.index.compress import decode_segment
+    # tiny corpus: chunk=1 walks every row in its own dispatch round, so the
+    # sweep cost is n_rows * n_chunk_sizes host round-trips -- keep rows low
+    vocab = 20
+    stats = run_job(make_corpus(200, vocab, "zipf", 9),
+                    NGramConfig(sigma=3, tau=1, vocab_size=vocab))
+    seg = segment_from_stats(stats, vocab_size=vocab)
+    r = seg.n_rows
+    cidx = build_compressed_index(stats, vocab_size=vocab, block_size=4)
+    for chunk in (1, 3, 64, 10**9):
+        got = decode_segment(cidx, chunk_rows=chunk)
+        assert got.n_rows == r == int(got.keys.shape[0])   # unpadded
+        np.testing.assert_array_equal(np.asarray(got.keys),
+                                      np.asarray(seg.keys)[:r])
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(seg.counts)[:r])
+
+
 if HAS_HYPOTHESIS:
     @settings(max_examples=8, deadline=None)
     @given(vocab=st.integers(2, 5000),
@@ -255,6 +333,93 @@ def test_generational_flat():
 
 def test_generational_compressed():
     drive_generational(compress=True)
+
+
+def test_generational_tier_policy_keeps_l0_flat():
+    """Fresh ingests stay flat (hot L0); only merged rungs freeze compressed."""
+    from repro.index.build import NGramIndex
+    from repro.index.compress import CompressedNGramIndex
+    vocab, sigma = 40, 4
+    cfg = NGramConfig(sigma=sigma, tau=1, vocab_size=vocab)
+    gen = GenerationalIndex(sigma=sigma, vocab_size=vocab, compress=True)
+    merges = 0
+    for i, n in enumerate((4000, 900, 900, 900)):
+        merges += gen.ingest(run_job(make_corpus(n, vocab, "zipf", 10 + i),
+                                     cfg))["merges"]
+    assert merges >= 1
+    kinds = [type(ix) for ix in gen.segments]
+    assert kinds[0] is NGramIndex           # newest rung: hot, flat
+    assert CompressedNGramIndex in kinds    # elder rung(s): frozen compressed
+    # compressed segments + bytes at rest are what the gauges report
+    n_c = sum(k is CompressedNGramIndex for k in kinds)
+    at_rest = sum(getattr(ix, "nbytes_at_rest", None) or ix.nbytes
+                  for ix in gen.segments)
+    assert n_c >= 1 and 0 < at_rest < sum(ix.nbytes for ix in gen.segments)
+
+
+def check_mixed_stack_parity(sa, sb, vocab, sigma, *, block=4):
+    """A stack mixing flat and compressed rungs answers bit-identically to the
+    all-flat stack -- the compressed-at-rest serving contract."""
+    ia, ib = (build_index(s, vocab_size=vocab) for s in (sa, sb))
+    ca = build_compressed_index(sa, vocab_size=vocab, block_size=block)
+    flat = GenerationalIndex(sigma=sigma, vocab_size=vocab)
+    flat.levels = [ib, ia]                  # newest first, elder flat
+    mixed = GenerationalIndex(sigma=sigma, vocab_size=vocab)
+    mixed.levels = [ib, ca]                 # same rows, elder frozen
+
+    exp = stats_union(sa, sb).to_dict()
+    rng = np.random.default_rng(11)
+    all_tuples = sorted(exp)
+    gram_tuples = [all_tuples[i] for i in sorted(
+        rng.choice(len(all_tuples), min(len(all_tuples), 500), replace=False))]
+    miss_g = rng.integers(1, vocab + 1, (150, sigma)).astype(np.int32)
+    miss_l = rng.integers(1, sigma + 1, 150).astype(np.int32)
+    miss_g *= np.arange(sigma)[None, :] < miss_l[:, None]
+    g = np.zeros((len(gram_tuples) + 150, sigma), np.int32)
+    ln = np.zeros(len(gram_tuples) + 150, np.int32)
+    for i, t in enumerate(gram_tuples):
+        g[i, :len(t)] = t
+        ln[i] = len(t)
+    g[len(gram_tuples):] = miss_g
+    ln[len(gram_tuples):] = miss_l
+    got = np.asarray(lookup(mixed, g, ln))
+    np.testing.assert_array_equal(got, np.asarray(lookup(flat, g, ln)))
+    np.testing.assert_array_equal(
+        got[:len(gram_tuples)], [exp[t] for t in gram_tuples])
+
+    pool = [t[:-1] for t in all_tuples if len(t) >= 2] or [()]
+    prefixes = [(), (vocab + 2,)] + [pool[i]
+                                     for i in rng.choice(len(pool), 10)]
+    pg = np.zeros((len(prefixes), sigma), np.int32)
+    pl = np.zeros(len(prefixes), np.int32)
+    for i, t in enumerate(prefixes):
+        pg[i, :len(t)] = t
+        pl[i] = len(t)
+    got_c = [np.asarray(x) for x in continuations(mixed, pg, pl, k=5)]
+    want_c = [np.asarray(x) for x in continuations(flat, pg, pl, k=5)]
+    for a, b in zip(got_c, want_c):
+        np.testing.assert_array_equal(a, b)
+
+
+# two draws, not all of MERGE_DRAWS: every (vocab, sigma) pair recompiles the
+# whole compressed query stack, and the hypothesis tier below varies them too
+@pytest.mark.parametrize("vocab,dist,sigma,tau,seed",
+                         [MERGE_DRAWS[1], MERGE_DRAWS[3]])
+def test_mixed_stack_parity_generated_corpora(vocab, dist, sigma, tau, seed):
+    sa, sb = job_pair(vocab, dist, sigma, tau, seed, n=1500)
+    check_mixed_stack_parity(sa, sb, vocab, sigma)
+
+
+if HAS_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=4, deadline=None)
+    @given(vocab=st.integers(2, 5000),
+           dist=st.sampled_from(["zipf", "uniform"]),
+           sigma=st.integers(1, 6), tau=st.integers(1, 3),
+           seed=st.integers(0, 2**16))
+    def test_mixed_stack_parity_hypothesis(vocab, dist, sigma, tau, seed):
+        sa, sb = job_pair(vocab, dist, sigma, tau, seed, n=1200)
+        check_mixed_stack_parity(sa, sb, vocab, sigma)
 
 
 def test_generational_bootstrap_and_empty():

@@ -265,3 +265,76 @@ def test_generational_compaction_stats_in_registry():
     assert snap["gauges"]["gen.segments"] == gen.n_segments
     assert snap["gauges"]["gen.rung0_rows"] == gen.levels[0].n_rows
     assert obs_report.validate_metrics(snap) == []
+
+
+# ------------------------------------------------------------ compressed at rest
+
+def test_compressed_at_rest_gauges():
+    """Per-rung bytes-at-rest, the total, and the compressed-segment census
+    land in the registry -- frozen rungs reporting persisted stream bytes,
+    not the resident total with decoded query caches."""
+    from repro.index import GenerationalIndex
+    from repro.index.compress import CompressedNGramIndex
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    toks = make_corpus(3000, 40, "zipf", 5)
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=40)
+    gen = GenerationalIndex(sigma=3, vocab_size=40, size_ratio=2,
+                            compress=True)
+    for part in np.array_split(toks, 4):
+        gen.ingest(run_job(part, cfg))
+    assert gen.compaction_stats["merges"] >= 1
+    segs = gen.segments          # materialize: merged rungs freeze compressed
+    gen._publish_metrics()       # first publish after the lazy compression
+    snap = reg.snapshot()
+    want_total, want_comp = 0, 0
+    for i, ix in enumerate(segs):
+        b = getattr(ix, "nbytes_at_rest", None) or ix.nbytes
+        assert snap["gauges"][f"gen.rung{i}_bytes_at_rest"] == b
+        want_total += b
+        want_comp += isinstance(ix, CompressedNGramIndex)
+    assert snap["gauges"]["gen.bytes_at_rest"] == want_total
+    assert snap["gauges"]["gen.compressed_segments"] == want_comp >= 1
+    frozen = next(ix for ix in segs if isinstance(ix, CompressedNGramIndex))
+    assert frozen.nbytes_at_rest < frozen.nbytes
+    assert obs_report.validate_metrics(snap) == []
+
+
+def test_streamed_decode_work_counters():
+    """to_segment() and the compressed-native merge attribute their decode
+    work to the registry: exactly the rows/block batches actually decoded."""
+    from repro.index import build_compressed_index, merge_indexes
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=40)
+    ca, cb = (build_compressed_index(
+        run_job(make_corpus(1500, 40, "zipf", s), cfg), vocab_size=40)
+        for s in (6, 7))
+    nb = lambda ix: -(-ix.n_rows // ix.block_size)
+    ca.to_segment()
+    snap = reg.snapshot()
+    assert snap["counters"]["compress.rows_decoded"] == ca.n_rows
+    assert snap["counters"]["merge.blocks_decoded"] == nb(ca)
+    merge_indexes([ca, cb], route="kway")
+    snap = reg.snapshot()
+    assert snap["counters"]["compress.rows_decoded"] == 2 * ca.n_rows + cb.n_rows
+    assert snap["counters"]["merge.blocks_decoded"] == 2 * nb(ca) + nb(cb)
+    assert obs_report.validate_metrics(snap) == []
+
+
+def test_merge_span_records_layout_mix():
+    """merge.segments spans carry the compressed/flat input mix."""
+    from repro.index import build_compressed_index, merge_indexes
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=40)
+    cixs = [build_compressed_index(
+        run_job(make_corpus(800, 40, "zipf", s), cfg), vocab_size=40)
+        for s in (8, 9)]
+    tracer = obs_trace.enable_tracing()
+    try:
+        merge_indexes(cixs, route="kway")
+    finally:
+        obs_trace.disable_tracing()
+    evs = [e for e in tracer.export()["traceEvents"]
+           if e["name"] == "merge.segments"]
+    assert evs and evs[-1]["args"]["n_compressed"] == 2
+    assert evs[-1]["args"]["n_flat"] == 0
