@@ -57,24 +57,45 @@ def main() -> None:
     ap.add_argument("--gate", type=float, default=None, metavar="RATIO",
                     help="fail (exit 1) if the deepest wave sweep exceeds "
                          "RATIO x the monolithic median (--waves only)")
+    ap.add_argument("--gate-mesh", type=float, default=None, metavar="RATIO",
+                    help="fail (exit 1) if the fused-mesh cell exceeds RATIO "
+                         "x the monolithic median OR was skipped (--waves "
+                         "only; ratio is stamped into BENCH_waves.json)")
     args = ap.parse_args()
     n = 20_000 if args.quick else 60_000
 
     if args.waves:
         from benchmarks import waves
         print("name,us_per_call,derived")
-        rows = waves.run(n, reps=args.reps, mesh=not args.no_mesh)
+        rows = waves.run(n, reps=args.reps, mesh=not args.no_mesh,
+                         gate_mesh=args.gate_mesh)
         for r in rows:
             _csv(r["name"], r["us"], r["derived"])
+        failed = False
+        by_name = {r["name"]: r for r in rows}
         if args.gate is not None:
-            by_name = {r["name"]: r["us"] for r in rows}
             deepest = f"waves_{max(waves.WAVE_COUNTS)}"
-            ratio = by_name[deepest] / by_name["waves_monolithic"]
+            ratio = by_name[deepest]["us"] / by_name["waves_monolithic"]["us"]
             ok = ratio <= args.gate
             print(f"# perf gate: {deepest}/monolithic = {ratio:.2f}x "
                   f"(limit {args.gate:.2f}x) -> {'OK' if ok else 'FAIL'}")
-            if not ok:
-                sys.exit(1)
+            failed |= not ok
+        if args.gate_mesh is not None:
+            name = f"waves_mesh{waves.MESH_DEVICES}_{waves.MESH_DEVICES}"
+            row = by_name.get(name)
+            if row is None or "skipped" in row:
+                why = row["skipped"] if row else "row missing"
+                print(f"# mesh perf gate: {name} SKIPPED ({why}) -> FAIL")
+                failed = True
+            else:
+                ratio = row["us"] / by_name["waves_monolithic"]["us"]
+                ok = ratio <= args.gate_mesh
+                print(f"# mesh perf gate: {name}/monolithic = {ratio:.2f}x "
+                      f"(limit {args.gate_mesh:.2f}x) -> "
+                      f"{'OK' if ok else 'FAIL'}")
+                failed |= not ok
+        if failed:
+            sys.exit(1)
         return
 
     from benchmarks import paper_figures as pf

@@ -56,25 +56,36 @@ print(json.dumps({{"us": float(np.median(ts) * 1e6), "n_tokens": len(tokens)}}))
 """
 
 
-def _mesh_cell(n_tokens: int, reps: int) -> dict | None:
-    """Time distributed waves in a subprocess (forced host device count)."""
+def _mesh_cell(n_tokens: int, reps: int) -> dict:
+    """Time distributed waves in a subprocess (forced host device count).
+
+    Never silently drops the cell: any failure comes back as
+    ``{"skipped": reason}``, which lands in the benchmark record as an
+    explicit skipped row -- ``BENCH_waves.json`` must never read as
+    "covered" when the mesh cell actually died.
+    """
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={MESH_DEVICES}"
     env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
                                  if env.get("PYTHONPATH") else "")
     code = _MESH_CELL.format(devices=MESH_DEVICES, n_tokens=n_tokens,
                              n_waves=MESH_DEVICES, reps=reps)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=1200, env=env)
+    try:
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=1200, env=env)
+    except subprocess.TimeoutExpired:
+        print("mesh wave cell timed out (skipped)", file=sys.stderr)
+        return {"skipped": "subprocess timeout (1200s)"}
     if r.returncode != 0:
         print(f"mesh wave cell failed (skipped):\n{r.stderr[-2000:]}",
               file=sys.stderr)
-        return None
+        tail = (r.stderr.strip().splitlines() or ["no stderr"])[-1]
+        return {"skipped": f"subprocess exit {r.returncode}: {tail[:300]}"}
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
-def run(n_tokens: int = 60_000, *, reps: int = 3,
-        mesh: bool = True) -> list[dict]:
+def run(n_tokens: int = 60_000, *, reps: int = 3, mesh: bool = True,
+        gate_mesh: float | None = None) -> list[dict]:
     from repro.core import NGramConfig, run_job
     from repro.data import corpus as corpus_mod
     from repro.pipeline import WaveExecutor
@@ -148,17 +159,32 @@ def run(n_tokens: int = 60_000, *, reps: int = 3,
                  "derived": (f"tok_s={n_tokens / (us / 1e6):.0f};"
                              f"segments={gen.n_segments}")})
 
-    # distributed cell: every wave sharded over the host mesh (subprocess);
-    # by far the slowest cell -- CI smokes pass mesh=False to skip it
-    mesh_row = _mesh_cell(n_tokens, max(reps - 1, 1)) if mesh else None
-    if mesh_row is not None:
+    # distributed cell: every wave sharded over the host mesh (subprocess).
+    # A skipped/failed cell still lands as an explicit row -- the record
+    # must say WHY the mesh number is missing, never just omit it.
+    mesh_name = f"waves_mesh{MESH_DEVICES}_{MESH_DEVICES}"
+    mesh_row = _mesh_cell(n_tokens, max(reps - 1, 1)) if mesh \
+        else {"skipped": "disabled (--no-mesh)"}
+    gate_mesh_stamp = None
+    if "skipped" in mesh_row:
+        rows.append({"name": mesh_name, "us": 0.0,
+                     "skipped": mesh_row["skipped"],
+                     "derived": f"skipped={mesh_row['skipped']}"})
+        if gate_mesh is not None:
+            gate_mesh_stamp = {"limit": gate_mesh, "ratio": None,
+                               "ok": False, "skipped": mesh_row["skipped"]}
+    else:
         us = mesh_row["us"]
+        ratio = us / mono_us
         rows.append({
-            "name": f"waves_mesh{MESH_DEVICES}_{MESH_DEVICES}",
+            "name": mesh_name,
             "us": us,
             "derived": (f"tok_s={mesh_row['n_tokens'] / (us / 1e6):.0f};"
-                        f"vs_mono={us / mono_us:.2f}x"),
+                        f"vs_mono={ratio:.2f}x"),
         })
+        if gate_mesh is not None:
+            gate_mesh_stamp = {"limit": gate_mesh, "ratio": round(ratio, 4),
+                               "ok": ratio <= gate_mesh}
 
     # tracing-overhead cell: the same waves_N job with the tracer live.
     # Acceptance gates: overhead < 1.05x the untraced median, and >= 90% of
@@ -197,9 +223,12 @@ def run(n_tokens: int = 60_000, *, reps: int = 3,
             prev = json.load(f).get("runs", [])
     except (FileNotFoundError, json.JSONDecodeError):
         prev = []
-    prev.append({"n_tokens": n_tokens, "reps": reps, "rows": rows,
-                 "env": obs_report.environment_metadata(),
-                 "metrics": reg.snapshot()})
+    record = {"n_tokens": n_tokens, "reps": reps, "rows": rows,
+              "env": obs_report.environment_metadata(),
+              "metrics": reg.snapshot()}
+    if gate_mesh_stamp is not None:
+        record["gate_mesh"] = gate_mesh_stamp
+    prev.append(record)
     with open(BENCH_JSON, "w") as f:
         json.dump({"runs": prev}, f, indent=2)
     return rows

@@ -58,10 +58,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report \
 # Wave-engine perf smoke: the fused out-of-core loop must stay within a
 # generous multiple of the monolithic job (the tracked target is ~1.5x at
 # 8 waves on the full corpus; 3.0x here absorbs CI host noise at the
-# reduced --quick corpus).  Appends a trend row to BENCH_waves.json.
-echo "waves perf smoke: --quick, gate waves_8 <= 3.0x monolithic"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 300 \
-    python -m benchmarks.run --waves --quick --reps 2 --no-mesh --gate 3.0
+# reduced --quick corpus).  The fused mesh cell (one shard_map dispatch
+# per wave, 8 emulated devices in a subprocess) measures ~4.5x monolithic
+# on a 1-core host -- every device thread serializes -- so its gate is
+# 6.0x.  Appends a trend row (with the gate_mesh stamp) to BENCH_waves.json.
+echo "waves perf smoke: --quick, gate waves_8 <= 3.0x, waves_mesh8_8 <= 6.0x"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 900 \
+    python -m benchmarks.run --waves --quick --reps 2 --gate 3.0 --gate-mesh 6.0
 
 # Compressed-at-rest perf smoke: the front-coded layout must stay >= 2x
 # smaller at rest, native compaction >= 2x over decode-and-rebuild, and the

@@ -14,8 +14,12 @@ classic log-structured-merge discipline instead:
     presorted runs), an order of magnitude cheaper than re-sorting blind --
     and folds duplicate counts exactly in int64 via ``np.add.reduceat``;
     ``"merge"`` runs the jitted pairwise merge-path (``kernels/merge_path.py``
-    Pallas kernel, or its jnp ref); ``"sort"`` re-sorts the concatenation
-    through ``mapreduce.sort``.  On the device routes, run boundaries come
+    Pallas kernel, or its jnp ref) over a balanced pairing tree;
+    ``"device"`` is the same merge-path tree with an automatic host-kway
+    fallback above ``DEVICE_MERGE_MAX_ROWS`` total rows (oversized tau=1
+    gram sets would thrash device memory); ``"sort"`` re-sorts the
+    concatenation through ``mapreduce.sort``.  On the device routes, run
+    boundaries come
     from ``mapreduce.segment``'s lcp primitive and the dedup-summed count
     fold runs through the reducer's segmented-sum path in two uint32 limbs
     (exact below ``_MAX_DEVICE_RUN`` duplicates per gram; longer runs replay
@@ -41,7 +45,7 @@ classic log-structured-merge discipline instead:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial, reduce
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -72,16 +76,30 @@ def _merged_run(segs: list[IndexSegment], *, route: str,
         keys = jnp.concatenate([s.keys for s in segs], axis=0)
         counts = jnp.concatenate([s.counts for s in segs], axis=0)
         keys, (counts,) = mr_sort.sort_with_payload(keys, [counts])
-    elif route == "merge":
+    elif route in ("merge", "device"):
         if use_kernels:
             from repro.kernels import ops as kops
             merge2 = kops.merge_path
         else:
             from repro.kernels import ref as kref
             merge2 = kref.merge_path_ref
-        keys, counts = reduce(
-            lambda acc, s: merge2(acc[0], s.keys, acc[1], s.counts),
-            segs[1:], (segs[0].keys, segs[0].counts))
+        # balanced pairing tree in segment-index order: every row rides
+        # O(log k) pairwise merges instead of the linear chain's O(k), and
+        # adjacent pairing + the merge-path's A-first tie rule keep global
+        # duplicate order (moot anyway: the dedup fold sums duplicates, and
+        # output order is a pure function of the row set)
+        # wave-fold segments arrive host-resident; the merge tree's traced
+        # binary search needs device operands, so lift once up front
+        runs = [(jnp.asarray(s.keys, jnp.uint32),
+                 jnp.asarray(s.counts, jnp.uint32)) for s in segs]
+        while len(runs) > 1:
+            paired = [merge2(runs[i][0], runs[i + 1][0],
+                             runs[i][1], runs[i + 1][1])
+                      for i in range(0, len(runs) - 1, 2)]
+            if len(runs) % 2:
+                paired.append(runs[-1])
+            runs = paired
+        keys, counts = runs[0]
     else:
         raise ValueError(f"unknown merge route {route!r}")
     return jnp.asarray(keys, jnp.uint32), jnp.asarray(counts, jnp.uint32)
@@ -91,6 +109,13 @@ def _merged_run(segs: list[IndexSegment], *, route: str,
 # this; a merge of k segments with distinct rows each has runs of length <= k,
 # so the device fold covers everything but adversarial duplicate floods.
 _MAX_DEVICE_RUN = 1 << 16
+
+# the "device" route's size ceiling: above this many total input rows
+# (sentinel pads included -- that is what the merge tree actually moves) the
+# fold falls back to the host k-way path, which streams in numpy instead of
+# holding every intermediate merge run in device memory.  Oversized tau=1
+# gram sets (huge corpora at tiny tau) are exactly the shape that trips this.
+DEVICE_MERGE_MAX_ROWS = 1 << 22
 
 
 def _run_starts(sorted_bytes: np.ndarray) -> np.ndarray:
@@ -260,12 +285,14 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
 
     ``route="kway"`` folds on the host exploiting the inputs' sortedness
     (stable sort of concatenated big-endian row bytes == galloping k-way
-    merge; int64 ``reduceat`` count fold) -- the fastest route at wave-engine
-    scales; ``route="merge"`` runs the jitted pairwise merge-path (Pallas
-    kernel when ``use_kernels``, jnp ref otherwise); ``route="sort"``
-    re-sorts the concatenation (the ``mapreduce.sort`` fallback).  All three
-    are bit-identical.  Raises ``ValueError`` if any merged count overflows
-    the uint32 device lanes.
+    merge; int64 ``reduceat`` count fold); ``route="merge"`` runs the jitted
+    pairwise merge-path (Pallas kernel when ``use_kernels``, jnp ref
+    otherwise) over a balanced pairing tree; ``route="device"`` is the
+    merge-path tree as the wave fold's on-device k-way sort, falling back to
+    the host kway fold when the inputs exceed ``DEVICE_MERGE_MAX_ROWS``
+    total rows; ``route="sort"`` re-sorts the concatenation (the
+    ``mapreduce.sort`` fallback).  All routes are bit-identical.  Raises
+    ``ValueError`` if any merged count overflows the uint32 device lanes.
 
     ``n_compressed`` is purely observational: callers that decoded some
     inputs from the compressed layout record the flat/compressed mix on the
@@ -296,7 +323,13 @@ def merge_segments(segments, *, route: str = "merge", use_kernels: bool = False,
 
 
 def _merge_segments_body(segs, sigma, vocab, *, route, use_kernels, pad_to):
-    if route == "kway":
+    host = route == "kway"
+    if route == "device" and sum(
+            int(s.keys.shape[0]) for s in segs) > DEVICE_MERGE_MAX_ROWS:
+        # oversized tau=1 gram set: the device tree would hold O(total) rows
+        # per merge level -- take the streaming host fold instead
+        host = True
+    if host:
         r_keys, r_tot = _kway_fold_host(segs, sigma=sigma)
     else:
         keys, counts = _merged_run(segs, route=route, use_kernels=use_kernels)
@@ -323,8 +356,8 @@ def _merge_segments_body(segs, sigma, vocab, *, route, use_kernels, pad_to):
         raise ValueError(f"pad_to={size} < n_rows+1={r + 1}")
     keys_p = pad_rows(r_keys, size, SENTINEL)
     cnts_p = pad_rows(r_tot, size, 0)
-    if route != "kway":
-        # device routes hand device arrays back; the kway route stays
+    if not host:
+        # device routes hand device arrays back; the host folds stay
         # host-resident end to end -- an LSM cascade of kway merges would
         # otherwise pay an h2d/d2h round trip per compaction for data the
         # next merge reads right back on the host

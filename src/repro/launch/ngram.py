@@ -41,6 +41,13 @@ def main() -> None:
                          "merge rows, the default); tiered = size-tiered LSM "
                          "rungs (bounded live memory, amortized O(total log "
                          "waves)); pairwise = the one-segment baseline")
+    ap.add_argument("--merge-route", default="kway",
+                    choices=["kway", "merge", "sort", "device"],
+                    help="segment-fold sort route: kway = galloping host "
+                         "merge (default); merge = balanced-tree pairwise "
+                         "merge-path; device = merge-path tree on device "
+                         "with host-kway fallback for oversized tau=1 gram "
+                         "sets; sort = fused re-sort")
     ap.add_argument("--no-overlap", action="store_true",
                     help="serialize the per-wave fold with wave dispatch "
                          "instead of overlapping it on the fold thread "
@@ -93,6 +100,7 @@ def main() -> None:
                              "(bucketed counts need a single-wave job)")
         stats = WaveExecutor(cfg, wave_tokens=args.wave_tokens,
                              accumulator=args.accumulator,
+                             merge_route=args.merge_route,
                              overlap=not args.no_overlap,
                              mesh=mesh).run(tokens)
     else:

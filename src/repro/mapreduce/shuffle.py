@@ -97,12 +97,19 @@ def exchange(buffer: jax.Array, axis_name: str) -> jax.Array:
 
 
 def shuffle(records: jax.Array, keys: jax.Array, valid: jax.Array, *, axis_name: str,
-            n_parts: int, capacity: int) -> tuple[jax.Array, jax.Array]:
+            n_parts: int, capacity: int,
+            reduce_overflow: bool = True) -> tuple[jax.Array, jax.Array]:
     """Full map-side shuffle step inside ``shard_map``: partition + bucket + exchange.
 
     Returns (local_records [n_parts*capacity, W], global_overflow scalar).
+    ``reduce_overflow=False`` skips the overflow ``psum`` and returns the
+    *local* overflow count instead -- the fused multi-round wave program sums
+    every round's local count and runs one ``psum`` per wave, not one per
+    round (the caller owns the reduction).
     """
     part = partition_ids(keys, valid, n_parts)
     buf, overflow = bucketize(records, part, n_parts, capacity)
     out = exchange(buf, axis_name)
-    return out, jax.lax.psum(overflow, axis_name)
+    if reduce_overflow:
+        overflow = jax.lax.psum(overflow, axis_name)
+    return out, overflow

@@ -49,9 +49,13 @@ COUNTER_DOC: dict[str, str] = {
     "shuffle_bytes": "shuffled records x packed record bytes "
                      "(MAP_OUTPUT_BYTES)",
     "shuffle_skew": "max realized reducer load / mean, over nominal "
-                    "reducers (float; folds by max, not sum)",
-    "retries": "capacity-doubling shuffle reruns (mesh waves, sharded "
-               "serving); 0 on paths with exact-sized buffers",
+                    "reducers (float; folds by max, not sum).  On the fused "
+                    "mesh-wave path the histogram collective behind it only "
+                    "runs when metrics are enabled -- disabled runs report "
+                    "0.0 and skip the psum entirely",
+    "retries": "capacity-doubling shuffle reruns (mesh waves rerun the WHOLE "
+               "fused wave at doubled capacity scale, sharded serving reruns "
+               "the query batch); 0 on paths with exact-sized buffers",
     "overflow": "records dropped for capacity (always 0 -- overflow "
                 "triggers a retry instead; kept as the loud invariant)",
     "waves": "token waves executed (wave-only)",

@@ -36,14 +36,21 @@ map -> combine -> shuffle -> sort -> reduce *across machines*.
     yields the same sorted segment, so the final output stays bit-identical
     to the monolithic job (canonical order; the global tau filter runs once
     at the end);
-  * with a ``mesh``, every wave is **distributed**: the wave's extended
-    window shards contiguously over the mesh axis and runs through a
-    ``shard_map`` stage program that reuses the per-method jobs' own plumbing
-    -- the ppermute sigma-1 halo between neighbor shards and the
-    hash-partitioned ``all_to_all`` shuffle (``mapreduce.shuffle``) with
-    counted-overflow capacity retries.  Per-wave *sharded* partials fold
-    through the same segment path, so the distributed wave run is
-    bit-identical to the monolithic single-device job too.
+  * with a ``mesh``, every wave is **distributed and just as fused**: the
+    wave's extended window shards contiguously over the mesh axis and the
+    *entire round chain* -- one ppermute sigma-1 halo pull, then every
+    round's emit -> combine -> hash-partitioned ``all_to_all`` shuffle ->
+    sort -> reduce, with APRIORI carries kept shard-local and
+    device-resident between rounds -- traces into ONE jitted ``shard_map``
+    program per wave (``_build_mesh_wave_program``), cached per
+    ``(n_local, capacity scale, skew?)``.  Reduced lanes fold **on device**
+    into packed segment-candidate rows (``stages.segment_candidates`` -- the
+    prefix-lane-mask collect of the single-device path), so the host never
+    rebuilds dense ``NGramStats`` per round/shard; shuffle overflow
+    accumulates as a device scalar and is checked ONCE per wave at collect
+    (the rare trip reruns the whole wave at doubled capacity), which is what
+    lets mesh waves ride the same double-buffered dispatch + overlapped fold
+    thread as the single-device path.  Bit-identical to the monolithic job.
 
 ``run_streaming`` closes the loop with serving: each wave's partial goes
 straight into :class:`~repro.index.merge.GenerationalIndex` ingest, so a
@@ -57,6 +64,7 @@ monolithic code -- just one shared implementation of the stage plumbing.
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
 
 import jax
@@ -378,17 +386,24 @@ class WaveExecutor:
     log-many live rungs; ``"pairwise"`` = the legacy
     fold-every-wave-into-one-segment baseline, O(waves x total));
     ``merge_route``: ``"kway"`` = galloping host merge of the presorted
-    segments, the fastest fold; ``"sort"`` = one fused re-sort per fold;
-    ``"merge"`` = pairwise merge-path.  :meth:`run` applies the global tau
+    segments; ``"sort"`` = one fused re-sort per fold; ``"merge"`` =
+    balanced-tree pairwise merge-path; ``"device"`` = the merge-path tree
+    as an on-device k-way sort, with the host kway fold as automatic
+    fallback for oversized tau=1 gram sets
+    (``index.merge.DEVICE_MERGE_MAX_ROWS``).  :meth:`run` applies the
+    global tau
     once at the end, so for any wave size (and any accumulator/route) the
     output is bit-identical to the monolithic job.
 
-    With a ``mesh`` (size > 1), each wave's stage pipeline shards over
-    ``axis_name``: contiguous token slices per shard, the distributed jobs'
-    own ppermute sigma-1 halo between neighbors, and the hash-partitioned
-    ``all_to_all`` shuffle with counted-overflow capacity retries.  Per-wave
-    sharded partials still fold through the segment path, so the distributed
-    run stays bit-identical to the single-device one.
+    With a ``mesh`` (size > 1), each wave runs as ONE fused ``shard_map``
+    dispatch over ``axis_name``: contiguous token slices per shard, the
+    distributed jobs' own ppermute sigma-1 halo between neighbors (pulled
+    once per wave), every round's hash-partitioned ``all_to_all`` shuffle
+    with a single collect-time counted-overflow capacity retry, and the
+    device-side segment-candidate collect.  Mesh waves ride the same
+    double-buffered dispatch + overlapped fold thread as single-device
+    waves and fold through the same segment path, so the distributed run
+    stays bit-identical to the single-device one.
 
     Memory model: device footprint is O(wave * sigma) records per stage (per
     shard when distributed); the running segments live wherever
@@ -424,7 +439,20 @@ class WaveExecutor:
         # wave's device work; False serializes fold and dispatch on the main
         # thread (debugging / environments where threads are unwelcome)
         self.overlap = overlap
-        self._mesh_programs: dict = {}   # (k, capacity, has_carry, n_local)
+        self._mesh_programs: dict = {}   # (n_local, capacity scale, skew?)
+        # overflow-retry capacity scale: doubles on the rare overflowed wave
+        # and sticks, so later waves dispatch at the proven capacity
+        self._mesh_scale = 1
+        # XLA's host-device collective rendezvous is not ordered across
+        # concurrently launched executions: two in-flight mesh-wave programs
+        # can interleave their ppermute/all_to_all participants across device
+        # threads and stall (observed as multi-second rendezvous hangs).
+        # Every mesh program launch therefore waits for the previous launch
+        # to finish executing, under this lock (the fold thread's retry
+        # launches race the feeder's next-wave dispatch without it).  Host
+        # fold work still overlaps the next wave's device execution.
+        self._mesh_launch_lock = threading.Lock()
+        self._mesh_last_launch = None
         self._emit_rows_cache: dict = {}
         # direct-segment collect is valid iff the record lanes' packed layout
         # is the segment layout -- i.e. the plan packs with cfg.vocab_size
@@ -434,7 +462,7 @@ class WaveExecutor:
 
     # --- wave iteration ------------------------------------------------------ #
 
-    def _windows(self, tokens: np.ndarray):
+    def _windows(self, tokens: np.ndarray, *, to_device: bool = True):
         """Yield (tok_ext [wave + sigma - 1], n_live) fixed-shape windows.
 
         ``n_live`` is the *true* number of corpus tokens in the wave -- the
@@ -442,7 +470,8 @@ class WaveExecutor:
         a partial count, so the emit's live mask (positions ``< n_live``)
         excludes the zero-padded tail outright instead of leaning on the
         reserved-PAD convention (``NGramConfig.validate_tokens``) to mask
-        phantom tail grams.
+        phantom tail grams.  ``to_device=False`` yields host slices (the
+        mesh path re-pads to the shard layout before its own h2d).
         """
         n = int(tokens.shape[0])
         wave = self.wave_tokens if self.wave_tokens is not None else n
@@ -456,11 +485,17 @@ class WaveExecutor:
             padded[:n] = np.asarray(tokens, np.int32)
         for w in range(n_waves):
             n_live = max(0, min(wave, n - w * wave))
-            with obs_trace.span("wave.window.h2d") as sp:
-                if sp:
-                    sp.set(wave=w)
-                tok_ext = jnp.asarray(padded[w * wave: (w + 1) * wave + halo])
+            tok_ext = padded[w * wave: (w + 1) * wave + halo]
+            if to_device:
+                with obs_trace.span("wave.window.h2d") as sp:
+                    if sp:
+                        sp.set(wave=w)
+                    tok_ext = jnp.asarray(tok_ext)
             yield tok_ext, n_live
+
+    @property
+    def _use_mesh(self) -> bool:
+        return self.mesh is not None and self.mesh.size > 1
 
     # --- single-device async wave dispatch ----------------------------------- #
 
@@ -473,8 +508,12 @@ class WaveExecutor:
         pipelines, carry updates, counters -- traces into a single jitted
         donated program (``_wave_core``) and stays in flight until
         :meth:`_collect_wave`.  ``stop_on_empty`` is skipped: an exhausted
-        round chain emits empty partials that fold to nothing.
+        round chain emits empty partials that fold to nothing.  With a mesh,
+        the wave dispatches through the fused sharded program instead
+        (:meth:`_submit_wave_mesh`) -- same async contract.
         """
+        if self._use_mesh:
+            return self._submit_wave_mesh(tok_ext, n_live)
         cfg, plan = self.cfg, self.plan
         with obs_trace.span("wave.submit") as sp:
             if sp:
@@ -498,6 +537,8 @@ class WaveExecutor:
         time (the double-buffer's occupancy signal -- a collect much shorter
         than its submit-to-submit gap means the device was idle).
         """
+        if pend.get("mesh"):
+            return self._collect_wave_mesh(pend)
         from repro.core.stats import NGramStats, add_counters
 
         with obs_trace.span("wave.collect") as sp:
@@ -555,6 +596,8 @@ class WaveExecutor:
         order; requires the lane/segment pack layouts to coincide
         (``self._direct``) -- other configs take exactly that stats route.
         """
+        if pend.get("mesh"):
+            return self._collect_wave_segment_mesh(pend)
         if not self._direct:
             return self._partial_from_stats(self._collect_wave(pend))
         from repro.core.stats import add_counters
@@ -611,29 +654,46 @@ class WaveExecutor:
             rows = self._emit_rows_cache[key] = int(shape.shape[0])
         return rows
 
-    def _mesh_program(self, k: int, capacity: int, has_carry: bool,
-                      n_local: int):
-        key = (k, capacity, has_carry, n_local)
+    def _mesh_wave_program(self, n_local: int, scale: int, with_skew: bool):
+        key = (n_local, scale, with_skew)
         fn = self._mesh_programs.get(key)
         if fn is None:
-            fn = self._mesh_programs[key] = self._build_mesh_round(
-                k, capacity, has_carry, n_local)
+            fn = self._mesh_programs[key] = self._build_mesh_wave_program(
+                n_local, scale, with_skew)
         return fn
 
-    def _build_mesh_round(self, k: int, capacity: int, has_carry: bool,
-                          n_local: int):
-        """One round's sharded stage program: the jobs' plumbing, reused.
+    def _build_mesh_wave_program(self, n_local: int, scale: int,
+                                 with_skew: bool):
+        """Trace one mesh wave's FULL round chain into ONE shard_map program.
 
-        Each shard owns a contiguous ``n_local``-token slice of the wave's
-        extended window, pulls its sigma-1 halo from the right neighbor via
-        ppermute (the last shard's halo is zeros -- the window already ends
-        in the wave-level halo, and nothing live reads past it), emits with a
-        shard-local live count, pre-aggregates, and exchanges records through
-        the hash-partitioned ``all_to_all`` shuffle so every gram's evidence
-        lands on one reducer shard.  Carries stay shard-local: at
-        ``tau_eff = 1`` a carry is a pure function of the shard's own
-        extended window (see ``plan.py``), which covers every position the
-        shard's live emits can consult.
+        The distributed twin of ``_build_wave_program``: each shard owns a
+        contiguous ``n_local``-token slice of the wave's extended window,
+        pulls its sigma-1 halo from the right neighbor via ppermute ONCE per
+        wave (the last shard's halo is zeros -- the window already ends in
+        the wave-level halo, and nothing live reads past it), then every
+        round's emit -> combine -> hash-partitioned ``all_to_all`` shuffle ->
+        sort -> reduce -> segment-candidate collect, plus the tau=1 carry
+        updates feeding the next round, trace into a single jitted
+        ``shard_map`` dispatch.  Carries never cross the program boundary:
+        at ``tau_eff = 1`` a carry is a pure function of the shard's own
+        extended window (see ``plan.py``), so they stay shard-local,
+        device-resident, and reset per wave.
+
+        Per-round shuffle capacities are static (the emit-shape probe times
+        ``capacity_factor``), multiplied by the wave-level ``scale`` the
+        overflow retry doubles.  Overflow is NOT host-synced per round: each
+        round's local overflow count accumulates and rides the one psum'd
+        counter block ``cnt [rounds, 3] = (map_records, shuffle_records,
+        overflow)``, checked once per wave at collect time.  The skew
+        histogram (a second psum) is only traced when ``with_skew`` -- the
+        fused program skips that collective + device work entirely when
+        observability is off.
+
+        Outputs stay sharded (leading mesh axis): per round either the flat
+        packed ``(keys [P*C, 1+n_l], counts [P*C])`` candidate table
+        (``self._direct`` -- the host's whole fold is concat + one stable
+        byte-view sort) or the dense ``(terms, flags, counts)`` triple
+        ``[P, ...]`` for the stats fallback route.
         """
         from jax.sharding import PartitionSpec as P
 
@@ -643,9 +703,15 @@ class WaveExecutor:
         lane_vocab = plan.effective_lane_vocab(cfg)
         n_l = packing.n_lanes(cfg.sigma, lane_vocab)
         halo = cfg.sigma - 1
-        has_carry_out = plan.update_carry is not None and k < plan.rounds
+        direct = self._direct
+        combine_route = plan.combine.route if plan.combine is not None else None
+        caps = {k: scale * max(8, int(cfg.capacity_factor
+                                      * self._emit_rows(n_local + halo, k)
+                                      / n_parts) + 1)
+                for k in range(1, plan.rounds + 1)}
+        masks = jnp.asarray(self._prefix_masks()) if direct else None
 
-        def job(tok, n_live, *maybe_carry):
+        def job(tok, n_live):
             tok = tok[0]                                     # [n_local]
             if halo:
                 perm = [(i, (i - 1) % n_parts) for i in range(n_parts)]
@@ -657,152 +723,256 @@ class WaveExecutor:
                 tok_ext = tok
             shard = jax.lax.axis_index(axis_name)
             n_live_local = jnp.clip(n_live - shard * n_local, 0, n_local)
-            carry = maybe_carry[0][0] if has_carry else None
-            records, valid, emit_extras = plan.map.emit(
-                tok_ext, None, n_live_local, cfg, carry, k)
-            map_rec = jnp.sum(valid.astype(jnp.int32))
-            if plan.combine is not None:
-                records = stages.combine(records, n_l, False,
-                                         route=plan.combine.route,
-                                         use_kernels=cfg.use_kernels)
-            live = records[:, n_l] > 0
-            key = stages.partition_keys(records, n_l, kind=plan.shuffle.key,
-                                        vocab_size=lane_vocab)
-            skew = mr_shuffle.partition_ids(key, live, _SKEW_BUCKETS)
-            hist = jax.lax.psum(
-                jnp.bincount(skew, length=_SKEW_BUCKETS + 1)[:_SKEW_BUCKETS],
-                axis_name)
-            local, overflow = mr_shuffle.shuffle(
-                records, key, live, axis_name=axis_name, n_parts=n_parts,
-                capacity=capacity)
-            shuf = jax.lax.psum(jnp.sum(local[:, n_l] > 0), axis_name)
-            rec = stages.sort_stage(local, n_keys=n_l)
-            if plan.reduce.kind == "suffix":
-                terms, flags, counts = stages.reduce_suffix(
-                    rec, sigma=cfg.sigma, vocab_size=lane_vocab, n_buckets=0,
-                    use_kernels=cfg.use_kernels)
-            else:
-                # position payloads are only consumed by tau>1 carries, which
-                # the wave regime never takes -- skip the scatter
-                terms, flags, counts = stages.reduce_exact(
-                    rec, sigma=cfg.sigma, vocab_size=lane_vocab,
-                    with_positions=False)
-            if has_carry_out:
-                carry_out = plan.update_carry(cfg, 1, k, tok_ext, None, {},
+            carry = None
+            rounds_out = []
+            cnt_rows = []
+            hists = []
+            for k in range(1, plan.rounds + 1):
+                records, valid, emit_extras = plan.map.emit(
+                    tok_ext, None, n_live_local, cfg, carry, k)
+                map_rec = jnp.sum(valid.astype(jnp.int32))
+                if combine_route is not None:
+                    records = stages.combine(records, n_l, False,
+                                             route=combine_route,
+                                             use_kernels=cfg.use_kernels)
+                live = records[:, n_l] > 0
+                key = stages.partition_keys(records, n_l,
+                                            kind=plan.shuffle.key,
+                                            vocab_size=lane_vocab)
+                if with_skew:
+                    skew = mr_shuffle.partition_ids(key, live, _SKEW_BUCKETS)
+                    hists.append(jnp.bincount(
+                        skew, length=_SKEW_BUCKETS + 1)[:_SKEW_BUCKETS])
+                local, overflow = mr_shuffle.shuffle(
+                    records, key, live, axis_name=axis_name, n_parts=n_parts,
+                    capacity=caps[k], reduce_overflow=False)
+                shuf = jnp.sum(local[:, n_l] > 0)
+                cnt_rows.append(jnp.stack([map_rec, shuf,
+                                           overflow.astype(jnp.int32)]))
+                rec = stages.sort_stage(local, n_keys=n_l)
+                if plan.reduce.kind == "suffix":
+                    terms, flags, counts = stages.reduce_suffix(
+                        rec, sigma=cfg.sigma, vocab_size=lane_vocab,
+                        n_buckets=0, use_kernels=cfg.use_kernels)
+                else:
+                    # position payloads are only consumed by tau>1 carries,
+                    # which the wave regime never takes -- skip the scatter
+                    terms, flags, counts = stages.reduce_exact(
+                        rec, sigma=cfg.sigma, vocab_size=lane_vocab,
+                        with_positions=False)
+                if direct:
+                    rounds_out.append(stages.segment_candidates(
+                        flags, counts, rec[:, :n_l], masks, sigma=cfg.sigma,
+                        reduce_kind=plan.reduce.kind))
+                else:
+                    rounds_out.append((terms[None], flags[None],
+                                       counts[None]))
+                if k < plan.rounds and plan.update_carry is not None:
+                    carry = plan.update_carry(cfg, 1, k, tok_ext, None, {},
                                               emit_extras, carry)
-            else:
-                carry_out = jnp.zeros((1,), jnp.uint32)
-            cnt = jnp.stack([jax.lax.psum(map_rec, axis_name), shuf, overflow])
-            return (terms[None], flags[None], counts[None], carry_out[None],
-                    cnt[None], hist[None])
+            # ONE collective for every per-round counter (plus one for the
+            # skew histogram when observability asks for it)
+            cnt = jax.lax.psum(jnp.stack(cnt_rows), axis_name)  # [rounds, 3]
+            outs = [tuple(rounds_out), cnt[None]]
+            if with_skew:
+                outs.append(jax.lax.psum(jnp.stack(hists), axis_name)[None])
+            return tuple(outs)
 
-        in_specs = [P(axis_name, None), P()]
-        if has_carry:
-            in_specs.append(P(axis_name, None))
-        return jax.jit(jax.shard_map(job, mesh=mesh, in_specs=tuple(in_specs),
-                                     out_specs=(P(axis_name),) * 6,
-                                     check_vma=False))
+        per_round = (P(axis_name), P(axis_name)) if direct \
+            else (P(axis_name),) * 3
+        out_specs = [tuple(per_round for _ in range(plan.rounds)),
+                     P(axis_name)]
+        if with_skew:
+            out_specs.append(P(axis_name))
+        return jax.jit(jax.shard_map(
+            job, mesh=mesh, in_specs=(P(axis_name, None), P()),
+            out_specs=tuple(out_specs), check_vma=False))
 
-    def _iter_wave_stats_mesh(self, tokens: np.ndarray):
-        """Per-wave exact partials with every wave sharded over the mesh."""
-        from repro.core.stats import NGramStats, add_counters
+    def _submit_wave_mesh(self, tok_host: np.ndarray, n_live: int) -> dict:
+        """Dispatch one mesh wave as ONE sharded program; nothing syncs here.
 
+        ``tok_host`` stays a host array until the padded [n_parts, n_local]
+        shard layout is built (no d2h round trip through a device window).
+        The retry state the collect side needs -- the padded tokens, the
+        dispatch-time capacity scale, the skew flag -- rides the pend dict.
+        """
         cfg, plan = self.cfg, self.plan
         n_parts = self.mesh.shape[self.axis_name]
-        lane_vocab = plan.effective_lane_vocab(cfg)
-        rec_bytes = packing.record_bytes(cfg.sigma, lane_vocab,
-                                         n_meta=plan.map.n_meta)
-        for tok_ext, n_live in self._windows(tokens):
-            win_len = int(tok_ext.shape[0])
-            # the one-hop ppermute halo pulls sigma-1 tokens from the right
-            # neighbor, so a shard's slice must be at least that long --
-            # tiny waves leave trailing shards all-pad (no live positions)
-            n_local = max(-(-win_len // n_parts), cfg.sigma - 1, 1)
-            tok_p = np.zeros((n_parts * n_local,), np.int32)
-            tok_p[:win_len] = np.asarray(tok_ext)
-            tok_p = jnp.asarray(tok_p.reshape(n_parts, n_local))
-            n_live_dev = jnp.int32(n_live)
-            counters: dict = {}
-            out = None
-            carry = None
-            for k in range(1, plan.rounds + 1):
-                rows = self._emit_rows(n_local + cfg.sigma - 1, k)
-                capacity = max(8, int(cfg.capacity_factor * rows / n_parts) + 1)
-                with obs_trace.span("wave.mesh.round") as sp_r:
-                    for attempt in range(6):   # overflow -> double, rerun
-                        fn = self._mesh_program(k, capacity, carry is not None,
-                                                n_local)
-                        args = (tok_p, n_live_dev) + (
-                            (carry,) if carry is not None else ())
-                        terms, flags, counts, carry_out, cnt, hist = fn(*args)
-                        # per-attempt sync: ONLY the overflow flag.  The full
-                        # cnt/hist of an overflowed attempt must never reach
-                        # the counters -- a rerun re-emits the same records,
-                        # so folding every attempt's stats would double-count
-                        # map/shuffle records; only the successful attempt's
-                        # stats land (below), while the reruns themselves
-                        # stay visible through ``retries``.
-                        if int(cnt[0, 2]) == 0:
-                            break
-                        capacity *= 2
-                    else:
-                        raise RuntimeError(
-                            f"wave shuffle overflow persisted at capacity "
-                            f"{capacity} (round {k})")
-                    if sp_r:
-                        sp_r.set(round=k, retries=attempt, capacity=capacity)
-                if attempt:   # capacity-doubling reruns, visible like the jobs'
-                    add_counters(counters, retries=attempt)
-                cnt_np = np.asarray(cnt)        # the successful attempt's
-                shuf = int(cnt_np[0, 1])
-                hist_np = np.asarray(hist)[0]
-                add_counters(counters, jobs=1, map_records=int(cnt_np[0, 0]),
-                             shuffle_records=shuf,
-                             shuffle_bytes=shuf * rec_bytes)
-                if shuf:
-                    skew = float(hist_np.max() * _SKEW_BUCKETS
-                                 / max(hist_np.sum(), 1))
-                    counters["shuffle_skew"] = max(
-                        counters.get("shuffle_skew", 0.0), skew)
-                with obs_trace.span("wave.mesh.materialize") as sp_m:
-                    terms, flags, counts = (np.asarray(terms),
-                                            np.asarray(flags),
-                                            np.asarray(counts))
-                    stats_k = None
-                    for p in range(n_parts):
-                        part = NGramStats.from_dense(terms[p], flags[p],
-                                                     counts[p], 1)
-                        stats_k = part if stats_k is None else \
-                            stats_k.merged_with(part)
-                    if sp_m:
-                        sp_m.set(round=k, rows=len(stats_k))
-                out = stats_k if out is None else out.merged_with(stats_k)
-                if plan.stop_on_empty and len(stats_k) == 0:
-                    break
-                if k < plan.rounds and plan.update_carry is not None:
-                    carry = carry_out
-            out.counters = counters
-            yield out
+        win_len = int(tok_host.shape[0])
+        # the one-hop ppermute halo pulls sigma-1 tokens from the right
+        # neighbor, so a shard's slice must be at least that long -- tiny
+        # waves leave trailing shards all-pad (no live positions)
+        n_local = max(-(-win_len // n_parts), cfg.sigma - 1, 1)
+        tok_p = np.zeros((n_parts * n_local,), np.int32)
+        tok_p[:win_len] = tok_host
+        tok_p = tok_p.reshape(n_parts, n_local)
+        with_skew = bool(obs_metrics.get_registry())
+        scale = self._mesh_scale
+        with obs_trace.span("wave.mesh.dispatch") as sp:
+            if sp:
+                sp.set(n_live=n_live, rounds=plan.rounds, n_local=n_local,
+                       scale=scale)
+            outs = self._launch_mesh_wave(n_local, scale, with_skew, tok_p,
+                                          n_live)
+        rec_bytes = packing.record_bytes(
+            cfg.sigma, plan.effective_lane_vocab(cfg), n_meta=plan.map.n_meta)
+        return {"mesh": True, "outs": outs, "tok_p": tok_p, "n_live": n_live,
+                "n_local": n_local, "scale": scale, "with_skew": with_skew,
+                "rec_bytes": rec_bytes}
+
+    def _launch_mesh_wave(self, n_local: int, scale: int, with_skew: bool,
+                          tok_p: np.ndarray, n_live: int):
+        """Launch one fused mesh-wave program, serialized against the last.
+
+        Collective programs launched while another is still executing can
+        interleave their rendezvous participants across device threads on the
+        host backend and stall for seconds (two in-flight waves = two run
+        ids racing the same ppermute).  Launches therefore wait for the
+        previous program to finish first; the lock covers the feeder thread
+        vs the fold thread's overflow-retry launches.  Only device *launch*
+        is serialized -- the host-side fold still overlaps the next wave's
+        execution, which is where the 1-core overlap win actually is.
+        """
+        with self._mesh_launch_lock:
+            if self._mesh_last_launch is not None:
+                jax.block_until_ready(self._mesh_last_launch)
+            fn = self._mesh_wave_program(n_local, scale, with_skew)
+            outs = fn(jnp.asarray(tok_p), jnp.int32(n_live))
+            self._mesh_last_launch = outs[1]
+            return outs
+
+    def _collect_wave_mesh_outs(self, pend: dict):
+        """The wave's ONE host sync: read counters, retry on overflow.
+
+        Materializing the psum'd ``cnt [rounds, 3]`` block is the only
+        per-wave device round trip.  If any round overflowed its shuffle
+        capacity, the WHOLE wave reruns at doubled capacity scale -- correct
+        because carries are internal to the program (a rerun re-derives them
+        from the same tokens) and cheap because overflow is rare and sticky:
+        the doubled scale persists in ``self._mesh_scale``, so subsequent
+        waves dispatch at the proven capacity and never trip again.  An
+        overflowed attempt's counters never land (a rerun re-emits the same
+        records; folding both would double-count) -- only the successful
+        attempt's ``cnt``/hist do, while reruns stay visible via ``retries``.
+        """
+        outs = pend["outs"]
+        retries = 0
+        while True:
+            cnt = np.asarray(outs[1])[0]                     # [rounds, 3]
+            if int(cnt[:, 2].sum()) == 0:
+                return outs, cnt, retries
+            if retries >= 5:
+                raise RuntimeError(
+                    "wave shuffle overflow persisted at capacity scale "
+                    f"{pend['scale']}")
+            retries += 1
+            pend["scale"] *= 2
+            self._mesh_scale = max(self._mesh_scale, pend["scale"])
+            with obs_trace.span("wave.mesh.retry") as sp:
+                if sp:
+                    sp.set(retry=retries, scale=pend["scale"])
+                outs = self._launch_mesh_wave(pend["n_local"], pend["scale"],
+                                              pend["with_skew"],
+                                              pend["tok_p"], pend["n_live"])
+
+    def _mesh_counters(self, cnt: np.ndarray, outs, pend: dict,
+                       retries: int) -> dict:
+        """Wave counters from the successful attempt's psum'd ``cnt`` block."""
+        from repro.core.stats import add_counters
+
+        counters: dict = {}
+        if retries:   # capacity-doubling reruns, visible like the jobs'
+            add_counters(counters, retries=retries)
+        hist = np.asarray(outs[2])[0] if pend["with_skew"] else None
+        for k in range(cnt.shape[0]):
+            shuf = int(cnt[k, 1])
+            add_counters(counters, jobs=1, map_records=int(cnt[k, 0]),
+                         shuffle_records=shuf,
+                         shuffle_bytes=shuf * pend["rec_bytes"])
+            if hist is not None and shuf:
+                skew = float(hist[k].max() * _SKEW_BUCKETS
+                             / max(hist[k].sum(), 1))
+                counters["shuffle_skew"] = max(
+                    counters.get("shuffle_skew", 0.0), skew)
+        return counters
+
+    def _mesh_wave_stats(self, rounds_out, counters: dict):
+        """Stats-route fallback fold (``pack_vocab`` overrides): from_dense
+        per shard per round, merged on host -- only configs whose lane
+        layout is not the segment layout pay this."""
+        from repro.core.stats import NGramStats
+
+        out = None
+        for terms, flags, counts in rounds_out:
+            terms, flags, counts = (np.asarray(terms), np.asarray(flags),
+                                    np.asarray(counts))
+            for p in range(terms.shape[0]):
+                part = NGramStats.from_dense(terms[p], flags[p], counts[p], 1)
+                out = part if out is None else out.merged_with(part)
+        out.counters = counters
+        return out
+
+    def _collect_wave_segment_mesh(self, pend: dict) -> WavePartial:
+        """Materialize a mesh wave straight into a sorted host segment.
+
+        The sharded twin of :meth:`_collect_wave_segment`: the fused program
+        already collected packed segment-candidate rows on device
+        (``stages.segment_candidates``), so the host fold is concat over
+        (shard, round) tables + drop dead rows + ONE stable byte-view sort.
+        Within a wave every kept gram key is unique across shards (the
+        shuffle routes all evidence of a gram to one reducer shard) and
+        across rounds (rounds emit disjoint lengths), so the sorted row set
+        -- and with it the bit-identity contract -- is independent of
+        shard/round concat order.
+        """
+        from repro.index._layout import row_bytes_view
+        from repro.index.build import IndexSegment
+
+        with obs_trace.span("wave.mesh.collect") as sp:
+            outs, cnt, retries = self._collect_wave_mesh_outs(pend)
+            counters = self._mesh_counters(cnt, outs, pend, retries)
+            if not self._direct:
+                return self._partial_from_stats(
+                    self._mesh_wave_stats(outs[0], counters))
+            keys = np.concatenate([np.asarray(k) for k, _ in outs[0]], axis=0)
+            cnts = np.concatenate([np.asarray(c) for _, c in outs[0]], axis=0)
+            live = cnts > 0
+            keys, cnts = keys[live], cnts[live]
+            order = np.argsort(row_bytes_view(keys), kind="stable")
+            seg = IndexSegment(keys=keys[order], counts=cnts[order],
+                               sigma=self.cfg.sigma,
+                               vocab_size=self.cfg.vocab_size)
+            if sp:
+                sp.set(rows=int(keys.shape[0]), retries=retries,
+                       shuffle_records=counters.get("shuffle_records", 0))
+            return WavePartial(seg, int(keys.shape[0]), counters)
+
+    def _collect_wave_mesh(self, pend: dict):
+        """Mesh collect -> ``NGramStats`` (the ``iter_wave_stats`` shape)."""
+        from repro.index.merge import segment_to_stats
+
+        part = self._collect_wave_segment_mesh(pend)
+        out = segment_to_stats(part.segment)
+        out.counters = dict(part.counters)
+        return out
 
     # --- public iteration ----------------------------------------------------- #
 
     def iter_wave_stats(self, tokens):
         """Per-wave exact partials (``tau = 1``) -- the streaming delta feed.
 
-        Single-device waves are double-buffered: wave ``i + 1`` is dispatched
-        before wave ``i`` is materialized, so the consumer's host-side work
-        (segment folds, generational ingest) overlaps device execution.  With
-        a mesh, each wave runs sharded (overflow retries force a per-wave
-        sync, so mesh waves dispatch synchronously).
+        Waves are double-buffered: wave ``i + 1`` is dispatched before wave
+        ``i`` is materialized, so the consumer's host-side work (segment
+        folds, generational ingest) overlaps device execution.  Mesh waves
+        take the same path -- the fused sharded program defers its overflow
+        check to collect time, so dispatch never waits on a host sync.
         """
         tokens = np.asarray(tokens, np.int32)
         self.cfg.validate_tokens(tokens)
-        if self.mesh is not None and self.mesh.size > 1:
-            yield from self._iter_wave_stats_mesh(tokens)
-            return
         drv = DoubleBufferedDriver(self._submit_wave,
                                    collect=self._collect_wave)
-        for tok_ext, n_live in self._windows(tokens):
+        for tok_ext, n_live in self._windows(tokens,
+                                             to_device=not self._use_mesh):
             res, _ = drv.submit(tok_ext, n_live)
             if res is not None:
                 yield res
@@ -810,42 +980,36 @@ class WaveExecutor:
         if res is not None:
             yield res
 
-    def _for_each_wave(self, tokens, consume, *, collect=None,
-                       from_stats=None) -> None:
+    def _for_each_wave(self, tokens, consume, *, collect=None) -> None:
         """Run ``consume(collected wave)`` for every wave, in wave order.
 
-        ``collect`` maps a submitted single-device wave to the object
-        ``consume`` sees (default :meth:`_collect_wave` -> ``NGramStats``;
-        the fold paths pass :meth:`_collect_wave_segment` ->
-        :class:`WavePartial`); ``from_stats`` adapts the mesh path's
-        ``NGramStats`` partials to the same type (default identity).
+        ``collect`` maps a submitted wave to the object ``consume`` sees
+        (default :meth:`_collect_wave` -> ``NGramStats``; the fold paths
+        pass :meth:`_collect_wave_segment` -> :class:`WavePartial`); both
+        route mesh waves to their sharded twins via the pend dict.
 
-        The wave-level parallel fold: on the single-device path the main
-        thread stays a pure *feeder* -- it slices host token slabs and
-        dispatches one fused program per wave -- while a background fold
-        thread materializes each wave and runs ``consume`` (the accumulator
-        merge of :meth:`run`, the generational ingest of
-        :meth:`run_streaming`).  Host-side fold work therefore overlaps the
-        next waves' device work instead of serializing with it; a bounded
-        queue (``_WAVES_IN_FLIGHT``) backpressures the feeder so at most a
-        small constant number of waves is ever in flight, preserving the
+        The wave-level parallel fold: the main thread stays a pure *feeder*
+        -- it slices host token slabs and dispatches one fused program per
+        wave (single-device or sharded) -- while a background fold thread
+        materializes each wave and runs ``consume`` (the accumulator merge
+        of :meth:`run`, the generational ingest of :meth:`run_streaming`).
+        Host-side fold work therefore overlaps the next waves' device work
+        instead of serializing with it; a bounded queue
+        (``_WAVES_IN_FLIGHT``) backpressures the feeder so at most a small
+        constant number of waves is ever in flight, preserving the
         O(wave * sigma) memory model.  The single FIFO fold thread keeps
         wave order, so the fold sequence -- and with it the bit-identity
-        contract -- is exactly the serial path's.
-
-        Mesh waves stay synchronous (overflow retries force a per-wave
-        sync), as does ``overlap=False``.
+        contract -- is exactly the serial path's.  Mesh overflow reruns
+        happen on the fold thread too (collect-time), so even a retried
+        wave never stalls the feeder.  ``overlap=False`` serializes.
         """
         collect = collect or self._collect_wave
-        from_stats = from_stats or (lambda ws: ws)
         tokens = np.asarray(tokens, np.int32)
         self.cfg.validate_tokens(tokens)
-        if self.mesh is not None and self.mesh.size > 1:
-            for wave_stats in self._iter_wave_stats_mesh(tokens):
-                consume(from_stats(wave_stats))
-            return
+        to_device = not self._use_mesh
         if not self.overlap:
-            for tok_ext, n_live in self._windows(tokens):
+            for tok_ext, n_live in self._windows(tokens,
+                                                 to_device=to_device):
                 consume(collect(self._submit_wave(tok_ext, n_live)))
             return
         import queue
@@ -871,7 +1035,8 @@ class WaveExecutor:
                                   daemon=True)
         folder.start()
         try:
-            for tok_ext, n_live in self._windows(tokens):
+            for tok_ext, n_live in self._windows(tokens,
+                                                 to_device=to_device):
                 if failure:
                     break
                 work.put(self._submit_wave(tok_ext, n_live))
@@ -923,8 +1088,7 @@ class WaveExecutor:
                     acc.push(part.segment, n_rows=part.n_rows)
 
             self._for_each_wave(tokens, fold,
-                                collect=self._collect_wave_segment,
-                                from_stats=self._partial_from_stats)
+                                collect=self._collect_wave_segment)
             with obs_trace.span("wave.finalize") as sp:
                 # tau filters inside segment_to_stats, *before* the term
                 # unpack, so only the monolithic-sized survivor set pays it
@@ -965,6 +1129,5 @@ class WaveExecutor:
                 part.segment if part.n_rows else None, n_rows=part.n_rows))
 
         self._for_each_wave(tokens, ingest,
-                            collect=self._collect_wave_segment,
-                            from_stats=self._partial_from_stats)
+                            collect=self._collect_wave_segment)
         return gen, reports

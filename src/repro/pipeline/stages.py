@@ -183,6 +183,52 @@ def reduce_exact(rec: jax.Array, *, sigma: int, vocab_size: int,
     return terms, flags, counts, totals_at_pos
 
 
+# ------------------------------------------------- device-side segment collect
+def segment_candidates(flags: jax.Array, counts: jax.Array, lanes: jax.Array,
+                       masks: jax.Array, *, sigma: int, reduce_kind: str):
+    """Packed segment-candidate rows straight off a reducer's dense output.
+
+    The traceable twin of the host collect in
+    ``WaveExecutor._collect_wave_segment``: a kept row of length ``l`` has
+    segment key ``(l | lanes & masks[l])`` (zeroing a term slot's bit field
+    == packing PAD there -- see ``mapreduce.pack.prefix_lane_masks``), so the
+    candidate table is a pure elementwise function of (flags, counts, sorted
+    key lanes) and folds into the fused wave program -- the host never sees
+    dense reducer output, only flat ``(length | prefix lanes, count)`` rows
+    with dead rows zeroed (length 0, count 0).  Shapes are static:
+    ``"suffix"`` reducers may keep several lengths per row (one candidate per
+    (row, length) cell), ``"exact"`` reducers keep at most one (the row's own
+    gram length), so the table is [N * sigma] or [N] rows respectively.
+
+    Candidate *order* is deliberately unspecified: within one wave every kept
+    gram key is unique across rounds (rounds emit disjoint lengths; a sorted
+    reducer block flags each run once), so the collector's closing stable
+    byte-view sort is a pure function of the row set.
+    """
+    n, n_l = lanes.shape
+    keep = (flags != 0) & (counts >= 1)
+    if reduce_kind == "suffix":
+        # [N, sigma] grid: candidate (r, l) is the length-(l+1) prefix run
+        pref = jnp.stack([lanes & masks[l] for l in range(1, sigma + 1)],
+                         axis=1)                              # [N, sigma, n_l]
+        lens = jnp.where(keep, jnp.arange(1, sigma + 1, dtype=jnp.uint32),
+                         jnp.uint32(0))
+        keys = jnp.concatenate(
+            [lens[..., None],
+             jnp.where(keep[..., None], pref, jnp.uint32(0))], axis=-1)
+        cnts = jnp.where(keep, counts, 0).astype(jnp.uint32)
+        return keys.reshape(n * sigma, 1 + n_l), cnts.reshape(n * sigma)
+    # exact: at most one flagged length per row -- no sigma blowup
+    len_idx = jnp.argmax(keep, axis=1)                        # 0 when dead
+    keep_row = jnp.any(keep, axis=1)
+    length = jnp.where(keep_row, (len_idx + 1).astype(jnp.uint32),
+                       jnp.uint32(0))
+    pref = jnp.where(keep_row[:, None], lanes & masks[length], jnp.uint32(0))
+    cnt = jnp.where(keep_row, counts[jnp.arange(n), len_idx],
+                    0).astype(jnp.uint32)
+    return jnp.concatenate([length[:, None], pref], axis=1), cnt
+
+
 # ----------------------------------------------------------- canonical output
 def canonical_stats(stats):
     """Canonical row order + dedup of a job output: sort by (length, terms

@@ -409,10 +409,11 @@ def test_sharded_generational_matches_single_device():
 
 @pytest.mark.slow
 def test_mesh_waves_match_single_device_and_monolithic():
-    """Distributed waves: every wave's stage pipeline sharded over an 8-way
-    mesh (ppermute halo + all_to_all shuffle) must be bit-identical to BOTH
-    the single-device wave run and the monolithic job -- all four methods,
-    plus wave-smaller-than-mesh and one-wave degenerate shapes."""
+    """Distributed waves: every wave running as one fused shard_map dispatch
+    over an 8-way mesh (ppermute halo + all_to_all shuffle + device-side
+    segment collect) must be bit-identical to BOTH the single-device wave
+    run and the monolithic job -- all four methods, each across the partial-
+    final-wave, wave-smaller-than-mesh, and one-wave degenerate shapes."""
     out = run_with_devices("""
         import numpy as np, jax
         from repro.core import run_job
@@ -422,8 +423,7 @@ def test_mesh_waves_match_single_device_and_monolithic():
         mesh = jax.make_mesh((8,), ("data",),
                              axis_types=(jax.sharding.AxisType.Auto,))
 
-        def check(toks, cfg, wave):
-            mono = run_job(toks, cfg)
+        def check(toks, mono, cfg, wave):
             single = WaveExecutor(cfg, wave_tokens=wave).run(toks)
             dist = WaveExecutor(cfg, wave_tokens=wave, mesh=mesh).run(toks)
             for got in (single, dist):
@@ -437,12 +437,84 @@ def test_mesh_waves_match_single_device_and_monolithic():
         for m in ("suffix_sigma", "naive", "apriori_scan", "apriori_index"):
             cfg = NGramConfig(sigma=4, tau=2, vocab_size=23, method=m,
                               apriori_index_k=2)
-            d = check(toks, cfg, 97)          # partial final wave included
+            mono = run_job(toks, cfg)
+            d = check(toks, mono, cfg, 97)    # partial final wave included
             assert d.counters["waves"] == -(-len(toks) // 97)
-        cfg = NGramConfig(sigma=4, tau=2, vocab_size=23)
-        check(toks, cfg, 5)                   # wave smaller than the mesh
-        check(toks, cfg, len(toks) + 5)       # one-wave degenerate
+            check(toks, mono, cfg, 5)         # wave smaller than the mesh
+            check(toks, mono, cfg, len(toks) + 5)   # one-wave degenerate
         print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_fused_mesh_one_dispatch_per_wave():
+    """The fused mesh-wave program really is ONE sharded dispatch per wave:
+    a traced 8-wave multi-round run emits exactly one ``wave.mesh.dispatch``
+    span per wave (rounds fused inside the shard_map program, not looped on
+    the host), one collect per wave, no overflow retries -- the mesh twin of
+    ``test_fused_wave_one_stage_dispatch_per_wave``."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.stats import NGramConfig
+        from repro.pipeline import WaveExecutor
+        from repro.pipeline.plan import plan_for
+        from repro.obs import trace as obs_trace
+        from tests.test_compress import make_corpus
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        toks = make_corpus(400, 23, "zipf", seed=5)
+        n_waves = 8
+        wave = -(-len(toks) // n_waves)
+        cfg = NGramConfig(sigma=4, tau=2, vocab_size=23,
+                          method="apriori_scan")
+        assert plan_for(cfg).rounds > 1
+        ex = WaveExecutor(cfg, wave_tokens=wave, mesh=mesh)
+        ex.run(toks)                   # warm the per-shape program cache
+        tracer = obs_trace.enable_tracing()
+        try:
+            ex.run(toks)
+        finally:
+            obs_trace.disable_tracing()
+        names = [e["name"] for e in tracer.events]
+        assert names.count("wave.mesh.dispatch") == n_waves, names
+        assert names.count("wave.mesh.collect") == n_waves
+        assert names.count("wave.mesh.retry") == 0
+        assert names.count("wave.fold") == n_waves
+        assert names.count("wave.run") == 1
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_mesh_skew_histogram_gated_by_metrics():
+    """The per-round skew histogram (a psum'd bincount) must stay out of the
+    fused mesh program when metrics are off: disabled runs report
+    ``shuffle_skew == 0.0`` (the collective never runs), enabled runs
+    measure a real skew -- and the gram set plus every additive counter is
+    identical either way (observability must not change results)."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.stats import NGramConfig
+        from repro.pipeline import WaveExecutor
+        from repro.obs import metrics as obs_metrics
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(3)
+        toks = rng.integers(1, 40, 800).astype(np.int32)
+        cfg = NGramConfig(sigma=3, tau=1, vocab_size=64)
+        off = WaveExecutor(cfg, wave_tokens=200, mesh=mesh).run(toks)
+        assert off.counters["shuffle_skew"] == 0.0   # psum skipped outright
+        obs_metrics.set_registry(obs_metrics.MetricsRegistry())
+        try:
+            on = WaveExecutor(cfg, wave_tokens=200, mesh=mesh).run(toks)
+        finally:
+            obs_metrics.set_registry(None)
+        assert on.counters["shuffle_skew"] > 0.0
+        assert on.to_dict() == off.to_dict()
+        for k in ("jobs", "map_records", "shuffle_records", "shuffle_bytes",
+                  "waves", "retries"):
+            assert on.counters[k] == off.counters[k], k
+        print("OK skew=", on.counters["shuffle_skew"])
     """)
     assert "OK" in out
 

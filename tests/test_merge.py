@@ -52,7 +52,7 @@ def check_merge_parity(sa, sb, vocab, *, block=4):
     # flat: both routes, ref and kernel merge-path
     want = build_index(union, vocab_size=vocab)
     for kw in (dict(route="merge"), dict(route="merge", use_kernels=True),
-               dict(route="sort")):
+               dict(route="sort"), dict(route="device")):
         got = merge_indexes([build_index(sa, vocab_size=vocab),
                              build_index(sb, vocab_size=vocab)], **kw)
         assert_trees_equal(got, want)
@@ -144,6 +144,29 @@ def test_device_fold_host_fallback_parity(monkeypatch):
     np.testing.assert_array_equal(np.asarray(got.keys), np.asarray(want.keys))
     np.testing.assert_array_equal(np.asarray(got.counts),
                                   np.asarray(want.counts))
+
+
+def test_device_merge_route_oversized_falls_back_to_kway(monkeypatch):
+    """The ``device`` route's size guard: above ``DEVICE_MERGE_MAX_ROWS``
+    total input rows the fold must silently reroute to the galloping host
+    k-way merge with identical output (the oversized tau=1 gram-set case the
+    mesh wave accumulator hits)."""
+    from repro.index import merge as merge_mod
+
+    vocab = 30
+    cfg = NGramConfig(sigma=3, tau=1, vocab_size=vocab)
+    stats = [run_job(make_corpus(900, vocab, "zipf", s), cfg)
+             for s in range(3)]
+    segs = [segment_from_stats(s, vocab_size=vocab) for s in stats]
+    want = merge_segments(segs, route="kway")
+    on_device = merge_segments(segs, route="device")
+    monkeypatch.setattr(merge_mod, "DEVICE_MERGE_MAX_ROWS", 1)
+    fell_back = merge_segments(segs, route="device")
+    for got in (on_device, fell_back):
+        np.testing.assert_array_equal(np.asarray(got.keys),
+                                      np.asarray(want.keys))
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(want.counts))
 
 
 def test_generational_query_overflow_guard_trips():

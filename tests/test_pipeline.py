@@ -148,6 +148,20 @@ def test_accumulator_rejects_unknown_policy():
         WaveExecutor(cfg, wave_tokens=8, accumulator="nope")
 
 
+def test_merge_route_device_matches_monolithic():
+    """The on-device k-way fold route (``merge_route="device"``, the mesh
+    accumulator's default lever) is bit-identical to the monolithic job and
+    to the host k-way default, across both fold policies."""
+    toks = make_corpus(2000, 40, "zipf", seed=41)
+    cfg = NGramConfig(sigma=4, tau=2, vocab_size=40)
+    wave = -(-len(toks) // 8)
+    mono = run_job(toks, cfg)
+    for acc in ("defer", "tiered"):
+        got = WaveExecutor(cfg, wave_tokens=wave, accumulator=acc,
+                           merge_route="device").run(toks)
+        assert_stats_equal(got, mono)
+
+
 def test_segment_accumulators_match_merge_oracle():
     """Unit level: pushing per-wave segments through either accumulator gives
     the segment a one-shot merge of everything would."""
