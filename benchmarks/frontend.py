@@ -1,0 +1,435 @@
+"""Serving-frontend benchmark: open-loop mixed workload against QueryFrontend.
+
+Unlike ``benchmarks/serving.py`` (closed-loop micro-batches straight into the
+index), this drives the whole serving tier -- admission control, duplicate
+coalescing, the continuous batcher -- the way production traffic does:
+requests arrive on an **open-loop** schedule (arrival times fixed in advance,
+independent of completions, so queueing delay is *measured*, not hidden by
+backpressure), mixing lookup hits, lookup misses, and top-k continuations
+across two priority classes and several tenants.
+
+Protocol:
+
+1. measure capacity closed-loop (N worker threads calling as fast as answers
+   return) -- the sustainable QPS of this host/config;
+2. run one open-loop cell at ~0.6x capacity (healthy) and one at ~2.5x
+   capacity (stress) against the same frontend;
+3. run a **burst cell** against a small-bucket frontend: a tight-loop burst
+   of cold top-k queries whose instantaneous offered rate (tens of k/s)
+   exceeds the drain rate, so queue depth crosses the admission budget within
+   milliseconds.  This is the admission layer's contract check: offered load
+   beyond the budget must turn into load shedding -- batch-class requests
+   shed first, sustained drain holds, and the *admitted* p99 stays bounded
+   by ``hard_limit / drain_rate + deadline`` -- rather than latency collapse.
+
+Every run appends an env-stamped record (cells + registry snapshot) to
+``BENCH_frontend.json`` so the serving-tier trajectory is diffable run over
+run.  ``--smoke`` is the CI mode: tiny corpus, an in-process HTTP server
+driven by concurrent client threads over localhost, metrics exported to
+JSONL for schema validation -- no BENCH write, seconds not minutes.
+
+    PYTHONPATH=src python benchmarks/frontend.py
+    PYTHONPATH=src python benchmarks/frontend.py --smoke --metrics /tmp/m.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+BENCH_JSON = "BENCH_frontend.json"
+
+#: workload mix: (kind, needs_hit) weights -- 60% hot lookups, 20% cold
+#: lookups, 20% top-k continuations
+MIX = (("lookup", True, 0.6), ("lookup", False, 0.2), ("topk", True, 0.2))
+PRIORITY_MIX = (("interactive", 0.7), ("batch", 0.3))
+TENANTS = ("t0", "t1", "t2", "t3")
+
+
+def _setup(n_tokens: int, *, deadline_ms: float, queue_budget: int,
+           sigma: int = 5, tau: int = 4):
+    from repro.core.stats import NGramConfig
+    from repro.data import corpus as corpus_mod
+    from repro.serve.admission import AdmissionController
+    from repro.serve.frontend import QueryFrontend
+    from repro.serve.service import StreamingNGramService
+
+    prof = corpus_mod.NYT
+    tokens = corpus_mod.zipf_corpus(n_tokens, prof, seed=0,
+                                    duplicate_frac=0.02)
+    cfg = NGramConfig(sigma=sigma, tau=tau, vocab_size=prof.vocab_size)
+    svc = StreamingNGramService(cfg, cache_capacity=8192)
+    svc.ingest(tokens)
+    fe = QueryFrontend(svc, admission=AdmissionController(
+        queue_budget=queue_budget), deadline_s=deadline_ms / 1e3)
+    return svc, fe
+
+
+def _workload(svc, n: int, *, k: int = 8, seed: int = 1) -> list[tuple]:
+    """n pre-drawn requests: (kind, gram_row, length, k, tenant, priority)."""
+    from repro.index.merge import segment_to_stats
+
+    sigma = int(svc.cfg.sigma)
+    vocab = int(svc.cfg.vocab_size)
+    stats = segment_to_stats(svc.gen.segments[0].to_segment())
+    grams = np.asarray(stats.grams, np.int32)
+    lengths = np.asarray(stats.lengths, np.int32)
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice(len(MIX), n, p=[w for _, _, w in MIX])
+    prios = rng.choice(len(PRIORITY_MIX), n,
+                       p=[w for _, w in PRIORITY_MIX])
+    hit_ix = rng.integers(0, len(grams), n)
+    work = []
+    for i in range(n):
+        kind, hot, _ = MIX[kinds[i]]
+        tenant = TENANTS[i % len(TENANTS)]
+        priority = PRIORITY_MIX[prios[i]][0]
+        if kind == "topk":
+            row = grams[hit_ix[i]]
+            ln = max(min(int(lengths[hit_ix[i]]) - 1, sigma - 1), 1)
+        elif hot:
+            row, ln = grams[hit_ix[i]], int(lengths[hit_ix[i]])
+        else:                        # cold: random gram, almost surely absent
+            row = rng.integers(1, vocab + 1, sigma).astype(np.int32)
+            ln = sigma
+        work.append((kind, row, ln, k, tenant, priority))
+    return work
+
+
+def _cold_topk_work(svc, n: int, *, k: int = 32, seed: int = 5) -> list[tuple]:
+    """n cold top-k requests (random prefixes, unlikely cached or coalesced),
+    alternating priority class -- the burst cell's worst-case traffic."""
+    sigma = int(svc.cfg.sigma)
+    vocab = int(svc.cfg.vocab_size)
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(1, vocab + 1, (n, sigma - 1)).astype(np.int32)
+    return [("topk", prefixes[i], sigma - 1, k, TENANTS[i % len(TENANTS)],
+             PRIORITY_MIX[i % 2][0]) for i in range(n)]
+
+
+def _call(fe, item, timeout=30.0):
+    kind, row, ln, k, tenant, priority = item
+    return fe.call(kind, row, ln, k=k, tenant=tenant, priority=priority,
+                   timeout=timeout)
+
+
+def measure_capacity(fe, work: list, *, threads: int = 8,
+                     duration: float = 1.5) -> float:
+    """Closed-loop sustainable QPS: N workers, each next call gated on the
+    previous answer, so offered == completed and nothing sheds."""
+    for item in work[:64]:                        # compile + cache warm
+        _call(fe, item)
+    done = [0] * threads
+    t_end = time.perf_counter() + duration
+
+    def worker(w: int) -> None:
+        i = w
+        while time.perf_counter() < t_end:
+            _call(fe, work[i % len(work)])
+            done[w] += 1
+            i += threads
+
+    ts = [threading.Thread(target=worker, args=(w,)) for w in range(threads)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return sum(done) / (time.perf_counter() - t0)
+
+
+def open_loop(fe, work: list, *, rate: float, duration: float) -> dict:
+    """One open-loop cell: submit on the fixed arrival schedule, measure
+    admitted latency + verdicts.  The dispatcher never blocks on an answer
+    (completions land via future callbacks), so queue growth shows up as
+    latency/shedding exactly as it would for independent clients."""
+    n = max(int(rate * duration), 1)
+    lock = threading.Lock()
+    all_done = threading.Event()
+    state = {"pending": 0, "submitted_all": False, "errors": 0}
+    lats: list[float] = []
+    verdicts = {"admitted": 0, "coalesced": 0, "shed": 0, "quota": 0}
+    shed_by_class = {"interactive": 0, "batch": 0}
+
+    def on_done(f, t0: float) -> None:
+        t1 = time.perf_counter()
+        with lock:
+            if f.cancelled() or f.exception() is not None:
+                state["errors"] += 1
+            else:
+                lats.append(t1 - t0)
+            state["pending"] -= 1
+            if state["pending"] == 0 and state["submitted_all"]:
+                all_done.set()
+
+    t_start = time.perf_counter()
+    for i in range(n):
+        target = t_start + i / rate
+        now = time.perf_counter()
+        if target - now > 5e-4:                   # stay open-loop, not busy
+            time.sleep(target - now)
+        item = work[i % len(work)]
+        kind, row, ln, k, tenant, priority = item
+        t0 = time.perf_counter()
+        ticket = fe.submit(kind, row, ln, k=k, tenant=tenant,
+                           priority=priority)
+        verdicts[ticket.status] += 1
+        if not ticket.admitted:
+            shed_by_class[priority] += 1
+            continue
+        with lock:
+            state["pending"] += 1
+        ticket.future.add_done_callback(
+            lambda f, t0=t0: on_done(f, t0))
+    with lock:
+        state["submitted_all"] = True
+        drained = state["pending"] == 0
+    if not drained:
+        all_done.wait(timeout=60.0)
+    t_total = time.perf_counter() - t_start
+    lats.sort()
+
+    def pct(p: float) -> float:
+        return lats[min(int(p * len(lats)), len(lats) - 1)] if lats else 0.0
+
+    return {
+        "offered_qps": n / t_total,
+        "sustained_qps": len(lats) / t_total,
+        "p50_s": pct(0.50), "p99_s": pct(0.99),
+        "completed": len(lats), "errors": state["errors"],
+        "verdicts": verdicts, "shed_by_class": shed_by_class,
+    }
+
+
+def burst_cell(fe, work: list) -> dict:
+    """Tight-loop burst: submit everything as fast as Python can, then drain.
+
+    The instantaneous offered rate (no pacing) exceeds the small-bucket
+    frontend's drain rate, so queue depth crosses the soft budget (batch
+    class sheds) and then the hard limit (everything sheds) within the burst
+    window -- the open-loop equivalent of a traffic spike."""
+    t_done: dict[int, float] = {}         # per-key setitem is GIL-atomic
+    t0s = []
+    tickets = []
+    t_start = time.perf_counter()
+    for i, item in enumerate(work):
+        kind, row, ln, k, tenant, priority = item
+        t0s.append(time.perf_counter())
+        ticket = fe.submit(kind, row, ln, k=k, tenant=tenant,
+                           priority=priority)
+        tickets.append(ticket)
+        if ticket.admitted:
+            ticket.future.add_done_callback(
+                lambda f, i=i: t_done.__setitem__(i, time.perf_counter()))
+    t_submit = time.perf_counter() - t_start
+    for t in tickets:
+        if t.admitted:
+            t.future.result(timeout=60.0)
+    t_total = time.perf_counter() - t_start
+    verdicts = {"admitted": 0, "coalesced": 0, "shed": 0, "quota": 0}
+    shed_by_class = {"interactive": 0, "batch": 0}
+    offered_by_class = {"interactive": 0, "batch": 0}
+    lats, errors = [], 0
+    for i, (t, item) in enumerate(zip(tickets, work)):
+        priority = item[5]
+        offered_by_class[priority] += 1
+        verdicts[t.status] += 1
+        if not t.admitted:
+            shed_by_class[priority] += 1
+        elif t.future.cancelled() or t.future.exception() is not None:
+            errors += 1
+        else:
+            lats.append(t_done[i] - t0s[i])
+    lats.sort()
+
+    def pct(p: float) -> float:
+        return lats[min(int(p * len(lats)), len(lats) - 1)] if lats else 0.0
+
+    return {
+        "offered_qps": len(work) / t_submit,
+        "sustained_qps": len(lats) / t_total,
+        "p50_s": pct(0.50), "p99_s": pct(0.99),
+        "completed": len(lats), "errors": errors,
+        "verdicts": verdicts, "shed_by_class": shed_by_class,
+        "offered_by_class": offered_by_class,
+    }
+
+
+def _cell_row(name: str, res: dict) -> dict:
+    v, s = res["verdicts"], res["shed_by_class"]
+    return {"name": name, "us": res["p50_s"] * 1e6,
+            "derived": f"offered_qps={res['offered_qps']:.0f};"
+                       f"sustained_qps={res['sustained_qps']:.0f};"
+                       f"p99_us={res['p99_s'] * 1e6:.0f};"
+                       f"coalesced={v['coalesced']};shed={v['shed']};"
+                       f"quota={v['quota']};"
+                       f"shed_interactive={s['interactive']};"
+                       f"shed_batch={s['batch']};errors={res['errors']}"}
+
+
+def run(args) -> list[dict]:
+    svc, fe = _setup(args.tokens, deadline_ms=args.deadline_ms,
+                     queue_budget=args.queue_budget)
+    try:
+        work = _workload(svc, 4096)
+        cap = measure_capacity(fe, work, threads=args.threads,
+                               duration=args.duration)
+        print(f"# measured closed-loop capacity: {cap:.0f} qps "
+              f"({args.threads} workers)")
+        rows = [{"name": "frontend_capacity", "us": 1e6 / cap,
+                 "derived": f"qps={cap:.0f};threads={args.threads};"
+                            f"deadline_ms={args.deadline_ms};"
+                            f"queue_budget={args.queue_budget}"}]
+        under = open_loop(fe, work, rate=0.6 * cap, duration=args.duration)
+        rows.append(_cell_row("frontend_openloop_0.6x", under))
+        over = open_loop(fe, work, rate=2.5 * cap, duration=args.duration)
+        rows.append(_cell_row("frontend_openloop_2.5x", over))
+        assert over["errors"] == 0 and under["errors"] == 0
+    finally:
+        fe.close()
+
+    # the overload/shed contract runs against a small-bucket frontend so the
+    # drain rate sits well below a tight submit loop's offered rate: queue
+    # depth crosses the soft budget (batch sheds) and the hard limit
+    # (everything sheds) inside the burst window
+    from repro.serve.admission import AdmissionController
+    from repro.serve.frontend import QueryFrontend
+    fe2 = QueryFrontend(svc, admission=AdmissionController(
+        queue_budget=args.queue_budget), buckets=(16,),
+        deadline_s=args.deadline_ms / 1e3)
+    try:
+        cold = _cold_topk_work(svc, 4000)
+        for item in cold[:32]:                     # compile + warm
+            _call(fe2, item)
+        burst = burst_cell(fe2, cold)
+        rows.append(_cell_row("frontend_burst_coldtopk", burst))
+        v, s, o = (burst["verdicts"], burst["shed_by_class"],
+                   burst["offered_by_class"])
+        shed_frac = v["shed"] / max(sum(v.values()), 1)
+        drain = burst["sustained_qps"]
+        p99_bound = 4 * (fe2.admission.hard_limit / max(drain, 1.0)
+                         + args.deadline_ms / 1e3)
+        shed_rate = {c: s[c] / max(o[c], 1) for c in s}
+        print(f"# burst: offered {burst['offered_qps']:.0f} qps vs drain "
+              f"{drain:.0f} qps -> shed {100 * shed_frac:.1f}% "
+              f"(interactive {100 * shed_rate['interactive']:.0f}%, "
+              f"batch {100 * shed_rate['batch']:.0f}%), admitted p99 "
+              f"{burst['p99_s'] * 1e3:.1f}ms (bound {p99_bound * 1e3:.0f}ms)")
+        assert shed_frac > 0.05, \
+            f"burst shed only {100 * shed_frac:.1f}%: admission not engaging"
+        assert shed_rate["batch"] >= shed_rate["interactive"], \
+            "batch class must shed before interactive (soft budget)"
+        assert burst["p99_s"] <= p99_bound, \
+            f"admitted p99 {burst['p99_s']:.3f}s exceeds {p99_bound:.3f}s: " \
+            "latency collapsed instead of shedding"
+        assert burst["errors"] == 0
+        return rows
+    finally:
+        fe2.close()
+
+
+def run_smoke(metrics_path: str | None) -> None:
+    """CI mode: in-process HTTP server + concurrent localhost clients.
+
+    Exercises the full stack (HTTP -> admission -> batcher -> service) with
+    real concurrency, then exports the metrics registry to JSONL for
+    ``repro.obs.report --validate-metrics``.
+    """
+    import http.client
+
+    from repro.obs import report as obs_report
+    from repro.serve.http import serve_http
+
+    finish = obs_report.setup(None, metrics_path)
+    svc, fe = _setup(8000, deadline_ms=2.0, queue_budget=64, sigma=3, tau=2)
+    srv = serve_http(fe, "127.0.0.1", 0, block=False)
+    host, port = srv.server_address
+    work = _workload(svc, 256, k=4)
+    codes: dict[int, int] = {}
+    lock = threading.Lock()
+
+    def client(w: int) -> None:
+        conn = http.client.HTTPConnection(host, port, timeout=30)
+        try:
+            for i in range(w, len(work), 4):
+                kind, row, ln, k, tenant, priority = work[i]
+                if kind == "topk":
+                    path, body = "/v1/topk", {"prefix": row[:ln].tolist(),
+                                              "k": k}
+                else:
+                    path, body = "/v1/lookup", {"gram": row[:ln].tolist()}
+                conn.request("POST", path, body=json.dumps(body),
+                             headers={"Content-Type": "application/json",
+                                      "X-Tenant": tenant,
+                                      "X-Priority": priority})
+                r = conn.getresponse()
+                r.read()
+                with lock:
+                    codes[r.status] = codes.get(r.status, 0) + 1
+        finally:
+            conn.close()
+
+    ts = [threading.Thread(target=client, args=(w,)) for w in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    srv.shutdown()
+    srv.server_close()
+    fe.close()
+    print(f"# smoke: {sum(codes.values())} HTTP requests, codes {codes}")
+    assert codes.get(200, 0) == len(work), f"non-200s in smoke: {codes}"
+    finish({"driver": "benchmarks.frontend", "mode": "smoke",
+            "http_codes": {str(c): n for c, n in codes.items()}})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=60_000)
+    ap.add_argument("--threads", type=int, default=8,
+                    help="closed-loop workers for the capacity measurement")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="seconds per cell (capacity + each open-loop cell)")
+    ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--queue-budget", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny corpus, HTTP clients over localhost, "
+                         "no BENCH write")
+    ap.add_argument("--metrics", default=None,
+                    help="with --smoke: metrics JSONL export path")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.metrics)
+        return
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import report as obs_report
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.set_registry(reg)
+    rows = run(args)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    record = {"tokens": args.tokens, "threads": args.threads,
+              "duration": args.duration, "deadline_ms": args.deadline_ms,
+              "queue_budget": args.queue_budget,
+              "env": obs_report.environment_metadata(),
+              "metrics": reg.snapshot(), "rows": rows}
+    runs = []
+    try:
+        with open(BENCH_JSON) as f:
+            prev = json.load(f)
+        runs = prev["runs"] if "runs" in prev else [prev]
+    except (FileNotFoundError, json.JSONDecodeError, KeyError):
+        pass
+    runs.append(record)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"runs": runs}, f, indent=2)
+    print(f"# wrote {len(rows)} rows to {BENCH_JSON} "
+          f"(run {len(runs)} in history)")
+
+
+if __name__ == "__main__":
+    main()

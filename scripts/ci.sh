@@ -55,6 +55,18 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report \
     --validate-trace "$OBS_TMP/trace.json" \
     --validate-metrics "$OBS_TMP/metrics.jsonl"
 
+# Serving-frontend smoke: start the HTTP server on an ephemeral port, drive
+# the mixed workload from concurrent localhost clients (every request must
+# come back 200), then validate the exported frontend metrics (queue-depth
+# gauge, batch-fill / TTFB histograms, shed/coalesced counters) against the
+# metrics schema.
+echo "frontend smoke: HTTP serving stack + metrics validation"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 240 \
+    python benchmarks/frontend.py --smoke \
+    --metrics "$OBS_TMP/frontend_metrics.jsonl" > /dev/null
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.report \
+    --validate-metrics "$OBS_TMP/frontend_metrics.jsonl"
+
 # Wave-engine perf smoke: the fused out-of-core loop must stay within a
 # generous multiple of the monolithic job (the tracked target is ~1.5x at
 # 8 waves on the full corpus; 3.0x here absorbs CI host noise at the

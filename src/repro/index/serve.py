@@ -204,6 +204,56 @@ def shard_generational(gen: GenerationalIndex, *, mesh, axis_name: str = "data",
                                     layout=layout)
 
 
+def describe_topology(index_like) -> dict:
+    """JSON-able shard/segment map -- the frontend's ``/v1/system/topology``.
+
+    Accepts any serving-side index shape and reports how queries route to
+    data: the generational segment stack (newest first, with stable level
+    ids so clients can diff generations), and for sharded layouts the mesh
+    partitioning -- every query's answer lives on shard
+    ``hash_u32(lead_term) % n_parts``, the job shuffle's own partitioner, so
+    publishing ``n_parts`` + the partitioner name is a complete routing
+    contract for an external router.
+    """
+    if isinstance(index_like, ShardedGenerationalIndex):
+        return {
+            "kind": "sharded_generational",
+            "generation": int(index_like.generation),
+            "n_parts": int(index_like.n_parts),
+            "axis": index_like.axis_name,
+            "partitioner": "hash_u32(lead_term) % n_parts",
+            "nbytes": int(index_like.nbytes),
+            "segments": [{"level_id": int(lid),
+                          "nbytes": int(sh.index.nbytes)}
+                         for lid, sh in zip(index_like.level_ids,
+                                            index_like.shards)],
+        }
+    if isinstance(index_like, ShardedNGramIndex):
+        return {
+            "kind": "sharded",
+            "n_parts": int(index_like.n_parts),
+            "axis": index_like.axis_name,
+            "partitioner": "hash_u32(lead_term) % n_parts",
+            "nbytes": int(index_like.index.nbytes),
+        }
+    if isinstance(index_like, GenerationalIndex):
+        return {
+            "kind": "generational",
+            "generation": int(index_like.generation),
+            "n_segments": int(index_like.n_segments),
+            "n_rows": int(index_like.n_rows),
+            "nbytes": int(index_like.nbytes),
+            "compress": bool(index_like.compress),
+            "segments": [{"level_id": int(lid), "rows": int(ix.n_rows),
+                          "nbytes": int(ix.nbytes)}
+                         for lid, ix in zip(index_like.level_ids,
+                                            index_like.segments)],
+        }
+    # single frozen index (flat or compressed): one segment, no routing
+    return {"kind": "index", "rows": int(index_like.n_rows),
+            "nbytes": int(index_like.nbytes)}
+
+
 def result_width(mode: str, k: int) -> int:
     """uint32 result lanes per query: cf, or n_distinct|total|terms[k]|counts[k]."""
     return 1 if mode == "lookup" else 2 + 2 * k

@@ -18,12 +18,41 @@ phases into a fresh L0 segment of a :class:`~repro.index.merge.GenerationalIndex
 swaps through an LRU result cache plus double-buffered dispatch (submit batch
 i+1 before materializing batch i -- jax's async dispatch does the overlap, no
 ``block_until_ready`` on the hot path).
+
+``--serve HOST:PORT`` turns the process into the production frontend
+(``repro.serve``): the corpus is ingested once, then the HTTP/SSE service
+answers point-lookup / top-k / streaming-completion requests through the
+continuous batcher and admission layer until interrupted.
+
+This module is a thin argument-parsing shell: the serving tier itself lives in
+``repro.serve`` (service, cache, batcher, admission, HTTP transport).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from collections import OrderedDict
+
+_REEXPORTS = {
+    # The serving tier moved to repro.serve (PR 10); these lazy re-exports
+    # (PEP 562) keep every existing `from repro.launch.serve_ngrams import X`
+    # working without importing jax-touching modules at module scope -- main()
+    # must be able to set the --devices XLA flag before backend init.  Same
+    # pattern as the PR-5 DoubleBufferedDriver move.
+    "LRUQueryCache": ("repro.serve.cache", "LRUQueryCache"),
+    "StreamingNGramService": ("repro.serve.service", "StreamingNGramService"),
+    "microbatch_drive": ("repro.serve.service", "microbatch_drive"),
+    "make_query_stream": ("repro.serve.service", "make_query_stream"),
+    "DoubleBufferedDriver": ("repro.pipeline.executor", "DoubleBufferedDriver"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _REEXPORTS[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
 
 
 def _percentiles(lat_s: list[float]) -> str:
@@ -33,353 +62,12 @@ def _percentiles(lat_s: list[float]) -> str:
             f"max={a.max():.2f}ms")
 
 
-def make_query_stream(stats, *, n_queries: int, sigma: int, vocab_size: int,
-                      miss_frac: float, seed: int = 0):
-    """(grams [N, sigma], lengths [N]): sampled index rows + uniform-random misses.
-
-    Hits are drawn cf-weighted (hot grams are queried more -- the serving-load
-    analogue of the corpus Zipf skew the shuffle partitioner absorbs)."""
-    import numpy as np
-    rng = np.random.default_rng(seed)
-    grams = np.zeros((n_queries, sigma), np.int32)
-    lengths = np.zeros((n_queries,), np.int32)
-    n_rows = len(stats)
-    is_miss = rng.random(n_queries) < miss_frac
-    if n_rows:
-        p = np.asarray(stats.counts, np.float64)
-        p = p / p.sum()
-        rows = rng.choice(n_rows, size=n_queries, p=p)
-        grams = np.asarray(stats.grams)[rows].astype(np.int32)
-        lengths = np.asarray(stats.lengths)[rows].astype(np.int32)
-    miss_len = rng.integers(1, sigma + 1, n_queries).astype(np.int32)
-    miss_g = rng.integers(1, vocab_size + 1, (n_queries, sigma)).astype(np.int32)
-    miss_g *= np.arange(sigma)[None, :] < miss_len[:, None]
-    grams = np.where(is_miss[:, None], miss_g, grams)
-    lengths = np.where(is_miss, miss_len, lengths)
-    return grams, lengths
-
-
-class LRUQueryCache:
-    """Host-side LRU of hot query results, keyed by (kind, gram bytes).
-
-    Entries are tagged with the index ``generation`` they were computed
-    against; a lookup under a newer generation drops the whole cache (segment
-    swaps change answers wholesale, and a stale count is worse than a miss).
-    Accesses tagged with an *older* generation -- an in-flight double-buffered
-    batch collected after an ingest bumped the index -- are discarded, never
-    installed: they must not roll the cache back to serving stale counts.
-    """
-
-    def __init__(self, capacity: int = 65536):
-        if capacity < 1:
-            raise ValueError("capacity must be >= 1")
-        self.capacity = capacity
-        self.generation = -1
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self._d: OrderedDict = OrderedDict()
-
-    def _sync(self, generation: int) -> bool:
-        """Advance to ``generation`` if newer; False iff the caller is stale."""
-        if generation > self.generation:
-            self._d.clear()
-            self.generation = generation
-        return generation == self.generation
-
-    def get(self, key, generation: int):
-        if not self._sync(generation):
-            self.misses += 1               # stale reader: always a miss
-            return None
-        v = self._d.get(key)
-        if v is None:
-            self.misses += 1
-            return None
-        self._d.move_to_end(key)
-        self.hits += 1
-        return v
-
-    def put(self, key, generation: int, value) -> None:
-        if not self._sync(generation):
-            return                         # stale result: drop, don't install
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
-            self.evictions += 1
-
-    def __len__(self) -> int:
-        return len(self._d)
-
-    @property
-    def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
-
-    def snapshot(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "entries": len(self._d),
-                "generation": self.generation, "hit_rate": self.hit_rate}
-
-    def publish_metrics(self, reg=None) -> None:
-        """Mirror lifetime cache stats into the active metrics registry."""
-        if reg is None:
-            from repro.obs import metrics as obs_metrics
-            reg = obs_metrics.get_registry()
-        if not reg:
-            return
-        for k in ("hits", "misses", "evictions"):
-            c = reg.counter("cache." + k)
-            c.add(getattr(self, k) - c.value)     # lifetime mirror, not +=
-        reg.gauge("cache.entries").set(len(self._d))
-        reg.gauge("cache.hit_rate").set(self.hit_rate)
-
-
-def __getattr__(name):
-    # The submit/collect overlap driver now lives with the wave engine (its
-    # other consumer: double-buffered wave ingest).  The re-export for
-    # existing users is lazy (PEP 562): importing repro.pipeline at module
-    # scope would pull in jnp constants and initialize the jax backend before
-    # main() can set the --devices XLA flag.
-    if name == "DoubleBufferedDriver":
-        from repro.pipeline.executor import DoubleBufferedDriver
-        return DoubleBufferedDriver
-    raise AttributeError(name)
-
-
-class StreamingNGramService:
-    """Generational index + query cache behind a batch lookup/completion API.
-
-    ``ingest`` streams new document tokens through the ordinary SUFFIX-sigma
-    job phases into a fresh L0 segment (``GenerationalIndex.ingest`` handles
-    the size-tiered merges); queries between swaps hit the LRU cache first and
-    only the residual miss rows go to the device, padded to a power-of-two
-    sub-batch so the compiled-program cache stays small.
-    """
-
-    def __init__(self, cfg, *, compress: bool = False, block_size: int = 4,
-                 use_kernels: bool = False, cache_capacity: int = 65536,
-                 size_ratio: int = 4, route: str = "kway",
-                 wave_tokens: int | None = None, mesh=None,
-                 axis_name: str = "data", overlap: bool = True):
-        from repro.index import GenerationalIndex
-        self.cfg = cfg
-        self.use_kernels = use_kernels
-        self.wave_tokens = wave_tokens
-        self.mesh = mesh
-        self.axis_name = axis_name
-        self.overlap = overlap
-        self.gen = GenerationalIndex(
-            sigma=cfg.sigma, vocab_size=cfg.vocab_size, compress=compress,
-            block_size=block_size, size_ratio=size_ratio, route=route,
-            use_kernels=use_kernels)
-        self.cache = LRUQueryCache(cache_capacity)
-        self._wave_ex = None
-
-    def ingest(self, tokens) -> dict:
-        """Run the job phases over a token delta and swap the new L0 in.
-
-        With ``wave_tokens`` set, the delta streams through the wave engine
-        (``repro.pipeline.WaveExecutor``) instead of one monolithic job: the
-        device only ever holds one wave of job state, so a delta (or an
-        initial corpus) larger than device memory ingests end to end.  A
-        ``mesh`` shards the work over its devices -- each wave's stage
-        pipeline when waves are on, the ordinary distributed job otherwise.
-        The resulting stats are bit-identical every way.
-        """
-        from repro.obs import metrics as obs_metrics
-        from repro.obs import trace as obs_trace
-        with obs_trace.span("svc.ingest") as sp:
-            t0 = time.perf_counter()
-            if self.wave_tokens is not None:
-                if self._wave_ex is None:  # reuse: compiled programs carry over
-                    from repro.pipeline import WaveExecutor
-                    self._wave_ex = WaveExecutor(self.cfg,
-                                                 wave_tokens=self.wave_tokens,
-                                                 mesh=self.mesh,
-                                                 axis_name=self.axis_name,
-                                                 overlap=self.overlap)
-                stats = self._wave_ex.run(tokens)
-            else:
-                from repro.core import run_job
-                stats = run_job(tokens, self.cfg, mesh=self.mesh,
-                                axis_name=self.axis_name)
-            t_job = time.perf_counter() - t0
-            obs_metrics.get_registry().merge_job_counters(stats.counters)
-            t0 = time.perf_counter()
-            report = self.gen.ingest(stats)
-            report.update(job_s=t_job, ingest_s=time.perf_counter() - t0,
-                          segments=self.gen.n_segments,
-                          waves=stats.counters.get("waves", 1))
-            if sp:
-                sp.set(tokens=len(tokens), rows=report.get("ingested_rows"),
-                       waves=report["waves"])
-        return report
-
-    def _submit_lookup(self, grams, lengths) -> dict:
-        """Cache consult + async device dispatch of the miss rows.
-
-        The returned record holds the *unmaterialized* device result; pairing
-        ``_submit_lookup`` of batch i+1 with ``_collect_lookup`` of batch i is
-        the double-buffered hot path (cache fill rides the collect side, one
-        batch behind the device)."""
-        import numpy as np
-        g = np.asarray(grams, np.int32)
-        ln = np.asarray(lengths, np.int32)
-        gen_id = self.gen.generation
-        out = np.zeros((g.shape[0],), np.uint32)
-        miss = []
-        keys = []
-        for i in range(g.shape[0]):
-            key = (int(ln[i]), g[i, :max(int(ln[i]), 0)].tobytes())
-            v = self.cache.get(key, gen_id)
-            if v is None:
-                miss.append(i)
-                keys.append(key)
-            else:
-                out[i] = v
-        dev, pad = None, 0
-        if miss:
-            from repro.index.query import lookup_deferred
-            m = len(miss)
-            pad = max(1 << (m - 1).bit_length(), 16)
-            mg = np.zeros((pad, g.shape[1]), np.int32)
-            mln = np.zeros((pad,), np.int32)
-            mg[:m] = g[miss]
-            mln[:m] = ln[miss]
-            # per-segment deferred dispatches: nothing is materialized here,
-            # even with several live generations
-            dev = lookup_deferred(self.gen, mg, mln,
-                                  use_kernels=self.use_kernels)
-        return {"out": out, "miss": miss, "keys": keys, "dev": dev,
-                "pad": pad, "gen": gen_id}
-
-    def _collect_lookup(self, rec: dict):
-        if rec["dev"] is not None:
-            from repro.index.query import collect_lookup
-            cf = collect_lookup(rec["dev"], rec["pad"])[:len(rec["miss"])]
-            rec["out"][rec["miss"]] = cf
-            for key, v in zip(rec["keys"], cf):
-                self.cache.put(key, rec["gen"], int(v))
-        return rec["out"]
-
-    def lookup(self, grams, lengths):
-        """Point counts [B] uint32; cache hits never touch the device."""
-        return self._collect_lookup(self._submit_lookup(grams, lengths))
-
-    def lookup_pipelined(self, batches) -> list:
-        """Drive (grams, lengths) batches double-buffered: batch i+1 is
-        dispatched before batch i's device result is materialized, so host
-        batching/cache work overlaps device execution with no
-        ``block_until_ready`` anywhere."""
-        from repro.obs import metrics as obs_metrics
-        from repro.obs import trace as obs_trace
-        from repro.pipeline.executor import DoubleBufferedDriver
-        drv = DoubleBufferedDriver(self._submit_lookup,
-                                   collect=self._collect_lookup)
-        reg = obs_metrics.get_registry()
-        inflight = reg.gauge("serve.inflight")
-        results: list = []
-        with obs_trace.span("serve.pipelined") as sp:
-            for g, ln in batches:
-                inflight.add(1)               # one submitted, maybe one live
-                res, _ = drv.submit(g, ln)
-                if res is not None:
-                    inflight.add(-1)
-                    results.append(res)
-            res, _ = drv.drain()
-            inflight.set(0)
-            if res is not None:
-                results.append(res)
-            if sp:
-                sp.set(batches=len(batches))
-        return results
-
-    def continuations(self, prefixes, p_len, *, k: int = 8):
-        """Top-k completion rows [B, 2+2k] uint32 (nd | total | terms | cfs)."""
-        import numpy as np
-        from repro.index import continuations as idx_cont
-        pg = np.asarray(prefixes, np.int32)
-        pl = np.asarray(p_len, np.int32)
-        gen_id = self.gen.generation
-        out = np.zeros((pg.shape[0], 2 + 2 * k), np.uint32)
-        miss = []
-        for i in range(pg.shape[0]):
-            key = ("c", k, int(pl[i]), pg[i, :max(int(pl[i]), 0)].tobytes())
-            v = self.cache.get(key, gen_id)
-            if v is None:
-                miss.append(i)
-            else:
-                out[i] = v
-        if miss:
-            m = len(miss)
-            pad = max(1 << (m - 1).bit_length(), 16)
-            mg = np.zeros((pad, pg.shape[1]), np.int32)
-            mln = np.zeros((pad,), np.int32)
-            mg[:m] = pg[miss]
-            mln[:m] = pl[miss]
-            nd, tot, terms, cfs = [np.asarray(x) for x in idx_cont(
-                self.gen, mg, mln, k=k, use_kernels=self.use_kernels)]
-            rows = np.concatenate([nd[:m, None], tot[:m, None], terms[:m],
-                                   cfs[:m]], axis=1).astype(np.uint32)
-            out[miss] = rows
-            for j, i in enumerate(miss):
-                key = ("c", k, int(pl[i]), pg[i, :max(int(pl[i]), 0)].tobytes())
-                self.cache.put(key, gen_id, rows[j])
-        return out
-
-
-def microbatch_drive(answer, grams, lengths, batch: int, *, warmup: int = 2,
-                     hist_name: str = "drive.batch_seconds"):
-    """Feed the stream through ``answer`` in fixed micro-batches; (qps, lat[s]).
-
-    Timed batches also land in the ``hist_name`` registry histogram, so the
-    p50/p95/p99 the production frontend needs come out of the metrics export
-    as well as the returned sample list.
-    """
-    import numpy as np
-    from repro.obs import metrics as obs_metrics
-    from repro.obs import trace as obs_trace
-    n = grams.shape[0]
-    n_batches = -(-n // batch)
-    pad = n_batches * batch - n
-    g = np.pad(grams, ((0, pad), (0, 0)))
-    ln = np.pad(lengths, (0, pad))
-    for i in range(min(warmup, n_batches)):      # compile + cache warm
-        answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
-    hist = obs_metrics.get_registry().histogram(hist_name)
-    lat = []
-    with obs_trace.span("serve.drive") as sp:
-        t_all = time.perf_counter()
-        for i in range(n_batches):
-            t0 = time.perf_counter()
-            answer(g[i * batch:(i + 1) * batch], ln[i * batch:(i + 1) * batch])
-            dt = time.perf_counter() - t0
-            lat.append(dt)
-            hist.observe(dt)
-        qps = n / (time.perf_counter() - t_all)
-        if sp:
-            sp.set(batch=batch, n_batches=n_batches, qps=int(qps))
-    return qps, lat
-
-
-def run_streaming(args) -> None:
-    """Generational serving loop: base build, then ingest/query interleave.
-
-    ``--devices N`` (with ``--wave-tokens``) runs every ingest wave's stage
-    pipeline sharded over an N-way host mesh -- the distributed-waves path;
-    queries stay on the generational single-device fold.
-    """
-    import numpy as np
+def _build_streaming_service(args, mesh=None):
+    """Corpus + config + service, shared by --streaming and --serve."""
     from repro.core.stats import NGramConfig
     from repro.data import corpus as corpus_mod
-    from repro.index.merge import segment_to_stats
-    from repro.obs import metrics as obs_metrics
+    from repro.serve.service import StreamingNGramService
 
-    mesh = None
-    if args.devices > 1:
-        from repro.launch.mesh import make_data_mesh
-        mesh = make_data_mesh(args.devices)
     prof = corpus_mod.PROFILES[args.profile]
     tokens = corpus_mod.zipf_corpus(args.tokens, prof, seed=0,
                                     duplicate_frac=0.02)
@@ -391,6 +79,50 @@ def run_streaming(args) -> None:
                                 cache_capacity=args.cache_capacity,
                                 wave_tokens=args.wave_tokens, mesh=mesh,
                                 overlap=not args.no_overlap)
+    return prof, tokens, svc
+
+
+def run_serve(args) -> None:
+    """Frontend mode: ingest once, then answer HTTP/SSE until interrupted."""
+    from repro.serve.admission import AdmissionController
+    from repro.serve.frontend import QueryFrontend
+    from repro.serve.http import serve_http
+
+    host, _, port = args.serve.rpartition(":")
+    if not host or not port.isdigit():
+        raise SystemExit(f"--serve wants HOST:PORT, got {args.serve!r}")
+    _, tokens, svc = _build_streaming_service(args)
+    rep = svc.ingest(tokens)
+    print(f"ingested {len(tokens)} tokens -> {rep['ingested_rows']} grams "
+          f"(job {rep['job_s']:.2f}s, freeze {rep['ingest_s']:.2f}s)")
+    admission = AdmissionController(
+        queue_budget=args.queue_budget,
+        quota_rate=args.quota_rate if args.quota_rate > 0 else None)
+    with QueryFrontend(svc, admission=admission,
+                       deadline_s=args.deadline_ms / 1e3) as fe:
+        print(f"serving on http://{host}:{port}  "
+              "(POST /v1/lookup /v1/topk /v1/complete; "
+              "GET /v1/system/topology /healthz)")
+        serve_http(fe, host, int(port), block=True)
+
+
+def run_streaming(args) -> None:
+    """Generational serving loop: base build, then ingest/query interleave.
+
+    ``--devices N`` (with ``--wave-tokens``) runs every ingest wave's stage
+    pipeline sharded over an N-way host mesh -- the distributed-waves path;
+    queries stay on the generational single-device fold.
+    """
+    import numpy as np
+    from repro.index.merge import segment_to_stats
+    from repro.obs import metrics as obs_metrics
+    from repro.serve.service import make_query_stream
+
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.devices)
+    prof, tokens, svc = _build_streaming_service(args, mesh=mesh)
     nb = max(args.ingest_batches, 1)
     base, rest = np.split(tokens, [int(len(tokens) * 0.6)])
     deltas = np.array_split(rest, nb)
@@ -466,6 +198,20 @@ def main() -> None:
                     help="generational driver: ingest the corpus in document "
                          "batches (LSM merges, no rebuilds) with cached, "
                          "double-buffered query serving between swaps")
+    ap.add_argument("--serve", default=None, metavar="HOST:PORT",
+                    help="frontend mode: ingest the corpus once, then run the "
+                         "HTTP/SSE service (repro.serve) with continuous "
+                         "batching and admission control until interrupted")
+    ap.add_argument("--deadline-ms", type=float, default=2.0,
+                    help="--serve: continuous-batcher flush deadline for a "
+                         "partially filled padding bucket")
+    ap.add_argument("--queue-budget", type=int, default=512,
+                    help="--serve: admission soft queue budget (beyond it "
+                         "only interactive-priority requests are admitted; "
+                         "4x is the hard shed limit)")
+    ap.add_argument("--quota-rate", type=float, default=0.0,
+                    help="--serve: per-tenant token-bucket refill in "
+                         "requests/s (0 disables tenant quotas)")
     ap.add_argument("--ingest-batches", type=int, default=4)
     ap.add_argument("--wave-tokens", type=int, default=None,
                     help="stream each ingest through the out-of-core wave "
@@ -492,6 +238,12 @@ def main() -> None:
         pin_host_device_count(args.devices)
     from repro.obs import report as obs_report
     finish_obs = obs_report.setup(args.trace, args.metrics)
+    if args.serve:
+        try:
+            run_serve(args)
+        finally:
+            finish_obs({"driver": "serve_ngrams", "mode": "serve"})
+        return
     if args.streaming:
         run_streaming(args)
         finish_obs({"driver": "serve_ngrams", "mode": "streaming"})
@@ -502,6 +254,7 @@ def main() -> None:
     from repro.core import run_job
     from repro.core.stats import NGramConfig
     from repro.data import corpus as corpus_mod
+    from repro.serve.service import make_query_stream, microbatch_drive
 
     prof = corpus_mod.PROFILES[args.profile]
     tokens = corpus_mod.zipf_corpus(args.tokens, prof, seed=0, duplicate_frac=0.02)

@@ -63,6 +63,26 @@ COUNTER_DOC: dict[str, str] = {
                  "accumulator -- the measured fold work (wave-only)",
     "phase_b_records": "SUFFIX-sigma phase-B survivor records (method-only)",
     "post_filter_jobs": "maximality/closedness post-filter jobs (method-only)",
+    # ---- serving-frontend instruments (repro.serve; registry names, not job
+    # counters -- they never ride NGramStats.counters or the merge policy).
+    # Companion histograms: frontend.batch_fill (live slots / padded bucket),
+    # frontend.ttfb_seconds (admission -> payload available); gauge:
+    # frontend.queue_depth.  Spans: serve.request (transport thread) and
+    # serve.flush (batcher thread) around the existing serve.batch device
+    # dispatch.
+    "frontend.requests": "queries offered to the frontend, pre-admission",
+    "frontend.shed": "requests rejected by queue-depth load shedding "
+                     "(HTTP 503): past the soft budget only the top "
+                     "priority class is admitted, past the hard limit "
+                     "nothing is",
+    "frontend.quota_rejected": "requests rejected by a tenant's token "
+                               "bucket (HTTP 429)",
+    "frontend.coalesced": "duplicate in-flight queries welded onto an "
+                          "already-admitted request's answer (same key as "
+                          "the LRU cache + index generation); they occupy "
+                          "no batch slot and pay no quota",
+    "frontend.batches": "device batches flushed by the continuous batcher "
+                        "(full bucket or deadline)",
 }
 
 #: Keys that fold by ``max`` across waves/jobs instead of summing: a ratio

@@ -1,0 +1,61 @@
+"""Serving frontend: the production query tier in front of the index.
+
+The stack, bottom-up (each layer usable on its own):
+
+  * :mod:`repro.serve.cache`     -- ``LRUQueryCache``: generation-keyed host
+    LRU of hot query results (moved out of ``launch/serve_ngrams.py``).
+  * :mod:`repro.serve.service`   -- ``StreamingNGramService``: generational
+    index + cache behind a batch lookup / top-k / ingest API, plus
+    ``microbatch_drive`` and ``make_query_stream`` (the synthetic-workload
+    helpers the drivers and benchmarks share).
+  * :mod:`repro.serve.batcher`   -- ``ContinuousBatcher``: queue-fed
+    coalescing of concurrent requests into fixed-shape device batches
+    (padding buckets, deadline-based flush, double-buffered submit/collect).
+  * :mod:`repro.serve.admission` -- priority classes, per-tenant token-bucket
+    quotas, queue-depth load shedding.
+  * :mod:`repro.serve.frontend`  -- ``QueryFrontend``: admission + in-flight
+    duplicate coalescing + batcher glued onto one service.
+  * :mod:`repro.serve.http`      -- stdlib HTTP/SSE transport
+    (point-lookup, top-k, streaming completion, topology/health).
+
+Everything re-exported here is lazy (PEP 562): importing ``repro.serve`` must
+not initialize the jax backend, so ``--devices`` drivers can set ``XLA_FLAGS``
+first -- the same contract ``launch/serve_ngrams.py`` keeps for its
+re-exports.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "LRUQueryCache", "StreamingNGramService", "microbatch_drive",
+    "make_query_stream", "ContinuousBatcher", "Request", "select_bucket",
+    "TokenBucket", "AdmissionController", "QueryFrontend",
+    "NGramHTTPServer", "serve_http",
+]
+
+_LAZY = {
+    "LRUQueryCache": ("repro.serve.cache", "LRUQueryCache"),
+    "StreamingNGramService": ("repro.serve.service", "StreamingNGramService"),
+    "microbatch_drive": ("repro.serve.service", "microbatch_drive"),
+    "make_query_stream": ("repro.serve.service", "make_query_stream"),
+    "ContinuousBatcher": ("repro.serve.batcher", "ContinuousBatcher"),
+    "Request": ("repro.serve.batcher", "Request"),
+    "select_bucket": ("repro.serve.batcher", "select_bucket"),
+    "TokenBucket": ("repro.serve.admission", "TokenBucket"),
+    "AdmissionController": ("repro.serve.admission", "AdmissionController"),
+    "QueryFrontend": ("repro.serve.frontend", "QueryFrontend"),
+    "NGramHTTPServer": ("repro.serve.http", "NGramHTTPServer"),
+    "serve_http": ("repro.serve.http", "serve_http"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(__all__)
